@@ -1,0 +1,67 @@
+"""Microbenchmarks for the Pallas kernels' oracles + plumbing.
+
+On this CPU container we time the XLA-compiled jnp oracles (the TPU-perf
+numbers come from the roofline, not wall clock) and run the interpret-mode
+kernels once to assert parity inside the benchmark harness itself.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def kernels():
+    from repro.kernels.ensemble_combine import ops as ec, ref as ecr
+    from repro.kernels.kernel_gram import ops as kg, ref as kgr
+    from repro.kernels.flash_attention import ops as fa
+    from repro.models.attention import sdpa
+
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    # ensemble combine: paper-scale K=22, clients-per-round batch
+    K, N = 22, 4096
+    preds = jax.random.normal(ks[0], (K, N))
+    logw = jax.random.normal(ks[1], (K,))
+    sel = jax.random.bernoulli(ks[2], 0.4, (K,)).at[0].set(True)
+    ref_fn = jax.jit(ecr.ensemble_combine_ref)
+    us = _time(ref_fn, preds, logw, sel)
+    pall = ec.ensemble_combine(preds, logw, sel)
+    err = float(jnp.abs(pall - ref_fn(preds, logw, sel)).max())
+    rows.append(("kernel/ensemble_combine/ref_xla", us, f"err={err:.1e}"))
+
+    # kernel gram: Energy-scale anchors
+    N, M, d = 2048, 1973, 27
+    x = jax.random.normal(ks[3], (N, d))
+    a = jax.random.normal(ks[4], (M, d))
+    al = jax.random.normal(ks[5], (M,)) * 0.1
+    for kind, param in (("gaussian", 1.0), ("sigmoid", 0.1)):
+        f = jax.jit(lambda x, a, al, kind=kind, param=param:
+                    kgr.kernel_predict_ref(kind, param, x, a, al))
+        us = _time(f, x, a, al)
+        flops = 2 * N * M * d
+        rows.append((f"kernel/gram_{kind}/ref_xla", us,
+                     f"{flops/us/1e3:.2f}GFLOP/s"))
+
+    # flash attention: one 4k head block
+    q = jax.random.normal(ks[6], (1, 4096, 4, 64), jnp.float32)
+    kv = jax.random.normal(ks[7], (1, 4096, 2, 64), jnp.float32)
+    f = jax.jit(lambda q, k, v: sdpa(q, k, v, causal=True))
+    us = _time(f, q, kv, kv, iters=3)
+    rows.append(("kernel/flash_attention/ref_xla", us,
+                 f"{2*2*4096*4096*4*64/us/1e3:.1f}GFLOP/s"))
+    return rows

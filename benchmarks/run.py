@@ -1,0 +1,35 @@
+"""Benchmark harness: one function per paper table/figure + kernels +
+roofline.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run           # full (paper rounds)
+    BENCH_FAST=1 PYTHONPATH=src python -m benchmarks.run   # CI-speed
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    fast = bool(int(os.environ.get("BENCH_FAST", "0")))
+    from benchmarks import paper_tables, kernel_bench, roofline, placement
+
+    rows = []
+    rows += paper_tables.table1(fast=fast)
+    rows += paper_tables.fig1(fast=fast)
+    rows += paper_tables.regret(fast=fast)
+    rows += placement.placement(fast=fast)
+    rows += kernel_bench.kernels()
+    rows += roofline.roofline("pod")
+    rows += roofline.roofline("multipod")
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us if isinstance(us, str) else f'{us:.1f}'},{derived}")
+
+
+if __name__ == "__main__":
+    main()

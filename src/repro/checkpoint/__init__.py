@@ -1,0 +1,5 @@
+"""Checkpointing: pytree save/restore (npz payload + json manifest)."""
+
+from .ckpt import save_checkpoint, restore_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

@@ -1,0 +1,15 @@
+"""Architecture configs.  Importing this package registers every assigned
+architecture in the model registry (repro.models.get_config)."""
+
+from . import (minicpm_2b, phi_3_vision_4_2b, jamba_1_5_large_398b,
+               qwen3_1_7b, qwen3_4b, mamba2_370m, deepseek_coder_33b,
+               whisper_tiny, mixtral_8x22b, deepseek_v2_236b)
+from .paper_efl import CONFIG as PAPER_EFL
+
+ASSIGNED = [
+    "minicpm-2b", "phi-3-vision-4.2b", "jamba-1.5-large-398b",
+    "qwen3-1.7b", "qwen3-4b", "mamba2-370m", "deepseek-coder-33b",
+    "whisper-tiny", "mixtral-8x22b", "deepseek-v2-236b",
+]
+
+__all__ = ["ASSIGNED", "PAPER_EFL"]

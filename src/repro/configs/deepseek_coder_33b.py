@@ -1,0 +1,18 @@
+"""deepseek-coder-33b [dense] — 62L d_model=7168 56H (GQA kv=8)
+d_ff=19200 vocab=32256, llama-arch.  [arXiv:2401.14196]"""
+
+from repro.models.config import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,                 # 7168 / 56
+    d_ff=19200,
+    vocab_size=32256,
+    long_context_window=8192,
+    source="arXiv:2401.14196",
+))

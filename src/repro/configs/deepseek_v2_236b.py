@@ -1,0 +1,33 @@
+"""deepseek-v2-236b [moe] — 60L d_model=5120 128H (MLA) per-expert
+d_ff=1536, vocab=102400, MLA kv_lora=512, 2 shared + 160 routed experts
+top-6, first layer dense.  [arXiv:2405.04434]
+
+The assignment table's d_ff=1536 is the per-(routed)-expert FFN width;
+the single leading dense layer uses the model's dense width 12288
+(= 8 x 1536, per the DeepSeek-V2 reference implementation).
+"""
+
+from repro.models.config import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,               # MLA: all heads share the latent cache
+    d_ff=12288,                   # dense first layer
+    vocab_size=102400,
+    use_mla=True,
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    n_experts=160,
+    n_shared_experts=2,
+    top_k=6,
+    moe_d_ff=1536,
+    first_dense=1,
+    source="arXiv:2405.04434",
+))

@@ -1,0 +1,32 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576 vocab=65536, MoE 16 experts top-2, Mamba+attention 1:7
+interleave (1 attention layer per 8; MoE on every other layer).
+[arXiv:2403.19887]
+
+Adaptation note (DESIGN.md §4): Jamba's original recurrent sublayer is
+Mamba-1 (state 16); our SSM substrate is the Mamba-2 SSD form (state 128)
+— the TPU-native chunked-scan formulation.  Parameter count stays ~398B.
+"""
+
+from repro.models.config import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    n_experts=16,
+    top_k=2,
+    moe_d_ff=24576,
+    moe_every=2,
+    moe_offset=1,                 # MoE on odd sub-layers of each block
+    attn_period=8,                # 1 attn + 7 mamba per super-block
+    ssm_state=128,
+    ssm_head_dim=64,
+    source="arXiv:2403.19887",
+))

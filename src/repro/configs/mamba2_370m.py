@@ -1,0 +1,20 @@
+"""mamba2-370m [ssm] — 48L d_model=1024 (attention-free) vocab=50280,
+ssm_state=128, SSD (state-space duality).  [arXiv:2405.21060]"""
+
+from repro.models.config import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mamba2-370m",
+    family="ssm",
+    n_layers=48,
+    d_model=1024,
+    n_heads=1,                    # unused (attention-free)
+    n_kv_heads=1,
+    d_ff=0,                       # mamba blocks have no separate FFN
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_head_dim=64,              # d_inner 2048 -> 32 SSD heads
+    ssm_expand=2,
+    tie_embeddings=True,
+    source="arXiv:2405.21060",
+))

@@ -1,0 +1,20 @@
+"""minicpm-2b [dense] — 40L d_model=2304 36H (GQA kv=36, i.e. MHA)
+d_ff=5760 vocab=122753, WSD schedule, llama-like.  [arXiv:2404.06395]"""
+
+from repro.models.config import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="minicpm-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    head_dim=64,                  # 2304 / 36
+    d_ff=5760,
+    vocab_size=122753,
+    tie_embeddings=True,          # MiniCPM ties input/output embeddings
+    schedule="wsd",               # warmup-stable-decay (the paper's headline)
+    long_context_window=8192,     # beyond-paper sliding variant for long_500k
+    source="arXiv:2404.06395",
+))

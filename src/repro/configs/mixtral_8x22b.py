@@ -1,0 +1,21 @@
+"""mixtral-8x22b [moe] — 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, 8 experts top-2, sliding-window attention.  [arXiv:2401.04088]"""
+
+from repro.models.config import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=32768,
+    n_experts=8,
+    top_k=2,
+    moe_d_ff=16384,
+    sliding_window=4096,          # SWA — long_500k runs natively
+    source="arXiv:2401.04088",
+))

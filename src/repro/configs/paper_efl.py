@@ -1,0 +1,23 @@
+"""The paper's own experimental configuration (§IV): 22-expert pool,
+100 clients, budget B=3, eta = xi = 1/sqrt(T)."""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class PaperEFLConfig:
+    n_clients: int = 100
+    budget: float = 3.0
+    clients_per_round: int = 5
+    pretrain_frac: float = 0.10
+    loss_scale: float = 4.0       # (a2) normalization (DESIGN.md §4)
+    datasets: tuple = ("bias", "ccpp", "energy")
+    rounds: dict = None
+
+    def __post_init__(self):
+        if self.rounds is None:
+            object.__setattr__(self, "rounds",
+                               {"bias": 1200, "ccpp": 1500, "energy": 3000})
+
+
+CONFIG = PaperEFLConfig()

@@ -1,0 +1,21 @@
+"""phi-3-vision-4.2b [vlm] — 32L d_model=3072 32H (GQA kv=32) d_ff=8192
+vocab=32064; phi3-mini text backbone + CLIP vision frontend (STUB: the
+model consumes precomputed patch embeddings; see DESIGN.md carve-out).
+[hf:microsoft/Phi-3-vision-128k-instruct]"""
+
+from repro.models.config import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=96,                  # 3072 / 32
+    d_ff=8192,
+    vocab_size=32064,
+    n_patches=576,                # CLIP ViT-L/14 @ 336px -> 24x24 patches
+    long_context_window=8192,     # blocksparse-ish long-context fallback
+    source="hf:microsoft/Phi-3-vision-128k-instruct",
+))

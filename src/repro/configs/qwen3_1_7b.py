@@ -1,0 +1,21 @@
+"""qwen3-1.7b [dense] — 28L d_model=2048 16H (GQA kv=8) d_ff=6144
+vocab=151936, qk_norm.  [hf:Qwen/Qwen3-8B]"""
+
+from repro.models.config import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,                 # qwen3 uses head_dim 128 (decoupled from d_model)
+    d_ff=6144,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    long_context_window=8192,
+    source="hf:Qwen/Qwen3-8B",
+))

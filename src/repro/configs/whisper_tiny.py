@@ -1,0 +1,27 @@
+"""whisper-tiny [audio] — 4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865,
+encoder-decoder; mel+conv frontend is a STUB (encoder consumes
+precomputed frame embeddings).  [arXiv:2212.04356]
+
+Shape coverage (DESIGN.md §5): train_4k only.  prefill_32k / decode_32k /
+long_500k are skipped — whisper's decoder context is 448 tokens and its
+encoder is fixed at 1500 frames; a 32k-524k KV cache has no meaning for
+the family.  Decode is exercised at natural sizes in the smoke test.
+"""
+
+from repro.models.config import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    arch_type="encdec",
+    n_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51865,
+    n_frames=1500,                # 30 s audio after the (stubbed) conv stack
+    tie_embeddings=True,
+    source="arXiv:2212.04356",
+))

@@ -1,0 +1,29 @@
+"""Core EFL-FG algorithm (the paper's contribution).
+
+Public API:
+  feedback_graph / feedback_graph_np   Algorithm 1
+  dominating_set / dominating_set_np   greedy set cover (Chvatal)
+  EFLFGState, init_state, plan_round, update_state, round_step   Algorithm 2
+  FedBoostState, fedboost_init, fedboost_round                    baseline
+  RegretTracker, theorem1_bound                                   eq. 10/11
+"""
+
+from .graph import feedback_graph, feedback_graph_np, row_log_weight_sums
+from .domset import dominating_set, dominating_set_np, independence_number_np
+from . import policy
+from .eflfg import (EFLFGState, EFLFGRoundOut, init_state, plan_round,
+                    update_state, round_step)
+from .fedboost import (FedBoostState, fedboost_init, fedboost_plan,
+                       fedboost_update, project_simplex)
+from .regret import RegretTracker, theorem1_bound
+
+__all__ = [
+    "feedback_graph", "feedback_graph_np", "row_log_weight_sums",
+    "dominating_set", "dominating_set_np", "independence_number_np",
+    "policy",
+    "EFLFGState", "EFLFGRoundOut", "init_state", "plan_round",
+    "update_state", "round_step",
+    "FedBoostState", "fedboost_init", "fedboost_plan", "fedboost_update",
+    "project_simplex",
+    "RegretTracker", "theorem1_bound",
+]

@@ -1,0 +1,106 @@
+"""Dominating set via the greedy set-cover heuristic (Chvátal 1979).
+
+The exploration component of the PMF (eq. 4) spreads mass uniformly over a
+dominating set ``D_t`` of the feedback graph: a set of vertices whose
+out-neighborhoods cover every vertex.  Because Algorithm 1 always inserts
+self-loops, ``D = V`` trivially dominates, and greedy set cover returns a
+set of size ``O(alpha(G) ln K)`` (used in the regret bound discussion).
+
+The JAX path is a bounded ``lax.while_loop`` so it composes into the jitted
+round step; the NumPy path is the literal greedy algorithm (test oracle).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dominating_set", "dominating_set_np", "independence_number_np"]
+
+
+@jax.jit
+def dominating_set(adj: jnp.ndarray) -> jnp.ndarray:
+    """Greedy set cover.  ``adj[k, i]`` True iff i in N_out(k).
+
+    Returns a boolean mask (K,) of the chosen dominating set.  Every vertex
+    is covered: ``adj[D].any(axis=0)`` is all-True (self-loops guarantee
+    termination in at most K picks).
+    """
+    K = adj.shape[0]
+    adj_i = adj.astype(jnp.int32)
+
+    def cond(state):
+        _, covered = state
+        return ~jnp.all(covered)
+
+    def body(state):
+        dom, covered = state
+        gains = adj_i @ (~covered).astype(jnp.int32)  # uncovered out-neighbors
+        gains = jnp.where(dom, -1, gains)             # never re-pick
+        pick = jnp.argmax(gains)
+        dom = dom.at[pick].set(True)
+        covered = covered | adj[pick]
+        return dom, covered
+
+    dom0 = jnp.zeros((K,), dtype=bool)
+    covered0 = jnp.zeros((K,), dtype=bool)
+    dom, _ = jax.lax.while_loop(cond, body, (dom0, covered0))
+    return dom
+
+
+def dominating_set_np(adj: np.ndarray) -> np.ndarray:
+    K = adj.shape[0]
+    dom = np.zeros(K, dtype=bool)
+    covered = np.zeros(K, dtype=bool)
+    while not covered.all():
+        # note: int cast is load-bearing — numpy bool@bool matmul yields
+        # bool, and gains[dom] = -1 would wrap to True, stalling the loop
+        gains = adj.astype(np.int64) @ (~covered).astype(np.int64)
+        gains[dom] = -1
+        pick = int(np.argmax(gains))
+        dom[pick] = True
+        covered |= adj[pick]
+    return dom
+
+
+def independence_number_np(adj: np.ndarray, max_exact: int = 24) -> int:
+    """Independence number alpha(G) of the *undirected support* of ``adj``
+    (vertices i, j adjacent if either directed edge exists, self-loops
+    ignored).  Exact branch-and-bound for K <= max_exact (K=22 in the
+    paper), greedy lower bound otherwise.  Used by the regret benchmark to
+    evaluate the bound of Theorem 1.
+    """
+    K = adj.shape[0]
+    und = (adj | adj.T) & ~np.eye(K, dtype=bool)
+    if K > max_exact:
+        # greedy: repeatedly take min-degree vertex, drop neighbors
+        alive = np.ones(K, dtype=bool)
+        alpha = 0
+        while alive.any():
+            deg = (und & alive[None, :]).sum(1) + (~alive) * K * 2
+            v = int(np.argmin(deg))
+            alpha += 1
+            alive[v] = False
+            alive &= ~und[v]
+        return alpha
+
+    best = 0
+    order = np.argsort(-und.sum(1))
+
+    def bb(cand: list, size: int):
+        nonlocal best
+        if size + len(cand) <= best:
+            return
+        if not cand:
+            best = max(best, size)
+            return
+        v = cand[0]
+        # include v
+        bb([u for u in cand[1:] if not und[v, u]], size + 1)
+        # exclude v
+        bb(cand[1:], size)
+
+    bb([int(v) for v in order], 0)
+    return best

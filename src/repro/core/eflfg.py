@@ -1,0 +1,108 @@
+"""EFL-FG server (Algorithm 2), as a pure jitted round step.
+
+The server state carries log-weights for both the per-model confidences
+``w`` (eq. 9a) and the per-node ensemble confidences ``u`` (eq. 9b), plus
+the previous round's out-neighborhood weight sums that feed the weight
+constraint in eq. (2).
+
+The round step is model-agnostic: it consumes the (K, n_clients) matrix of
+per-model *per-client* losses and the (n_clients,) ensemble losses — who
+computes those (kernel experts, LLM experts, simulated clients sharded over
+a mesh) is the business of `repro.experts` / `repro.federated`.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .graph import feedback_graph, row_log_weight_sums
+from .domset import dominating_set
+from . import policy
+
+__all__ = ["EFLFGState", "EFLFGRoundOut", "init_state", "plan_round", "update_state", "round_step"]
+
+_LOG_INF = 1e30
+
+
+class EFLFGState(NamedTuple):
+    log_w: jnp.ndarray          # (K,) model confidence, log space
+    log_u: jnp.ndarray          # (K,) node confidence, log space
+    log_w_prev_sums: jnp.ndarray  # (K,) log W_{k,t-1} of prev out-neighborhoods
+    t: jnp.ndarray              # round counter
+
+
+class EFLFGRoundOut(NamedTuple):
+    adj: jnp.ndarray            # (K, K) feedback graph
+    dom: jnp.ndarray            # (K,) dominating set mask
+    p: jnp.ndarray              # (K,) node PMF
+    drawn: jnp.ndarray          # scalar int, I_t
+    sel: jnp.ndarray            # (K,) bool, S_t = N_out(I_t)
+    mix: jnp.ndarray            # (K,) eq. (5) ensemble mixture weights
+    round_cost: jnp.ndarray     # scalar, sum of costs of S_t
+
+
+def init_state(K: int) -> EFLFGState:
+    """w_{k,1} = u_{k,1} = 1; no previous neighborhood (constraint off)."""
+    return EFLFGState(
+        log_w=jnp.zeros((K,)),
+        log_u=jnp.zeros((K,)),
+        log_w_prev_sums=jnp.full((K,), _LOG_INF),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def plan_round(state: EFLFGState, key: jax.Array, costs: jnp.ndarray,
+               budget: jnp.ndarray, xi: jnp.ndarray) -> EFLFGRoundOut:
+    """Server-side planning: build graph, draw node, emit the transmit set.
+
+    This is the part that must run *before* any model is sent to clients.
+    """
+    adj = feedback_graph(state.log_w, costs, budget, state.log_w_prev_sums)
+    dom = dominating_set(adj)
+    p = policy.pmf(state.log_u, dom, xi)
+    drawn = policy.draw_node(key, p)
+    sel = adj[drawn]
+    mix = policy.ensemble_mix_weights(state.log_w, sel)
+    round_cost = jnp.sum(jnp.where(sel, costs, 0.0))
+    return EFLFGRoundOut(adj, dom, p, drawn, sel, mix, round_cost)
+
+
+def update_state(state: EFLFGState, plan: EFLFGRoundOut,
+                 model_losses: jnp.ndarray, ens_loss: jnp.ndarray,
+                 eta: jnp.ndarray) -> EFLFGState:
+    """Server-side update after receiving client losses (eqs. 6-9)."""
+    q = policy.observation_probs(plan.adj, plan.p)
+    ell, ell_hat = policy.is_loss_estimates(
+        model_losses, ens_loss, plan.sel, plan.drawn, plan.p, q)
+    log_w = policy.exp_weight_update(state.log_w, eta, ell)
+    log_u = policy.exp_weight_update(state.log_u, eta, ell_hat)
+    # W_{k,t} sums for the eq. (2) constraint of the *next* round, evaluated
+    # with the *updated* weights (the constraint compares against the sum of
+    # current-round neighborhoods under the weights the next round sees).
+    log_prev = row_log_weight_sums(plan.adj, log_w)
+    return EFLFGState(log_w, log_u, log_prev, state.t + 1)
+
+
+@jax.jit
+def round_step(state: EFLFGState, key: jax.Array,
+               model_client_losses: jnp.ndarray,
+               costs: jnp.ndarray, budget: jnp.ndarray,
+               eta: jnp.ndarray, xi: jnp.ndarray):
+    """One full Algorithm-2 round when per-(model, client) losses are known.
+
+    ``model_client_losses``: (K, n) matrix of L(f_k(x_i), y_i).  The
+    ensemble loss is *not* derivable from it in general (loss of the mix !=
+    mix of losses), so callers that can evaluate the true ensemble loss
+    should use plan_round/update_state directly; this convenience wrapper
+    upper-bounds it by the Jensen mixture (exact for linear losses, upper
+    bound for convex ones — consistent with Lemma 2's direction).
+    Returns (new_state, plan, ens_loss).
+    """
+    plan = plan_round(state, key, costs, budget, xi)
+    model_losses = jnp.sum(model_client_losses, axis=1)
+    ens_loss = jnp.sum(plan.mix @ model_client_losses)
+    new_state = update_state(state, plan, model_losses, ens_loss, eta)
+    return new_state, plan, ens_loss

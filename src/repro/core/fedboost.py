@@ -1,0 +1,78 @@
+"""FedBoost baseline (Hamer, Mohri, Suresh; ICML 2020), streaming variant.
+
+FedBoost learns the ensemble mixture weights alpha (a point on the
+K-simplex) by projected stochastic gradient on the ensemble loss, while
+*sampling* the transmitted subset so that only the **expected** cost meets
+the budget — the instantaneous cost can exceed it, which is exactly the
+"budget violence" column of the paper's Table I.  Subset sampling in
+FedBoost is quality-blind (it exists to control communication, not to
+exploit): each model is included independently with
+
+    pi_k = min(1, B / sum_j c_j)        =>  E[cost] = sum_k pi_k c_k <= B.
+
+Gradients for unsampled models are zero; sampled models get the
+importance-weighted gradient g_k / pi_k, keeping the estimator unbiased.
+Per the paper's §IV, clients are streaming: each contributes the gradient
+of its single newly-observed sample.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FedBoostState", "fedboost_init", "fedboost_plan",
+           "fedboost_update", "project_simplex"]
+
+
+class FedBoostState(NamedTuple):
+    alpha: jnp.ndarray   # (K,) mixture weights on the simplex
+    t: jnp.ndarray
+
+
+def fedboost_init(K: int) -> FedBoostState:
+    return FedBoostState(alpha=jnp.full((K,), 1.0 / K),
+                         t=jnp.zeros((), jnp.int32))
+
+
+def project_simplex(v: jnp.ndarray) -> jnp.ndarray:
+    """Euclidean projection onto the probability simplex (Duchi et al.)."""
+    K = v.shape[0]
+    u = jnp.sort(v)[::-1]
+    css = jnp.cumsum(u)
+    ks = jnp.arange(1, K + 1, dtype=v.dtype)
+    cond = u + (1.0 - css) / ks > 0
+    rho = jnp.max(jnp.where(cond, jnp.arange(K), -1))
+    lam = (1.0 - css[rho]) / (rho + 1.0)
+    return jnp.maximum(v + lam, 0.0)
+
+
+def _inclusion_probs(costs: jnp.ndarray, budget: jnp.ndarray) -> jnp.ndarray:
+    K = costs.shape[0]
+    pi = jnp.minimum(1.0, budget / jnp.maximum(jnp.sum(costs), 1e-12))
+    return jnp.full((K,), pi)
+
+
+def fedboost_plan(state: FedBoostState, key: jax.Array, costs: jnp.ndarray,
+                  budget: jnp.ndarray):
+    """Sample the round's transmit subset.  Returns (sel, pi, mix, cost)."""
+    K = state.alpha.shape[0]
+    pi = _inclusion_probs(costs, budget)
+    sel = jax.random.uniform(key, (K,)) < pi
+    # guarantee at least one transmitted model (highest current weight)
+    best = jnp.argmax(state.alpha)
+    sel = sel | ((jnp.arange(K) == best) & ~jnp.any(sel))
+    masked = jnp.where(sel, state.alpha, 0.0)
+    mix = masked / jnp.maximum(jnp.sum(masked), 1e-12)
+    cost = jnp.sum(jnp.where(sel, costs, 0.0))
+    return sel, pi, mix, cost
+
+
+def fedboost_update(state: FedBoostState, sel: jnp.ndarray, pi: jnp.ndarray,
+                    grad_alpha: jnp.ndarray, lr: jnp.ndarray) -> FedBoostState:
+    """Projected SGD step with importance-weighted sparse gradients."""
+    g = jnp.where(sel, grad_alpha / pi, 0.0)
+    alpha = project_simplex(state.alpha - lr * g)
+    return FedBoostState(alpha=alpha, t=state.t + 1)

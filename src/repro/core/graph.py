@@ -1,0 +1,128 @@
+"""Feedback-graph generation (Algorithm 1 of the paper).
+
+Each of the K pre-trained models is a vertex.  For every source vertex
+``v_k`` we greedily grow an out-neighborhood: starting from the self loop,
+repeatedly append the vertex maximizing
+
+    w_i / (sum_{j in N_out} c_j + c_i)                       (eq. 3)
+
+subject to (eq. 2):
+  * cumulative cost stays within the round budget ``B_t``,
+  * cumulative *weight* of the out-neighborhood does not exceed the
+    out-neighborhood weight of the previous round (``W_prev``),
+  * no duplicates.
+
+The greedy loop is data dependent, so the JAX implementation is a bounded
+``lax.while_loop`` (at most K-1 appends), ``vmap``-ed over the K source
+vertices.  A pure-NumPy reference (`feedback_graph_np`) mirrors the paper's
+pseudo-code literally and is used as the oracle in property tests.
+
+Weights are carried in log space throughout the library: after many
+exponential-weight updates the raw weights underflow float32, while
+log-weights stay exact.  All comparisons in eq. (2)/(3) are performed with
+``logsumexp`` so the semantics are identical to the paper's.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import logsumexp
+
+__all__ = [
+    "feedback_graph",
+    "feedback_graph_np",
+    "row_log_weight_sums",
+]
+
+_NEG_INF = -1e30
+
+
+def _build_row(log_w: jnp.ndarray, costs: jnp.ndarray, budget: jnp.ndarray,
+               log_w_prev_sum: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Grow the out-neighborhood of source vertex ``k``. Returns bool mask (K,)."""
+    K = log_w.shape[0]
+    mask0 = jnp.zeros((K,), dtype=bool).at[k].set(True)
+
+    def eligibility(mask):
+        # log of current out-neighborhood weight sum
+        masked_logw = jnp.where(mask, log_w, _NEG_INF)
+        log_wsum = logsumexp(masked_logw)
+        # log(W_cur + w_i) for every candidate i
+        log_wsum_plus = jnp.logaddexp(log_wsum, log_w)
+        cost_sum = jnp.sum(jnp.where(mask, costs, 0.0))
+        ok_cost = cost_sum + costs <= budget
+        ok_weight = log_wsum_plus <= log_w_prev_sum + 1e-6  # tolerance for fp
+        return (~mask) & ok_cost & ok_weight, cost_sum
+
+    def cond(mask):
+        elig, _ = eligibility(mask)
+        return jnp.any(elig)
+
+    def body(mask):
+        elig, cost_sum = eligibility(mask)
+        # eq. (3): argmax of w_i / (cost_sum + c_i)  ==  argmax log_w - log(den)
+        ratio = log_w - jnp.log(cost_sum + costs)
+        ratio = jnp.where(elig, ratio, _NEG_INF)
+        d = jnp.argmax(ratio)
+        return mask.at[d].set(True)
+
+    return jax.lax.while_loop(cond, body, mask0)
+
+
+@jax.jit
+def feedback_graph(log_w: jnp.ndarray, costs: jnp.ndarray, budget: jnp.ndarray,
+                   log_w_prev_sums: jnp.ndarray) -> jnp.ndarray:
+    """Algorithm 1.  Returns the boolean adjacency ``A`` with
+    ``A[k, i] = True`` iff ``v_i`` is an out-neighbor of ``v_k``.
+
+    Args:
+      log_w: (K,) log confidence weights ``log w_{k,t}``.
+      costs: (K,) transmission costs ``c_k`` (positive).
+      budget: scalar round budget ``B_t``.
+      log_w_prev_sums: (K,) ``log sum_{j in N_out_{k,t-1}} w_{j,t-1}``;
+        pass ``+inf``-like values (e.g. 1e30) on the first round, which
+        disables the weight constraint exactly as the paper's t=1 round
+        (where no previous neighborhood exists).
+    """
+    K = log_w.shape[0]
+    ks = jnp.arange(K)
+    return jax.vmap(
+        lambda k, lps: _build_row(log_w, costs, budget, lps, k)
+    )(ks, log_w_prev_sums)
+
+
+def row_log_weight_sums(adj: jnp.ndarray, log_w: jnp.ndarray) -> jnp.ndarray:
+    """log sum of weights of each row's out-neighborhood: (K,)."""
+    masked = jnp.where(adj, log_w[None, :], _NEG_INF)
+    return logsumexp(masked, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# NumPy reference, literal transcription of Algorithm 1 (test oracle).
+# ---------------------------------------------------------------------------
+
+def feedback_graph_np(w: np.ndarray, costs: np.ndarray, budget: float,
+                      w_prev_sums: np.ndarray) -> np.ndarray:
+    """Literal Algorithm 1 on raw (non-log) weights. Returns bool (K, K)."""
+    K = len(w)
+    adj = np.zeros((K, K), dtype=bool)
+    for k in range(K):
+        out = {k}
+        while True:
+            cost_sum = sum(costs[j] for j in out)
+            wsum = sum(w[j] for j in out)
+            # eq. (2): the eligible set M_{k,t}
+            elig = [i for i in range(K)
+                    if i not in out
+                    and cost_sum + costs[i] <= budget
+                    and wsum + w[i] <= w_prev_sums[k] * (1 + 1e-6)]
+            if not elig:
+                break
+            # eq. (3)
+            d = max(elig, key=lambda i: w[i] / (cost_sum + costs[i]))
+            out.add(d)
+        adj[k, list(out)] = True
+    return adj

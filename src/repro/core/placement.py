@@ -1,0 +1,68 @@
+"""Placement-aware transmission costs — a beyond-paper extension.
+
+The paper charges the full cost c_k every time model k is transmitted.  In
+a real deployment the clients *cache* recently received models; a model
+that is already resident costs (almost) nothing to "send" again.  This
+module tracks a server-side view of client residency and feeds EFL-FG an
+*effective* cost vector
+
+    c_eff[k, t] = c_k          if k expired from the client cache
+                = rho * c_k    if k is resident (rho ~ version-delta cost)
+
+Because Algorithm 1 is already data-driven in the costs, the graph simply
+grows denser around cached models — the regret machinery is untouched
+(Theorem 1 holds for any per-round cost vector satisfying (a3)).  The
+benchmark `benchmarks/placement.py` measures the effect: at the same
+budget, the ensemble gets MORE members per round (or the same ensemble at
+a fraction of the bytes on the wire).
+
+Recorded in EXPERIMENTS.md §Perf as a beyond-paper optimization of the
+paper's own objective (server->client bytes).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .eflfg import EFLFGState, plan_round, update_state
+
+__all__ = ["PlacementState", "placement_init", "effective_costs",
+           "placement_update", "plan_round_cached"]
+
+
+class PlacementState(NamedTuple):
+    last_sent: jnp.ndarray    # (K,) round index when each model last shipped
+    t: jnp.ndarray
+
+
+def placement_init(K: int) -> PlacementState:
+    return PlacementState(last_sent=jnp.full((K,), -10**9, jnp.int32),
+                          t=jnp.zeros((), jnp.int32))
+
+
+def effective_costs(pstate: PlacementState, costs: jnp.ndarray,
+                    ttl: int, rho: float = 0.05) -> jnp.ndarray:
+    """rho*c for models still resident (sent within `ttl` rounds)."""
+    resident = (pstate.t - pstate.last_sent) <= ttl
+    return jnp.where(resident, rho * costs, costs)
+
+
+def placement_update(pstate: PlacementState, sel: jnp.ndarray) -> PlacementState:
+    last = jnp.where(sel, pstate.t, pstate.last_sent)
+    return PlacementState(last_sent=last, t=pstate.t + 1)
+
+
+def plan_round_cached(state: EFLFGState, pstate: PlacementState,
+                      key: jax.Array, costs: jnp.ndarray,
+                      budget: jnp.ndarray, xi: jnp.ndarray,
+                      ttl: int = 10, rho: float = 0.05):
+    """plan_round with placement-aware costs.  Returns (plan, new_pstate,
+    wire_cost) where wire_cost is the actual bytes shipped this round
+    (effective costs of the selected set)."""
+    c_eff = effective_costs(pstate, costs, ttl, rho)
+    plan = plan_round(state, key, c_eff, budget, xi)
+    wire = jnp.sum(jnp.where(plan.sel, c_eff, 0.0))
+    return plan, placement_update(pstate, plan.sel), wire

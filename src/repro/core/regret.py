@@ -1,0 +1,51 @@
+"""Regret accounting (eq. 10) and the Theorem-1 bound evaluator.
+
+``RegretTracker`` accumulates, per round, the (expected or realized)
+ensemble loss and the per-model cumulative losses, from which the regret
+w.r.t. the best model in hindsight is computed.  ``theorem1_bound``
+evaluates the right-hand side of eq. (11) so benchmarks can overlay the
+empirical regret against the proven bound.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["RegretTracker", "theorem1_bound"]
+
+
+class RegretTracker:
+    def __init__(self, K: int):
+        self.K = K
+        self.ens_cum = []          # cumulative ensemble loss after each round
+        self.model_cum = []        # (K,) cumulative per-model losses
+        self._ens = 0.0
+        self._models = np.zeros(K)
+
+    def update(self, ens_loss: float, model_losses: np.ndarray):
+        self._ens += float(ens_loss)
+        self._models = self._models + np.asarray(model_losses)
+        self.ens_cum.append(self._ens)
+        self.model_cum.append(self._models.copy())
+
+    def regret_curve(self) -> np.ndarray:
+        """R_t = cumulative ensemble loss - best model's cumulative loss."""
+        ens = np.asarray(self.ens_cum)
+        best = np.asarray([m.min() for m in self.model_cum])
+        return ens - best
+
+    def best_model(self) -> int:
+        return int(np.argmin(self.model_cum[-1]))
+
+
+def theorem1_bound(T: int, K: int, n_out_kstar_1: int, eta: float, xi: float,
+                   n_clients_per_round: int, dom_sizes: np.ndarray) -> np.ndarray:
+    """RHS of eq. (11), using the |D_t|/xi upper bound for 1/q-bar.
+
+    Returns the bound as a curve over rounds (cumulative).
+    """
+    c2 = float(n_clients_per_round) ** 2
+    per_round = (xi * (1.0 - 0.5 * eta * c2)
+                 + 0.5 * eta * (K + np.asarray(dom_sizes, dtype=float) / xi) * c2)
+    curve = np.cumsum(np.broadcast_to(per_round, (T,)).copy())
+    return np.log(K * max(n_out_kstar_1, 1)) / eta + curve

@@ -1,0 +1,12 @@
+"""Data pipeline: UCI-surrogate tabular streams, LM token streams, and the
+assigned input-shape registry."""
+
+from .tabular import TabularDataset, DATASETS, make_dataset, pretrain_split
+from .tokens import TokenBatch, TokenStream
+from .shapes import InputShape, INPUT_SHAPES
+
+__all__ = [
+    "TabularDataset", "DATASETS", "make_dataset", "pretrain_split",
+    "TokenBatch", "TokenStream",
+    "InputShape", "INPUT_SHAPES",
+]

@@ -1,0 +1,28 @@
+"""Registry of the four assigned input shapes.
+
+Each entry fixes (seq_len, global_batch, mode); `repro.launch.dryrun`
+crosses these with the architecture registry.  Decode shapes lower
+``serve_step`` (one new token against a KV/state cache of ``seq_len``);
+train/prefill shapes lower ``train_step`` / ``prefill_step``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+__all__ = ["InputShape", "INPUT_SHAPES"]
+
+
+class InputShape(NamedTuple):
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str          # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

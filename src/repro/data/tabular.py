@@ -1,0 +1,71 @@
+"""Synthetic surrogates for the paper's three UCI regression datasets.
+
+This container has no network access, so the UCI files cannot be
+downloaded.  We synthesize surrogates with the *exact* sample counts and
+feature dimensions of the originals and a nonlinear, heteroscedastic
+teacher (random two-layer tanh network over correlated features + sparse
+linear trend + noise), standardized to zero mean / unit variance like the
+preprocessed originals.  DESIGN.md §6 records this substitution; the
+paper's *qualitative* claims are validated on these surrogates and
+EXPERIMENTS.md reports them as such.
+
+Datasets (paper §IV):
+  bias    "Bias Correction"  7,750 x 21   next-day min air temperature
+  ccpp    "CCPP"             9,568 x  4   plant energy output
+  energy  "Energy"          19,735 x 27   appliance energy use
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+__all__ = ["TabularDataset", "DATASETS", "make_dataset", "pretrain_split"]
+
+
+class TabularDataset(NamedTuple):
+    name: str
+    x: np.ndarray   # (n, d) float32, standardized
+    y: np.ndarray   # (n,) float32, standardized
+
+
+DATASETS = {
+    "bias": (7750, 21),
+    "ccpp": (9568, 4),
+    "energy": (19735, 27),
+}
+
+
+def make_dataset(name: str, seed: int = 0) -> TabularDataset:
+    n, d = DATASETS[name]
+    rng = np.random.default_rng(seed + hash(name) % 65536)
+    # correlated features: x = z @ M with random mixing
+    z = rng.standard_normal((n, d)).astype(np.float64)
+    mix = rng.standard_normal((d, d)) / np.sqrt(d)
+    mix += 0.5 * np.eye(d)
+    x = z @ mix
+    # nonlinear teacher: two-layer tanh + sparse linear + heteroscedastic noise
+    h = 32
+    w1 = rng.standard_normal((d, h)) / np.sqrt(d)
+    w2 = rng.standard_normal(h) / np.sqrt(h)
+    lin = rng.standard_normal(d) * (rng.random(d) < 0.3)
+    y = np.tanh(x @ w1) @ w2 + 0.5 * x @ lin / np.sqrt(d)
+    noise_scale = 0.1 * (1.0 + 0.5 * np.abs(x[:, 0]))
+    y = y + noise_scale * rng.standard_normal(n)
+    # standardize
+    x = (x - x.mean(0)) / (x.std(0) + 1e-8)
+    y = (y - y.mean()) / (y.std() + 1e-8)
+    return TabularDataset(name, x.astype(np.float32), y.astype(np.float32))
+
+
+def pretrain_split(ds: TabularDataset, frac: float = 0.10, seed: int = 0):
+    """Paper §IV: each expert is trained with 10% of the dataset.  Returns
+    ((x_pre, y_pre), (x_stream, y_stream)) — the remainder is the online
+    federated stream."""
+    n = ds.x.shape[0]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    m = int(round(frac * n))
+    pre, rest = perm[:m], perm[m:]
+    return (ds.x[pre], ds.y[pre]), (ds.x[rest], ds.y[rest])

@@ -1,0 +1,12 @@
+"""Pre-trained expert models for the ensemble (paper §IV pool)."""
+
+from .kernel_regression import (KernelExpert, fit_kernel_expert,
+                                kernel_matrix, predict)
+from .mlp import MLPExpert, fit_mlp_expert, mlp_apply
+from .pool import ExpertPool, build_paper_pool, pool_predict_all
+
+__all__ = [
+    "KernelExpert", "fit_kernel_expert", "kernel_matrix", "predict",
+    "MLPExpert", "fit_mlp_expert", "mlp_apply",
+    "ExpertPool", "build_paper_pool", "pool_predict_all",
+]

@@ -1,0 +1,70 @@
+"""Feed-forward neural-network experts (paper §IV: 1 and 2 hidden layers,
+25 ReLU units each), trained with full-batch Adam on the 10% pre-training
+split.  Pure JAX — no flax."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MLPExpert", "fit_mlp_expert", "mlp_apply"]
+
+
+class MLPExpert(NamedTuple):
+    params: tuple          # tuple of (W, b) pairs
+    n_params: int
+
+
+def _init(key, sizes):
+    params = []
+    for i, (din, dout) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (din, dout)) * jnp.sqrt(2.0 / din)
+        params.append((w, jnp.zeros((dout,))))
+    return tuple(params)
+
+
+def mlp_apply(params, x):
+    h = x
+    for w, b in params[:-1]:
+        h = jax.nn.relu(h @ w + b)
+    w, b = params[-1]
+    return (h @ w + b)[..., 0]
+
+
+def fit_mlp_expert(key: jax.Array, x_train: np.ndarray, y_train: np.ndarray,
+                   hidden_layers: int = 1, width: int = 25,
+                   steps: int = 500, lr: float = 1e-2) -> MLPExpert:
+    x = jnp.asarray(x_train, jnp.float32)
+    y = jnp.asarray(y_train, jnp.float32)
+    sizes = [x.shape[1]] + [width] * hidden_layers + [1]
+    params = _init(key, sizes)
+
+    def loss(p):
+        return jnp.mean((mlp_apply(p, x) - y) ** 2)
+
+    # full-batch Adam
+    grads_fn = jax.jit(jax.value_and_grad(loss))
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def step(i, carry):
+        p, m, v = carry
+        _, g = grads_fn(p)
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - b1 ** (i + 1.0)), m)
+        vh = jax.tree.map(lambda a: a / (1 - b2 ** (i + 1.0)), v)
+        p = jax.tree.map(lambda a, mm, vv: a - lr * mm / (jnp.sqrt(vv) + eps),
+                         p, mh, vh)
+        return p, m, v
+
+    params, m, v = jax.lax.fori_loop(0, steps, step, (params, m, v))
+    n = sum(int(np.prod(w.shape)) + int(np.prod(b.shape)) for w, b in params)
+    return MLPExpert(params, n)

@@ -1,0 +1,8 @@
+"""Federated-learning substrate: round simulation + mesh-sharded client
+evaluation."""
+
+from .simulation import SimConfig, SimResult, run_simulation
+from .sharded import sharded_round_losses, make_client_eval
+
+__all__ = ["SimConfig", "SimResult", "run_simulation",
+           "sharded_round_losses", "make_client_eval"]

@@ -1,0 +1,67 @@
+"""Distributed client evaluation: the paper's comm pattern on a JAX mesh.
+
+The paper's round has three wire transfers:
+  1. server -> clients: the selected models (budgeted broadcast),
+  2. clients: local loss computation,
+  3. clients -> server: per-model losses (uplink, reduced at the server).
+
+On a TPU mesh we map clients onto the ``data`` axis: every device simulates
+an equal shard of the round's client cohort, evaluates the transmitted
+experts on its local samples, and the server reduction (3) becomes a
+``psum`` over ``data``.  The broadcast (1) is the implicit replication of
+the selected experts' parameters (their sharding spec has no ``data``
+axis).  This is the TPU-native adaptation recorded in DESIGN.md §4 — there
+is no NCCL-style point-to-point emulation, just collectives.
+
+``sharded_round_losses`` is the shard_map kernel; ``make_client_eval``
+binds it to a mesh.  It works for any per-device expert-prediction
+function, so the LLM-pool example reuses it.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+__all__ = ["sharded_round_losses", "make_client_eval"]
+
+
+def sharded_round_losses(preds: jnp.ndarray, y: jnp.ndarray,
+                         mix: jnp.ndarray, loss_scale: float,
+                         axis: str = "data"):
+    """Per-device body: local client shard -> (model_losses, ens_loss).
+
+    preds: (K, n_local) expert predictions on this device's clients.
+    y: (n_local,) labels.  mix: (K,) eq.-(5) mixture weights (replicated).
+    Returns replicated ((K,) summed normalized model losses, scalar summed
+    normalized ensemble loss, scalar summed raw ensemble sq-err).
+    """
+    sq = (preds - y[None, :]) ** 2
+    model_losses = jnp.minimum(sq / loss_scale, 1.0).sum(axis=1)
+    yhat = mix @ preds
+    ens_sq = (yhat - y) ** 2
+    ens_loss = jnp.minimum(ens_sq / loss_scale, 1.0).sum()
+    model_losses = jax.lax.psum(model_losses, axis)
+    ens_loss = jax.lax.psum(ens_loss, axis)
+    ens_sq_sum = jax.lax.psum(ens_sq.sum(), axis)
+    return model_losses, ens_loss, ens_sq_sum
+
+
+def make_client_eval(mesh: Mesh, loss_scale: float = 4.0, axis: str = "data"):
+    """shard_map-wrapped client evaluation over the mesh ``data`` axis.
+
+    The (K, n) prediction matrix and (n,) labels are sharded over clients;
+    the mixture weights are replicated (they rode down with the broadcast).
+    Outputs are replicated — exactly what the server sees after the uplink
+    reduction.
+    """
+    fn = partial(sharded_round_losses, loss_scale=loss_scale, axis=axis)
+    return jax.jit(shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(None, axis), P(axis), P(None)),
+        out_specs=(P(None), P(), P()),
+    ))

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+  ensemble_combine  eq. (5) masked weighted expert mixing
+  kernel_gram       fused kernel-regression predict (client hot path)
+  flash_attention   GQA/causal/sliding-window attention (arch substrate)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+dispatch), ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""
+
+from .ensemble_combine import ops as ensemble_combine_ops
+from .kernel_gram import ops as kernel_gram_ops
+from .flash_attention import ops as flash_attention_ops
+
+__all__ = ["ensemble_combine_ops", "kernel_gram_ops", "flash_attention_ops"]

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: masked weighted combine of K expert prediction tiles.
+
+TPU mapping: the (K, N) prediction matrix streams through VMEM in
+(K, TILE_N) blocks; the mixture weights are computed once on the host side
+of the launch (log-space softmax over K <= a few hundred is negligible) and
+ride in as a (K, 1) VMEM operand; each grid step is one (1, K) x (K, TILE_N)
+matvec on the MXU.  TILE_N = 1024 keeps the working set at
+K*TILE_N*4 B ~ 90 KiB for K=22 — far under the ~16 MiB VMEM budget, so the
+pipeline is purely bandwidth-bound (as the roofline expects for a K-way
+reduction).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ensemble_combine_pallas", "TILE_N"]
+
+TILE_N = 1024
+
+
+def _combine_kernel(preds_ref, mix_ref, out_ref):
+    # preds_ref: (K, TILE_N); mix_ref: (1, K); out_ref: (1, TILE_N)
+    out_ref[...] = jnp.dot(mix_ref[...], preds_ref[...],
+                           preferred_element_type=jnp.float32
+                           ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ensemble_combine_pallas(preds: jnp.ndarray, mix: jnp.ndarray,
+                            *, interpret: bool = True) -> jnp.ndarray:
+    """preds: (K, N); mix: (K,) combine weights -> (N,).
+
+    N is padded to TILE_N internally; K is whatever the pool provides.
+    """
+    K, N = preds.shape
+    n_pad = (-N) % TILE_N
+    if n_pad:
+        preds = jnp.pad(preds, ((0, 0), (0, n_pad)))
+    npad = preds.shape[1]
+    grid = (npad // TILE_N,)
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, TILE_N), lambda i: (0, i)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_N), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, npad), preds.dtype),
+        interpret=interpret,
+    )(preds, mix.reshape(1, K).astype(preds.dtype))
+    return out[0, :N]

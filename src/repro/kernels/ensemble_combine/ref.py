@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the ensemble-combine kernel (paper eq. 5).
+
+y_hat(x) = sum_{k in S_t} (w_k / W_t) f_k(x): given the (K, N) matrix of
+expert predictions on the round's client batch, the selection mask and the
+log-weights, produce the ensemble prediction — the per-round client-side
+mixing hot path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.scipy.special import logsumexp
+
+__all__ = ["ensemble_combine_ref", "mix_weights_ref"]
+
+
+def mix_weights_ref(log_w: jnp.ndarray, sel: jnp.ndarray) -> jnp.ndarray:
+    masked = jnp.where(sel, log_w, -jnp.inf)
+    return jnp.exp(masked - logsumexp(masked))
+
+
+def ensemble_combine_ref(preds: jnp.ndarray, log_w: jnp.ndarray,
+                         sel: jnp.ndarray) -> jnp.ndarray:
+    """preds: (K, N); log_w: (K,); sel: (K,) bool -> (N,)."""
+    mix = mix_weights_ref(log_w, sel)
+    return mix.astype(preds.dtype) @ preds

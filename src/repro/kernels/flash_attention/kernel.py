@@ -1,0 +1,126 @@
+"""Pallas TPU flash attention (GQA + causal + sliding window).
+
+Online-softmax streaming over KV tiles — the classic TPU formulation:
+grid (batch*q_heads, q_tiles, kv_tiles) with the kv axis innermost;
+running (m, l, acc) statistics live in VMEM scratch and are finalized on
+the last kv tile.  BlockSpecs stream (TILE_Q, d) query and (TILE_K, d)
+key/value tiles through VMEM; the (TILE_Q, TILE_K) score tile is the MXU
+unit of work.  GQA is folded into the BlockSpec index maps: query head
+``hh`` reads kv head ``hh // (h // kv)`` — no materialized head repeat.
+
+VMEM working set per step: (TILE_Q + 2*TILE_K) * d * 4 B + TILE_Q * TILE_K
+* 4 B + scratch ~= 0.6 MiB at 128/512/d=128 — comfortably pipelineable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention", "TILE_Q", "TILE_K"]
+
+TILE_Q = 128
+TILE_K = 512
+
+_NEG = -1e30
+
+
+def _flash_kernel(scale, causal, window, q_offset, t_valid,
+                  q_ref, k_ref, v_ref, out_ref, m_scr, l_scr, acc_scr):
+    i, j = pl.program_id(1), pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (TILE_Q, d)
+    k = k_ref[0].astype(jnp.float32)                  # (TILE_K, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = (q_offset + i * TILE_Q
+             + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0))
+    k_pos = j * TILE_K + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < t_valid
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_scr[...]                                # (TILE_Q, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[...] + p.sum(axis=1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)                   # (TILE_K, d)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == nj - 1)
+    def _final():
+        out_ref[0] = (acc_scr[...] /
+                      jnp.maximum(l_scr[...], 1e-30)).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_offset_static",
+                              "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    q_offset_static: int = 0, interpret: bool = True):
+    """q: (b, s, h, d); k, v: (b, t, kv, d) -> (b, s, h, d).
+
+    ``q_offset_static``: absolute position of q[0] (static for the kernel
+    launch; prefill uses 0).  Padding on s/t is masked exactly.
+    """
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / (d ** 0.5)
+
+    s_pad, t_pad = (-s) % TILE_Q, (-t) % TILE_K
+    if s_pad:
+        q = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    sp, tp = q.shape[1], k.shape[1]
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sp, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, tp, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, tp, d)
+
+    grid = (b * h, sp // TILE_Q, tp // TILE_K)
+    kern = functools.partial(_flash_kernel, scale, causal, window,
+                             q_offset_static, t)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TILE_Q, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, TILE_K, d),
+                         lambda bh, i, j: (bh // g, j, 0)),
+            pl.BlockSpec((1, TILE_K, d),
+                         lambda bh, i, j: (bh // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_Q, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((TILE_Q, 1), jnp.float32),
+            pltpu.VMEM((TILE_Q, 1), jnp.float32),
+            pltpu.VMEM((TILE_Q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, h, sp, d).transpose(0, 2, 1, 3)
+    return out[:, :s]

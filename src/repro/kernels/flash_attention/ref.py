@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the flash-attention kernel: identical contract to
+repro.models.attention.sdpa (GQA grouping, causal, sliding window,
+q_offset / kv_len for decode)."""
+
+from __future__ import annotations
+
+from repro.models.attention import sdpa as flash_attention_ref
+
+__all__ = ["flash_attention_ref"]

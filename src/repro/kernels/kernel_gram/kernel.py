@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: fused kernel-regression prediction
+y = k(x, anchors) @ alpha.
+
+This is the paper's client-side FLOPs hot spot (every client evaluates
+every transmitted kernel expert on its fresh sample batch each round).
+
+TPU-native decomposition (DESIGN.md §3): instead of a CUDA-style
+one-thread-per-(x, a) distance kernel, the pairwise term is rearranged so
+the dominant cost is x @ a^T — a systolic MXU matmul:
+
+    ||x - a||^2 = ||x||^2 - 2 x.a + ||a||^2
+
+The grid walks (batch tiles x anchor tiles); each step computes one
+(TILE_N, TILE_M) gram tile in VMEM, applies the kernel nonlinearity on the
+VPU, multiplies by the alpha tile, and accumulates into the output block
+(revisited across the anchor-tile axis — standard TPU reduction-grid
+pattern).  Working set: (TILE_N + TILE_M) * d + TILE_N * TILE_M floats;
+with 128x512 tiles and d <= 32 that is < 1 MiB of VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["kernel_predict_pallas", "TILE_N", "TILE_M"]
+
+TILE_N = 128     # batch tile (sublane-aligned x8, MXU-aligned)
+TILE_M = 512     # anchor tile (lane-aligned x128)
+
+
+def _gram_kernel(kind, param, x_ref, a_ref, alpha_ref, out_ref):
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)            # (TILE_N, d)
+    a = a_ref[...].astype(jnp.float32)            # (TILE_M, d)
+    xa = jax.lax.dot_general(x, a, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    if kind == "gaussian":
+        x2 = jnp.sum(x * x, axis=1, keepdims=True)          # (TILE_N, 1)
+        a2 = jnp.sum(a * a, axis=1, keepdims=True).T        # (1, TILE_M)
+        k = jnp.exp(-param * jnp.maximum(x2 - 2.0 * xa + a2, 0.0))
+    elif kind == "polynomial":
+        k = (xa + 1.0) ** param
+    else:  # sigmoid
+        k = jnp.tanh(param * xa + 1.0)
+    part = jnp.dot(k, alpha_ref[...].astype(jnp.float32)[:, None])  # (N, 1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = part.astype(out_ref.dtype)
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = (out_ref[...] + part.astype(out_ref.dtype))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "param", "interpret"))
+def kernel_predict_pallas(kind: str, param: float, x: jnp.ndarray,
+                          anchors: jnp.ndarray, alpha: jnp.ndarray,
+                          *, interpret: bool = True) -> jnp.ndarray:
+    """x: (N, d); anchors: (M, d); alpha: (M,) -> (N,).
+
+    Zero-padding is exact for all three families because padded anchors get
+    alpha = 0 (their kernel value is finite, times zero weight), and padded
+    batch rows are sliced off.
+    """
+    N, d = x.shape
+    M = anchors.shape[0]
+    n_pad, m_pad = (-N) % TILE_N, (-M) % TILE_M
+    if n_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+    if m_pad:
+        anchors = jnp.pad(anchors, ((0, m_pad), (0, 0)))
+        alpha = jnp.pad(alpha, (0, m_pad))
+    npad, mpad = x.shape[0], anchors.shape[0]
+    grid = (npad // TILE_N, mpad // TILE_M)
+    kern = functools.partial(_gram_kernel, kind, float(param))
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_M, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((TILE_M,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad, 1), jnp.float32),
+        interpret=interpret,
+    )(x, anchors, alpha)
+    return out[:N, 0]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the kernel-regression predict kernel.
+
+y(x) = k(x, A) @ alpha for the MXU-friendly kernel families:
+  gaussian    exp(-gamma ||x - a||^2)
+  polynomial  (x.a + 1)^degree
+  sigmoid     tanh(gamma * x.a + 1)
+
+(The Laplacian family needs an |x-a|_1 pairwise reduction that has no
+matmul decomposition — it stays on the jnp path; see DESIGN.md §8.)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["kernel_predict_ref", "SUPPORTED"]
+
+SUPPORTED = ("gaussian", "polynomial", "sigmoid")
+
+
+def kernel_predict_ref(kind: str, param: float, x: jnp.ndarray,
+                       anchors: jnp.ndarray, alpha: jnp.ndarray):
+    xa = x @ anchors.T                                     # (N, M) on MXU
+    if kind == "gaussian":
+        sq = (jnp.sum(x * x, 1)[:, None] - 2.0 * xa
+              + jnp.sum(anchors * anchors, 1)[None, :])
+        k = jnp.exp(-param * jnp.maximum(sq, 0.0))
+    elif kind == "polynomial":
+        k = (xa + 1.0) ** param
+    elif kind == "sigmoid":
+        k = jnp.tanh(param * xa + 1.0)
+    else:
+        raise ValueError(kind)
+    return k @ alpha

@@ -1,0 +1,9 @@
+"""Launchers: production mesh, dry-run, sharding rules, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` must be executed as a module entry point
+(it sets XLA_FLAGS before jax initializes) — do not import it from here.
+"""
+
+from .mesh import make_production_mesh, data_axes, MESH_SHAPES
+
+__all__ = ["make_production_mesh", "data_axes", "MESH_SHAPES"]

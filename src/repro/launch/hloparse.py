@@ -1,0 +1,226 @@
+"""Trip-count-weighted HLO analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE —
+for scan-over-layers models that under-reports FLOPs / bytes / collective
+traffic by a factor of the layer count (verified empirically: qwen3
+train_4k reports ~1/28th of the analytic FLOPs).  This module parses the
+partitioned HLO text, computes per-computation metrics, recovers loop trip
+counts from the loop-condition constants, and propagates multiplicities
+through (possibly nested) while loops and fusion calls.
+
+Outputs (all per-device, shard shapes):
+  weighted_collectives  bytes + counts per collective op kind
+  weighted_dot_flops    2*M*N*K matmul flops (the MFU numerator)
+  weighted_hbm_bytes    sum of top-level instruction result bytes — an
+                        HBM-write proxy (reads are the same order; the
+                        roofline memory term documents this factor)
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f8e4m3fn|f8e5m2|[suf]\d+|c64|c128|token"
+                       r"|opaque)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_WHILE_RE = re.compile(r"while\(.*?\)"
+                       r".*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)"
+                       r"|while\(.*?\).*?body=%?([\w.\-]+)"
+                       r".*?condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _result_shape(rhs: str):
+    """Leading shape (or tuple of shapes) of an instruction's RHS."""
+    depth = 0
+    for idx, ch in enumerate(rhs):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        elif ch == " " and depth == 0:
+            return rhs[:idx]
+    return rhs
+
+
+def _split_computations(hlo: str) -> dict:
+    comps = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        if cur_name is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur_name, cur_lines = m.group(1), []
+        else:
+            if line.strip() == "}":
+                comps[cur_name] = cur_lines
+                cur_name = None
+            else:
+                cur_lines.append(line.strip())
+    return comps
+
+
+def _first_operand(rhs: str):
+    m = re.search(r"\(\s*%?([\w.\-]+)", rhs[rhs.index("("):]) \
+        if "(" in rhs else None
+    return m.group(1) if m else None
+
+
+def _dot_flops(lines):
+    """Matmul flops within one computation (counted once)."""
+    shapes = {}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        sm = _SHAPE_RE.search(_result_shape(rhs))
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",")] \
+                if sm.group(2) else []
+            shapes[name] = dims
+    flops = 0
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        opm = re.match(r"[^\s]+\s+dot\(", rhs)
+        if not opm:
+            continue
+        out = shapes.get(name, [])
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+        lhs_name_m = re.search(r"dot\(\s*%?([\w.\-]+)", rhs)
+        k = 1
+        if cm and lhs_name_m:
+            lhs = shapes.get(lhs_name_m.group(1), [])
+            for d in (cm.group(1).split(",") if cm.group(1) else []):
+                di = int(d)
+                if di < len(lhs):
+                    k *= lhs[di]
+        n = 1
+        for d in out:
+            n *= d
+        flops += 2 * n * k
+    return flops
+
+
+_SKIP_OPS = ("parameter(", "constant(", "tuple(", "get-tuple-element(",
+             "bitcast(", "copy(", "after-all(", "iota(")
+
+
+def _comp_metrics(lines):
+    coll_b = defaultdict(int)
+    coll_n = defaultdict(int)
+    hbm = 0
+    whiles = []      # (cond, body)
+    calls = defaultdict(int)
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        _, rhs = m.groups()
+        shape_txt = _result_shape(rhs)
+        rest = rhs[len(shape_txt):].lstrip()
+        opname = rest.split("(")[0].strip() if "(" in rest else rest
+        if not any(rest.startswith(s) for s in _SKIP_OPS):
+            hbm += _shape_bytes(shape_txt)
+        for c in _COLLECTIVES:
+            if opname == c or opname == c + "-start":
+                coll_b[c] += _shape_bytes(shape_txt)
+                coll_n[c] += 1
+                break
+        wm = _WHILE_RE.search(ln)
+        if wm:
+            cond = wm.group(1) or wm.group(4)
+            body = wm.group(2) or wm.group(3)
+            whiles.append((cond, body))
+        for cm in _CALLS_RE.finditer(ln):
+            calls[cm.group(1)] += 1
+    return dict(coll_b=coll_b, coll_n=coll_n, hbm=hbm, whiles=whiles,
+                calls=calls, flops=_dot_flops(lines))
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps = _split_computations(hlo)
+    metrics = {name: _comp_metrics(lines) for name, lines in comps.items()}
+
+    # trip counts from loop conditions
+    def trips_of(cond_name: str) -> int:
+        consts = []
+        for ln in comps.get(cond_name, []):
+            consts += [int(x) for x in _CONST_RE.findall(ln)]
+        return max(consts) if consts else 1
+
+    # entry = computation never referenced as body/cond/call
+    referenced = set()
+    for m in metrics.values():
+        for cond, body in m["whiles"]:
+            referenced.add(cond)
+            referenced.add(body)
+        referenced.update(m["calls"])
+    entries = [n for n in comps if n not in referenced]
+
+    mult = defaultdict(int)
+    stack = [(e, 1) for e in entries]
+    while stack:
+        name, m = stack.pop()
+        if name not in metrics:
+            continue
+        mult[name] += m
+        info = metrics[name]
+        for cond, body in info["whiles"]:
+            t = trips_of(cond)
+            stack.append((body, m * t))
+            stack.append((cond, m * (t + 1)))
+        for callee, count in info["calls"].items():
+            stack.append((callee, m * count))
+
+    coll_b = defaultdict(int)
+    coll_n = defaultdict(int)
+    hbm = 0
+    flops = 0
+    for name, m in mult.items():
+        info = metrics.get(name)
+        if not info:
+            continue
+        for c in _COLLECTIVES:
+            coll_b[c] += info["coll_b"].get(c, 0) * m
+            coll_n[c] += info["coll_n"].get(c, 0) * m
+        hbm += info["hbm"] * m
+        flops += info["flops"] * m
+
+    return {
+        "collective_bytes": {c: int(coll_b[c]) for c in _COLLECTIVES},
+        "collective_counts": {c: int(coll_n[c]) for c in _COLLECTIVES},
+        "collective_total_bytes": int(sum(coll_b.values())),
+        "dot_flops": int(flops),
+        "hbm_bytes_proxy": int(hbm),
+        "n_computations": len(comps),
+        "n_entries": len(entries),
+    }

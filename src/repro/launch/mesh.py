@@ -1,0 +1,32 @@
+"""Production mesh definitions.
+
+TPU v5e target: one pod = 256 chips as a (data=16, model=16) mesh;
+multi-pod = 2 pods = 512 chips with a leading "pod" axis used for outer
+data parallelism (the data-center network axis).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so that
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS before any jax initialization and only then builds the mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "data_axes", "MESH_SHAPES"]
+
+MESH_SHAPES = {
+    "pod": ((16, 16), ("data", "model")),
+    "multipod": ((2, 16, 16), ("pod", "data", "model")),
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape, axes = MESH_SHAPES["multipod" if multi_pod else "pod"]
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The composite batch-parallel axis spec for this mesh."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)

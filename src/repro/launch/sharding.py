@@ -1,0 +1,209 @@
+"""Sharding rules: map param/cache/batch pytrees to PartitionSpecs.
+
+Rule-based on leaf names, matched from the *right* of the shape so that
+scanned layer stacks (leading L dim) and jamba sub-dicts need no special
+cases.  Every rule passes through the **divisibility guard**: a dimension
+that does not divide its mesh axis size is replicated on that axis instead
+— this is what lets minicpm's 36 heads, mixtral's 8 experts, and
+whisper's 6 heads lower cleanly on a 16-way model axis (DESIGN.md §5.2).
+
+Baseline layout (hillclimbs iterate from here; see EXPERIMENTS.md §Perf):
+  embed / lm_head       (V_pad, d)     -> ("model", None)   vocab-sharded
+  attn in-projections   (d, H*hd)      -> (None, "model")   head-sharded
+  attn out-projection   (H*hd, d)      -> ("model", None)
+  FFN in (gate/up)      (d, ff)        -> (None, "model")
+  FFN out (down)        (ff, d)        -> ("model", None)
+  MoE experts           (E, d, ff)     -> tensor-parallel over ff (always
+                                          divisible); expert-parallel is a
+                                          recorded hillclimb variant
+  mamba in_proj/out_proj               -> like FFN
+  norms / scalars / router             -> replicated
+
+``fsdp=True`` additionally shards the largest still-replicated dim of
+every >=2D param over "data" (ZeRO-3 style) — required to fit optimizer
+states of the >=33B architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "train_state_specs",
+           "logits_spec"]
+
+# leaf name -> spec for the LAST TWO dims (everything left of them: None)
+_RULES_2D = {
+    "embed": ("model", None),
+    "lm_head": ("model", None),
+    "wq": (None, "model"), "wk": (None, "model"), "wv": (None, "model"),
+    "wo": ("model", None),
+    "wq_a": (None, "model"), "wq_b": (None, "model"),
+    "wkv_a": (None, "model"), "wkv_b": (None, "model"),
+    "w_gate": (None, "model"), "w_up": (None, "model"),
+    "w_down": ("model", None),
+    "in_proj": (None, "model"),
+    "out_proj": ("model", None),
+    "router": (None, None),
+    "conv_w": (None, None),
+}
+
+_EXPERT_PARALLEL_RULES = {
+    # hillclimb variant: shard the expert dim (dim -3) over "model"
+    "w_gate": ("model", None, None),
+    "w_up": ("model", None, None),
+    "w_down": ("model", None, None),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _guard(shape, spec, mesh) -> P:
+    """Replicate any dim that does not divide its mesh axis."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+        elif isinstance(ax, tuple):
+            total = int(np.prod([sizes[a] for a in ax]))
+            out.append(ax if dim % total == 0 else None)
+        else:
+            out.append(ax if dim % sizes[ax] == 0 else None)
+    return P(*out)
+
+
+def _spec_for(name: str, shape, mesh, fsdp: bool,
+              expert_parallel: bool) -> P:
+    nd = len(shape)
+    if nd == 0 or name in ("A_log", "D", "dt_bias") or \
+       name.startswith(("ln", "norm", "q_norm", "k_norm", "q_a_norm",
+                        "kv_a_norm", "conv_b")):
+        return P()
+    if expert_parallel and name in _EXPERT_PARALLEL_RULES and nd >= 3:
+        rule = _EXPERT_PARALLEL_RULES[name]
+        spec = (None,) * (nd - 3) + rule
+    elif name in _RULES_2D and nd >= 2:
+        rule = _RULES_2D[name]
+        spec = (None,) * (nd - 2) + rule
+    elif nd >= 2:
+        spec = (None,) * (nd - 2) + (None, "model")
+    else:
+        return P()
+    spec = list(_guard(shape, spec, mesh))
+    if fsdp and "data" not in spec:
+        # shard the largest still-replicated dim over "data"
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        cand = [(shape[i], i) for i in range(nd)
+                if spec[i] is None and shape[i] % sizes["data"] == 0]
+        if cand:
+            _, i = max(cand)
+            spec[i] = "data"
+    return P(*spec)
+
+
+def param_specs(shapes, mesh, *, fsdp: bool = False,
+                expert_parallel: bool = False):
+    """shapes: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    def f(path, leaf):
+        return _spec_for(_leaf_name(path), leaf.shape, mesh, fsdp,
+                         expert_parallel)
+    return jax.tree_util.tree_map_with_path(f, shapes)
+
+
+def train_state_specs(state_shapes, pspecs):
+    """TrainState(params, AdamWState(mu, nu, step), step) — moments follow
+    the param specs."""
+    from repro.optim import TrainState, AdamWState
+    return TrainState(
+        params=pspecs,
+        opt=AdamWState(mu=pspecs, nu=pspecs,
+                       step=P()),
+        step=P(),
+    )
+
+
+def batch_specs(batch_shapes, mesh):
+    """Shard the leading (batch) dim over (pod?, data) where divisible."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def f(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        spec = [None] * leaf.ndim
+        spec[0] = dp
+        return _guard(leaf.shape, spec, mesh)
+    return jax.tree_util.tree_map_with_path(f, batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh, *, seq_shard: bool = False):
+    """KV/SSM cache sharding.  Leaves are recognized by name:
+      k/v     (L, b, s, kv, hd): batch over (pod?,data), kv heads over model
+      c_kv    (L, b, s, r):      batch over dp, r over model
+      k_rope  (L, b, s, dr):     batch over dp
+      conv    (L, b, w, cdim):   batch over dp, cdim over model
+      state   (L, b, nh, hd, n): batch over dp, nh over model
+    ``seq_shard=True`` (long_500k, batch=1): the cache *sequence* dim is
+    sharded over "data" instead of the unshardable unit batch."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def f(path, leaf):
+        name = _leaf_name(path)
+        nd = leaf.ndim
+        if nd == 0:
+            return P()
+        spec = [None] * nd
+        if name in ("k", "v"):
+            b_dim, s_dim, kv_dim, hd_dim = nd - 4, nd - 3, nd - 2, nd - 1
+            if seq_shard:
+                spec[s_dim] = "data"
+            else:
+                spec[b_dim] = dp
+            # model-axis cascade: kv heads -> seq -> head_dim.  GQA kv
+            # counts (8, 36) often don't divide a 16-way axis; the cache
+            # SEQ dim always does, and a seq-sharded cache lowers to a
+            # distributed-softmax decode whose collectives are O(b*h*hd)
+            # stats instead of O(cache) gathers (§Perf iteration 3 —
+            # head_dim sharding forced a full-score all-reduce, and
+            # replicating the cache blew HBM).
+            for d_try in (kv_dim, s_dim, hd_dim):
+                if spec[d_try] is None and \
+                   leaf.shape[d_try] % sizes["model"] == 0:
+                    spec[d_try] = "model"
+                    break
+        elif name in ("c_kv", "k_rope"):
+            b_dim, s_dim = nd - 3, nd - 2
+            if seq_shard:
+                spec[s_dim] = "data"
+            else:
+                spec[b_dim] = dp
+            if name == "c_kv":
+                spec[nd - 1] = "model"
+        elif name == "conv":
+            if not seq_shard:
+                spec[nd - 3] = dp
+            spec[nd - 1] = "model"
+        elif name == "state":
+            if not seq_shard:
+                spec[nd - 4] = dp
+            spec[nd - 3] = "model"
+        return _guard(leaf.shape, spec, mesh)
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)
+
+
+def logits_spec(mesh, batch: int):
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = int(np.prod([sizes[a] for a in dp]))
+    return P(dp if batch % total == 0 else None, None, "model")

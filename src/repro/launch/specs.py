@@ -1,0 +1,268 @@
+"""Per-(architecture x input-shape) dry-run step builders.
+
+``build_dryrun(arch, shape, mesh, ...)`` returns
+    (fn, args, in_shardings, out_shardings, meta)
+where every element of ``args`` is a ShapeDtypeStruct — nothing is
+allocated; ``jax.jit(fn, in_shardings=..., out_shardings=...).lower(*args)``
+is the whole dry-run.
+
+Mode mapping (DESIGN.md §5):
+  train_4k    -> train_step (loss + grads + AdamW), grad accumulation and
+                 FSDP per the per-arch defaults below
+  prefill_32k -> model.prefill (fills the KV/SSM caches)
+  decode_32k  -> model.decode_step, one token against a seq_len cache
+  long_500k   -> model.decode_step against the arch's long-context cache:
+                 SSM state (mamba2), full KV (jamba attn layers), SWA ring
+                 (mixtral), sliding-window ring (dense/VLM), compressed MLA
+                 latent (deepseek-v2).  whisper: train_4k only (skips
+                 recorded in its config docstring / DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.data.shapes import INPUT_SHAPES
+from repro.models import get_config, model, encdec
+from repro.optim import (AdamWConfig, make_train_step, init_train_state)
+from . import sharding as sh
+from .mesh import data_axes
+
+__all__ = ["build_dryrun", "dryrun_pairs", "arch_defaults", "SKIPS"]
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+# recorded skips (see DESIGN.md §5): whisper is train-only
+SKIPS = {
+    ("whisper-tiny", "prefill_32k"): "encoder fixed at 1500 frames",
+    ("whisper-tiny", "decode_32k"): "decoder context is 448 tokens",
+    ("whisper-tiny", "long_500k"): "no sub-quadratic variant in family",
+}
+
+
+def arch_defaults(arch: str, shape: str) -> dict:
+    """Baseline accumulation / FSDP knobs (iterated in §Perf)."""
+    cfg = get_config(arch)
+    big = cfg.n_params() >= 20e9
+    # ">=20B params never fit one model-parallel rank on v5e": shard
+    # weights over the data axis too, for EVERY shape.  For decode this
+    # trades a per-token param all-gather for fitting at all (§Perf it. 4:
+    # deepseek-coder decode 23.5 GB -> 12.7 GB at +7.8 GB/token gather).
+    d = {"fsdp": big, "accum": 1, "expert_parallel": False}
+    if shape == "train_4k" and cfg.arch_type != "encdec":
+        # accumulation keeps per-microbatch activations + CE buffers inside
+        # the v5e 16 GB budget (validated against memory_analysis; §Perf)
+        d["accum"] = 8 if big else 4
+    return d
+
+
+def dryrun_pairs():
+    """All (arch, shape) pairs minus recorded skips."""
+    from repro.configs import ASSIGNED
+    out = []
+    for arch in ASSIGNED:
+        for shape in INPUT_SHAPES:
+            if (arch, shape) not in SKIPS:
+                out.append((arch, shape))
+    return out
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class _Batch(NamedTuple):
+    tokens: object
+    targets: object
+    mask: object
+
+
+def _train_batch_shapes(cfg, B, S):
+    """ShapeDtypeStructs for the training batch (incl. stub frontends)."""
+    extras = {}
+    if cfg.family == "vlm":
+        text = S - cfg.n_patches
+        batch = _Batch(_sds((B, text), jnp.int32), _sds((B, text), jnp.int32),
+                       _sds((B, text), jnp.float32))
+        extras["patches"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                 COMPUTE_DTYPE)
+    elif cfg.arch_type == "encdec":
+        tgt = 448                      # whisper's natural decoder length
+        batch = _Batch(_sds((B, tgt), jnp.int32), _sds((B, tgt), jnp.int32),
+                       _sds((B, tgt), jnp.float32))
+        extras["frames"] = _sds((B, cfg.n_frames, cfg.d_model),
+                                COMPUTE_DTYPE)
+    else:
+        batch = _Batch(_sds((B, S), jnp.int32), _sds((B, S), jnp.int32),
+                       _sds((B, S), jnp.float32))
+    return batch, extras
+
+
+def _decode_cache_len(cfg, shape_name: str, S: int):
+    """(cache_len, ring, window) for the serve-step cache."""
+    if shape_name == "long_500k":
+        if cfg.family in ("ssm",):
+            return 1, False, None          # state only
+        if cfg.attn_period:                # jamba: full cache on attn layers
+            return S, False, None
+        if cfg.sliding_window:             # mixtral SWA
+            return cfg.sliding_window, True, cfg.sliding_window
+        if cfg.use_mla:                    # compressed latent: full length
+            return S, False, None
+        w = cfg.long_context_window or 8192
+        return w, True, w                  # sliding-window decode variant
+    # decode_32k
+    if cfg.family == "ssm":
+        return 1, False, None
+    if cfg.sliding_window:
+        return cfg.sliding_window, True, cfg.sliding_window
+    return S, False, None
+
+
+def build_dryrun(arch: str, shape_name: str, mesh, *, fsdp=None, accum=None,
+                 expert_parallel=None, remat=True, ce_chunk=None,
+                 accum_dtype="float32"):
+    cfg = get_config(arch)
+    shp = INPUT_SHAPES[shape_name]
+    defaults = arch_defaults(arch, shape_name)
+    fsdp = defaults["fsdp"] if fsdp is None else fsdp
+    accum = defaults["accum"] if accum is None else accum
+    expert_parallel = (defaults["expert_parallel"] if expert_parallel is None
+                       else expert_parallel)
+    B, S = shp.global_batch, shp.seq_len
+    key = jax.random.PRNGKey(0)
+    # install activation-sharding constraints (read at trace time)
+    from repro.models import shardctx
+    shardctx.set_ctx(mesh)
+    meta = {"arch": arch, "shape": shape_name, "mode": shp.mode,
+            "fsdp": fsdp, "accum": accum, "expert_parallel": expert_parallel,
+            "global_batch": B, "seq_len": S}
+
+    if cfg.arch_type == "encdec":
+        return _build_encdec(cfg, shp, mesh, fsdp, accum, expert_parallel,
+                             meta, remat)
+
+    # --- parameter / state shapes (abstract) ---
+    p_shapes = jax.eval_shape(
+        lambda k: model.init_params(cfg, k, COMPUTE_DTYPE), key)
+    pspecs = sh.param_specs(p_shapes, mesh, fsdp=fsdp,
+                            expert_parallel=expert_parallel)
+
+    if shp.mode == "train":
+        opt_cfg = AdamWConfig(moment_dtype="bfloat16" if fsdp else "float32")
+        batch, extras = _train_batch_shapes(cfg, B, S)
+
+        lspec = sh.logits_spec(mesh, B // max(accum, 1))
+        dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        mspec = P(dp) if accum > 1 else None
+        if cfg.family == "vlm":
+            def loss(params, b):
+                return model.loss_fn(cfg, params, _Batch(*b[:3]),
+                                     embeds_prefix=b[3], remat=remat,
+                                     logit_sharding=lspec,
+                                     ce_chunk=ce_chunk)
+            step = make_train_step(loss, opt_cfg, schedule_kind=cfg.schedule,
+                                   accum_steps=accum, microbatch_spec=mspec,
+                                   accum_dtype=accum_dtype)
+            args_batch = (*batch, extras["patches"])
+        else:
+            def loss(params, b):
+                return model.loss_fn(cfg, params, _Batch(*b), remat=remat,
+                                     logit_sharding=lspec,
+                                     ce_chunk=ce_chunk)
+            step = make_train_step(loss, opt_cfg, schedule_kind=cfg.schedule,
+                                   accum_steps=accum, microbatch_spec=mspec,
+                                   accum_dtype=accum_dtype)
+            args_batch = tuple(batch)
+
+        state_shapes = jax.eval_shape(
+            lambda k: init_train_state(
+                model.init_params(cfg, k, COMPUTE_DTYPE), opt_cfg), key)
+        sspecs = sh.train_state_specs(state_shapes, pspecs)
+        bspecs = sh.batch_specs(args_batch, mesh)
+        fn = step
+        args = (state_shapes, args_batch)
+        in_specs = (sspecs, bspecs)
+        out_specs = (sspecs, None)
+        return fn, args, in_specs, out_specs, meta
+
+    if shp.mode == "prefill":
+        cache_len = S if cfg.family != "ssm" else 1
+        if cfg.sliding_window:
+            cache_len = cfg.sliding_window
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(cfg, B, cache_len, COMPUTE_DTYPE))
+        cspecs = sh.cache_specs(cache_shapes, mesh)
+        if cfg.family == "vlm":
+            text = S - cfg.n_patches
+            toks = _sds((B, text), jnp.int32)
+            patches = _sds((B, cfg.n_patches, cfg.d_model), COMPUTE_DTYPE)
+
+            def fn(params, caches, tokens, pt):
+                return model.prefill(cfg, params, caches, tokens,
+                                     embeds_prefix=pt)
+            args = (p_shapes, cache_shapes, toks, patches)
+            in_specs = (pspecs, cspecs, sh.batch_specs(toks, mesh),
+                        sh.batch_specs(patches, mesh))
+        else:
+            toks = _sds((B, S), jnp.int32)
+
+            def fn(params, caches, tokens):
+                return model.prefill(cfg, params, caches, tokens)
+            args = (p_shapes, cache_shapes, toks)
+            in_specs = (pspecs, cspecs, sh.batch_specs(toks, mesh))
+        out_specs = (sh.logits_spec(mesh, B), cspecs)
+        return fn, args, in_specs, out_specs, meta
+
+    # --- decode ---
+    cache_len, ring, window = _decode_cache_len(cfg, shape_name, S)
+    seq_shard = (B == 1)                    # long_500k: shard cache seq
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(cfg, B, cache_len, COMPUTE_DTYPE))
+    cspecs = sh.cache_specs(cache_shapes, mesh, seq_shard=seq_shard)
+    toks = _sds((B, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+
+    def fn(params, caches, tokens, p):
+        return model.decode_step(cfg, params, caches, tokens, p,
+                                 window=window, ring=ring)
+    args = (p_shapes, cache_shapes, toks, pos)
+    in_specs = (pspecs, cspecs, sh.batch_specs(toks, mesh), P())
+    out_specs = (sh.logits_spec(mesh, B), cspecs)
+    meta.update(cache_len=cache_len, ring=ring, window=window)
+    return fn, args, in_specs, out_specs, meta
+
+
+def _build_encdec(cfg, shp, mesh, fsdp, accum, expert_parallel, meta, remat):
+    assert shp.mode == "train", "whisper: train_4k only (see SKIPS)"
+    key = jax.random.PRNGKey(0)
+    opt_cfg = AdamWConfig()
+    B = shp.global_batch
+    batch, extras = _train_batch_shapes(cfg, B, shp.seq_len)
+    frames = extras["frames"]
+
+    def loss(params, b):
+        return encdec.encdec_loss(cfg, params, b[3], _Batch(*b[:3]),
+                                  remat=remat)
+
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    step = make_train_step(loss, opt_cfg, accum_steps=accum,
+                           microbatch_spec=P(dp) if accum > 1 else None)
+    p_shapes = jax.eval_shape(
+        lambda k: encdec.encdec_init(cfg, k, COMPUTE_DTYPE), key)
+    pspecs = sh.param_specs(p_shapes, mesh, fsdp=fsdp)
+    state_shapes = jax.eval_shape(
+        lambda k: init_train_state(
+            encdec.encdec_init(cfg, k, COMPUTE_DTYPE), opt_cfg), key)
+    sspecs = sh.train_state_specs(state_shapes, pspecs)
+    args_batch = (*batch, frames)
+    bspecs = sh.batch_specs(args_batch, mesh)
+    return (step, (state_shapes, args_batch), (sspecs, bspecs),
+            (sspecs, None), meta)

@@ -1,0 +1,88 @@
+"""LM training driver (single-host; the production meshes are exercised by
+dryrun.py).  Used by examples/train_lm.py for the ~100M-scale run.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --layers 4 --d-model 512 --steps 300 --batch 8 --seq 256
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from repro.models import get_config, model
+from repro.optim import AdamWConfig, make_train_step, init_train_state
+from repro.data import TokenStream
+from repro.checkpoint import save_checkpoint
+
+
+def train(arch: str, *, layers=None, d_model=None, vocab=None, steps=300,
+          batch=8, seq=256, lr=3e-3, accum=1, ckpt_dir=None, log_every=20,
+          seed=0):
+    cfg = get_config(arch)
+    overrides = {}
+    if layers:
+        overrides["n_layers"] = layers
+    if d_model:
+        overrides["d_model"] = d_model
+        overrides["n_heads"] = max(4, d_model // 64)
+        overrides["n_kv_heads"] = max(2, d_model // 128)
+        overrides["d_ff"] = d_model * 4 if cfg.d_ff else 0
+    if vocab:
+        overrides["vocab_size"] = vocab
+    cfg = cfg.reduced(**overrides) if overrides else cfg
+    n = cfg.n_params()
+    print(f"# {arch}: {cfg.n_layers}L d={cfg.d_model} ~{n/1e6:.1f}M params "
+          f"(family={cfg.family}, schedule={cfg.schedule})")
+
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_cfg = AdamWConfig(weight_decay=0.01)
+    step_fn = jax.jit(make_train_step(
+        lambda p, b: model.loss_fn(cfg, p, b), opt_cfg,
+        schedule_kind=cfg.schedule, peak_lr=lr, warmup=max(20, steps // 20),
+        total_steps=steps, accum_steps=accum))
+    state = init_train_state(params, opt_cfg)
+    ts = TokenStream(cfg.vocab_size, batch=batch, seq_len=seq, seed=seed)
+
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        state, out = step_fn(state, ts.batch_at(i))
+        losses.append(float(out["loss"]))
+        if i % log_every == 0 or i == steps - 1:
+            tok_s = batch * seq * (i + 1) / (time.time() - t0)
+            print(f"step {i:5d} loss {losses[-1]:.4f} "
+                  f"lr {float(out['lr']):.2e} "
+                  f"gnorm {float(out['grad_norm']):.3f} tok/s {tok_s:.0f}",
+                  flush=True)
+    if ckpt_dir:
+        path = save_checkpoint(ckpt_dir, steps, state.params)
+        print(f"# checkpoint: {path}")
+    return np.asarray(losses)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--layers", type=int)
+    ap.add_argument("--d-model", type=int)
+    ap.add_argument("--vocab", type=int)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir")
+    a = ap.parse_args()
+    losses = train(a.arch, layers=a.layers, d_model=a.d_model, vocab=a.vocab,
+                   steps=a.steps, batch=a.batch, seq=a.seq, lr=a.lr,
+                   accum=a.accum, ckpt_dir=a.ckpt_dir)
+    print(f"# first10 {losses[:10].mean():.4f} -> last10 "
+          f"{losses[-10:].mean():.4f}")
+
+
+if __name__ == "__main__":
+    main()

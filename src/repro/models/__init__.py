@@ -1,0 +1,9 @@
+"""Model substrate: configs, layers, decoder LM, encoder-decoder."""
+
+from .config import (ArchConfig, register, get_config, list_archs,
+                     padded_vocab)
+from . import model, encdec, attention, blocks, moe, ssm, mlp, common
+
+__all__ = ["ArchConfig", "register", "get_config", "list_archs",
+           "padded_vocab", "model", "encdec", "attention", "blocks",
+           "moe", "ssm", "mlp", "common"]

@@ -1,0 +1,311 @@
+"""Attention layers: GQA/MHA (+ qk_norm, sliding window) and MLA
+(DeepSeek-V2 multi-head latent attention with compressed KV cache).
+
+Two entry modes per layer:
+  * full-sequence (train / prefill): causal self-attention over x,
+  * decode: one new token against a KV cache (`cache` dict), returning the
+    updated cache.  GQA caches (k, v) per kv-head; MLA caches the
+    *compressed* latent (kv_lora + shared rope key) — the memory saving
+    that motivates MLA shows up directly in the roofline bytes term.
+
+The inner soft-max attention is `sdpa` (pure jnp, the oracle); the Pallas
+flash kernel in `repro.kernels.flash_attention` implements the same
+contract and is swapped in via ``use_flash`` where the hot path matters.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rmsnorm, rmsnorm_init, apply_rope
+from .shardctx import constrain_bshd, constrain_bsd
+
+__all__ = ["attn_init", "attn_apply", "init_kv_cache", "sdpa"]
+
+_NEG = -1e30
+
+
+def sdpa(q, k, v, *, causal: bool, window: Optional[int] = None,
+         q_offset=0, kv_len=None):
+    """Scaled dot-product attention with GQA head grouping.
+
+    q: (b, s, h, dq)   k: (b, t, kv, dq)   v: (b, t, kv, dv)
+    ``q_offset``: absolute position of q[0] (decode: cache length so far).
+    ``kv_len``: number of valid cache slots (decode with fixed-size cache).
+    """
+    b, s, h, dq = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, dq)
+    # keep operands in their storage dtype and accumulate f32 (MXU
+    # semantics); upcasting k/v here made XLA materialize an f32 copy of
+    # the ENTIRE stacked KV cache (5.6 GiB/layer-stack at 32k — §Perf)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) \
+        / jnp.sqrt(dq).astype(jnp.float32)
+    qpos = q_offset + jnp.arange(s)[:, None]          # (s, 1)
+    kpos = jnp.arange(t)[None, :]                     # (1, t)
+    mask = jnp.ones((s, t), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    scores = jnp.where(mask[None, None, None], scores, _NEG)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
+
+
+_CHUNK_THRESHOLD = 2048   # use q-chunked attention at/above this length
+_Q_CHUNK = 1024
+
+
+def chunked_sdpa(q, k, v, *, causal: bool, window: Optional[int] = None,
+                 chunk: int = _Q_CHUNK, q_offset: int = 0, kv_len=None):
+    """Memory-bounded attention: lax.scan over query chunks with remat.
+
+    This is the XLA-expressible analogue of the Pallas flash kernel
+    (repro.kernels.flash_attention): per step only a (chunk, t) score tile
+    exists, so prefill_32k drops from O(s^2) to O(s*chunk) live memory.
+    On real TPU the Pallas kernel replaces this; the roofline terms are the
+    same (same FLOPs, same HBM traffic), which is why the dry-run uses it.
+    """
+    b, s, h, dq = q.shape
+    if s % chunk:
+        pad = chunk - s % chunk
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = chunked_sdpa(qp, k, v, causal=causal, window=window,
+                           chunk=chunk, q_offset=q_offset, kv_len=kv_len)
+        return out[:, :s]
+    nc = s // chunk
+    qc = q.reshape(b, nc, chunk, h, dq).transpose(1, 0, 2, 3, 4)
+
+    def body(_, xs):
+        i, qi = xs
+        out = sdpa(qi, k, v, causal=causal, window=window,
+                   q_offset=q_offset + i * chunk, kv_len=kv_len)
+        return None, out
+
+    _, outs = jax.lax.scan(jax.checkpoint(body), None,
+                           (jnp.arange(nc), qc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, -1)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def _gqa_init(cfg, key, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _gqa_apply(cfg, p, x, positions, cache=None, window=None, causal=True,
+               ring=False):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, kv, hd)
+    v = (x @ p["wv"]).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = constrain_bshd(apply_rope(q, positions, cfg.rope_theta))
+    k = constrain_bshd(apply_rope(k, positions, cfg.rope_theta))
+    v = constrain_bshd(v)
+
+    attend = (chunked_sdpa if s >= _CHUNK_THRESHOLD else sdpa)
+    if cache is None:
+        out = attend(q, k, v, causal=causal, window=window)
+    elif s > cache["k"].shape[1]:
+        # prefill longer than a window-sized cache (SWA): attend in-flight
+        # over the full sequence, then keep only the trailing window
+        clen = cache["k"].shape[1]
+        out = attend(q, k, v, causal=causal, window=window)
+        cache = {"k": k[:, -clen:], "v": v[:, -clen:],
+                 "pos": cache["pos"] + s}
+    else:
+        pos = cache["pos"]
+        slot = pos % cache["k"].shape[1]  # ring buffer for windowed caches
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        cache = {"k": ck, "v": cv, "pos": pos + s}
+        if ring:
+            # windowed decode on a full ring: every slot is a valid
+            # in-window key (window == cache length by construction)
+            out = sdpa(q, ck, cv, causal=False, window=None)
+        else:
+            # cache slot index == absolute position: causal masking by
+            # absolute query position
+            out = attend(q, ck, cv, causal=True, window=None,
+                         q_offset=pos, kv_len=pos + s)
+    out = constrain_bsd(constrain_bshd(out).reshape(b, s, h * hd) @ p["wo"])
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+def _mla_init(cfg, key, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    qh = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, cfg.q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], cfg.q_lora_rank, h * qh, dtype),
+        # kv down-projection: latent + shared rope key
+        "wkv_a": dense_init(ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_dim, dtype),
+        "wkv_b": dense_init(ks[3], cfg.kv_lora_rank,
+                            h * (cfg.qk_nope_dim + cfg.v_head_dim), dtype),
+        "wo": dense_init(ks[4], h * cfg.v_head_dim, d, dtype),
+        "q_a_norm": rmsnorm_init(cfg.q_lora_rank, dtype),
+        "kv_a_norm": rmsnorm_init(cfg.kv_lora_rank, dtype),
+    }
+
+
+def _mla_attend(cfg, p, q_nope, q_rope, c_kv, k_rope, *, causal, q_offset=0,
+                kv_len=None):
+    """Attention over the compressed latent cache.
+
+    q_nope: (b,s,h,dn)  q_rope: (b,s,h,dr)  c_kv: (b,t,r)  k_rope: (b,t,dr)
+    """
+    b, s, h, dn = q_nope.shape
+    t = c_kv.shape[1]
+    r = cfg.kv_lora_rank
+    dv = cfg.v_head_dim
+    wkv_b = p["wkv_b"].reshape(r, h, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+    # absorb: score_nope = q_nope . (c_kv W_uk) == (q_nope W_uk^T) . c_kv
+    # (storage-dtype operands + f32 accumulation — see sdpa)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk,
+                       preferred_element_type=jnp.float32)
+    scale = 1.0 / jnp.sqrt(dn + cfg.qk_rope_dim)
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshd,btd->bhst", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    scores = jnp.where(mask[None, None], scores, _NEG)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", w.astype(c_kv.dtype), c_kv,
+                       preferred_element_type=jnp.float32)
+    out = jnp.einsum("bshr,rhd->bshd", o_lat.astype(w_uv.dtype), w_uv,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q_nope.dtype)  # (b, s, h, dv)
+
+
+def _mla_attend_chunked(cfg, p, q_nope, q_rope, c_kv, k_rope, *, causal,
+                        q_offset=0, kv_len=None, chunk=_Q_CHUNK):
+    """q-chunked MLA attention (same rationale as chunked_sdpa)."""
+    b, s, h, dn = q_nope.shape
+    if s % chunk:
+        pad = chunk - s % chunk
+        qn = jnp.pad(q_nope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qr = jnp.pad(q_rope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = _mla_attend_chunked(cfg, p, qn, qr, c_kv, k_rope,
+                                  causal=causal, q_offset=q_offset,
+                                  kv_len=kv_len, chunk=chunk)
+        return out[:, :s]
+    nc = s // chunk
+    qn = q_nope.reshape(b, nc, chunk, h, -1).transpose(1, 0, 2, 3, 4)
+    qr = q_rope.reshape(b, nc, chunk, h, -1).transpose(1, 0, 2, 3, 4)
+
+    def body(_, xs):
+        i, qni, qri = xs
+        out = _mla_attend(cfg, p, qni, qri, c_kv, k_rope, causal=causal,
+                          q_offset=q_offset + i * chunk, kv_len=kv_len)
+        return None, out
+
+    _, outs = jax.lax.scan(jax.checkpoint(body), None,
+                           (jnp.arange(nc), qn, qr))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, -1)
+
+
+def _mla_apply(cfg, p, x, positions, cache=None, window=None):
+    del window  # deepseek-v2 MLA is full-attention
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rmsnorm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = constrain_bshd(q[..., :dn]), q[..., dn:]
+    q_rope = constrain_bshd(apply_rope(q_rope, positions, cfg.rope_theta))
+
+    kv_a = x @ p["wkv_a"]
+    c_kv = rmsnorm(kv_a[..., :cfg.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv_a[..., None, cfg.kv_lora_rank:], positions,
+                        cfg.rope_theta)[..., 0, :]
+
+    mla_attend = (_mla_attend_chunked if s >= _CHUNK_THRESHOLD
+                  else _mla_attend)
+    if cache is None:
+        out = mla_attend(cfg, p, q_nope, q_rope, c_kv, k_rope, causal=True)
+    else:
+        pos = cache["pos"]
+        cc = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, pos, 1)
+        cr = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, pos, 1)
+        cache = {"c_kv": cc, "k_rope": cr, "pos": pos + s}
+        out = mla_attend(cfg, p, q_nope, q_rope, cc, cr, causal=True,
+                         q_offset=pos, kv_len=pos + s)
+    out = constrain_bsd(
+        constrain_bshd(out).reshape(b, s, h * cfg.v_head_dim) @ p["wo"])
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def attn_init(cfg, key, dtype):
+    return _mla_init(cfg, key, dtype) if cfg.use_mla else _gqa_init(cfg, key, dtype)
+
+
+def attn_apply(cfg, p, x, positions, cache=None, window=None, causal=True,
+               ring=False):
+    """Returns (out, new_cache).  ``window`` overrides cfg.sliding_window
+    (used by the long_500k sliding-decode variant).  ``ring``: the cache is
+    a fully-wrapped ring buffer (windowed decode) — attend every slot."""
+    w = window if window is not None else cfg.sliding_window
+    if cfg.use_mla:
+        return _mla_apply(cfg, p, x, positions, cache=cache)
+    return _gqa_apply(cfg, p, x, positions, cache=cache, window=w,
+                      causal=causal, ring=ring)
+
+
+def init_kv_cache(cfg, batch: int, cache_len: int, dtype):
+    """Per-layer cache pytree.  MLA caches the compressed latent."""
+    if cfg.use_mla:
+        return {
+            "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,185 @@
+"""Transformer / Mamba / hybrid block assembly.
+
+A *segment* is a run of identical layers that can be `lax.scan`-ned with
+stacked parameters (compile-time is O(1) in depth — essential for the
+62/72-layer dry-runs on a single-core CPU).  Heterogeneous stacks are
+expressed as a few segments:
+
+  dense/vlm      [("attn",  "dense", L)]
+  mixtral        [("attn",  "moe",   L)]
+  deepseek-v2    [("attn",  "dense", 1), ("attn", "moe", L-1)]
+  mamba2         [("mamba", None,    L)]
+  jamba          [("jamba_block", None, L // attn_period)]   (1 attn + 7 mamba
+                  per super-block, MoE on odd sub-layers)
+
+Every block is pre-norm residual.  `*_apply` returns (x, cache, aux) where
+aux accumulates MoE load-balance losses.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import rmsnorm, rmsnorm_init
+from .attention import attn_init, attn_apply, init_kv_cache
+from .mlp import ffn_init, ffn_apply
+from .moe import moe_init, moe_apply
+from .ssm import ssm_init, ssm_apply, init_ssm_cache
+
+__all__ = ["segments_for", "segment_init", "segment_apply", "segment_cache"]
+
+
+def segments_for(cfg):
+    """The segment plan [(kind, ffn_kind, n_layers), ...] for an arch."""
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        return [("mamba", None, L)]
+    if cfg.attn_period:                      # jamba-style hybrid
+        assert L % cfg.attn_period == 0
+        return [("jamba_block", None, L // cfg.attn_period)]
+    if cfg.is_moe:
+        segs = []
+        if cfg.first_dense:
+            segs.append(("attn", "dense", cfg.first_dense))
+        segs.append(("attn", "moe", L - cfg.first_dense))
+        return segs
+    return [("attn", "dense", L)]
+
+
+# --- single-layer init/apply ------------------------------------------------
+
+def _layer_init(cfg, key, dtype, kind, ffn_kind):
+    ks = jax.random.split(key, 4)
+    p = {}
+    if kind == "attn":
+        p["ln1"] = rmsnorm_init(cfg.d_model, dtype)
+        p["attn"] = attn_init(cfg, ks[0], dtype)
+    elif kind == "mamba":
+        p["ln1"] = rmsnorm_init(cfg.d_model, dtype)
+        p["mamba"] = ssm_init(cfg, ks[0], dtype)
+    if ffn_kind == "dense":
+        p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["ffn"] = ffn_init(cfg, ks[1], dtype)
+    elif ffn_kind == "moe":
+        p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["moe"] = moe_init(cfg, ks[1], dtype)
+    return p
+
+
+def _layer_apply(cfg, p, x, positions, cache, window, kind, ffn_kind,
+                 ring=False):
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        h, cache = attn_apply(cfg, p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                              positions, cache=cache, window=window,
+                              ring=ring)
+        x = x + h
+    elif kind == "mamba":
+        h, cache = ssm_apply(cfg, p["mamba"],
+                             rmsnorm(x, p["ln1"], cfg.norm_eps), cache=cache)
+        x = x + h
+    if ffn_kind == "dense":
+        x = x + ffn_apply(p["ffn"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    elif ffn_kind == "moe":
+        h, aux = moe_apply(cfg, p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+        x = x + h
+    return x, cache, aux
+
+
+def _layer_cache(cfg, batch, cache_len, dtype, kind):
+    if kind == "attn":
+        return init_kv_cache(cfg, batch, cache_len, dtype)
+    if kind == "mamba":
+        return init_ssm_cache(cfg, batch, dtype)
+    return None
+
+
+# --- jamba super-block (1 attn + (period-1) mamba; MoE on odd sub-layers) ---
+
+def _jamba_ffn_kind(i: int) -> str:
+    return "moe" if i % 2 == 1 else "dense"
+
+
+def _jamba_init(cfg, key, dtype):
+    period = cfg.attn_period
+    ks = jax.random.split(key, period)
+    p = {"sub0": _layer_init(cfg, ks[0], dtype, "attn", _jamba_ffn_kind(0))}
+    for i in range(1, period):
+        p[f"sub{i}"] = _layer_init(cfg, ks[i], dtype, "mamba",
+                                   _jamba_ffn_kind(i))
+    return p
+
+
+def _jamba_apply(cfg, p, x, positions, cache, window, ring=False):
+    period = cfg.attn_period
+    aux = jnp.zeros((), jnp.float32)
+    c = dict(cache) if cache is not None else None
+    for i in range(period):
+        kind = "attn" if i == 0 else "mamba"
+        sub_cache = None if c is None else c[f"sub{i}"]
+        x, sub_cache, a = _layer_apply(cfg, p[f"sub{i}"], x, positions,
+                                       sub_cache, window, kind,
+                                       _jamba_ffn_kind(i), ring=ring)
+        if c is not None:
+            c[f"sub{i}"] = sub_cache
+        aux = aux + a
+    return x, c, aux
+
+
+def _jamba_cache(cfg, batch, cache_len, dtype):
+    period = cfg.attn_period
+    c = {"sub0": _layer_cache(cfg, batch, cache_len, dtype, "attn")}
+    for i in range(1, period):
+        c[f"sub{i}"] = _layer_cache(cfg, batch, cache_len, dtype, "mamba")
+    return c
+
+
+# --- segment-level (stacked + scanned) ---------------------------------------
+
+def segment_init(cfg, key, dtype, seg):
+    kind, ffn_kind, n = seg
+    keys = jax.random.split(key, n)
+    if kind == "jamba_block":
+        init_one = lambda k: _jamba_init(cfg, k, dtype)
+    else:
+        init_one = lambda k: _layer_init(cfg, k, dtype, kind, ffn_kind)
+    return jax.vmap(init_one)(keys)
+
+
+def segment_apply(cfg, params, x, positions, seg, cache=None, window=None,
+                  remat: bool = True, ring: bool = False):
+    """Scan the segment.  Returns (x, new_cache, aux_sum)."""
+    kind, ffn_kind, n = seg
+
+    def body(carry, xs):
+        xc, aux = carry
+        p, c = xs
+        if kind == "jamba_block":
+            xc, c, a = _jamba_apply(cfg, p, xc, positions, c, window,
+                                    ring=ring)
+        else:
+            xc, c, a = _layer_apply(cfg, p, xc, positions, c, window,
+                                    kind, ffn_kind, ring=ring)
+        return (xc, aux + a), c
+
+    body_fn = jax.checkpoint(body) if remat else body
+    if cache is None:
+        cache_xs = None
+        (x, aux), _ = jax.lax.scan(
+            lambda carry, p: (body_fn(carry, (p, None))[0], None),
+            (x, jnp.zeros((), jnp.float32)), params)
+        return x, None, aux
+    (x, aux), new_cache = jax.lax.scan(
+        body_fn, (x, jnp.zeros((), jnp.float32)), (params, cache))
+    return x, new_cache, aux
+
+
+def segment_cache(cfg, batch, cache_len, dtype, seg):
+    kind, _, n = seg
+    if kind == "jamba_block":
+        one = _jamba_cache(cfg, batch, cache_len, dtype)
+    else:
+        one = _layer_cache(cfg, batch, cache_len, dtype, kind)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(),
+                        one)

@@ -1,0 +1,66 @@
+"""Shared model components: norms, rope, embeddings, losses, init helpers.
+
+Everything is a pure function over explicit param pytrees (dicts) — no
+framework.  Initializers take an explicit key and dtype so the same code
+path serves fp32 smoke tests and bf16 dry-runs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dense_init", "rmsnorm_init", "rmsnorm", "rope_freqs",
+           "apply_rope", "embed_init", "cross_entropy_loss"]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    s = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x, gamma, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    """(head_dim//2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]               # (..., seq, 1, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_init(key, vocab_padded: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab_padded, d_model)) * 0.02).astype(dtype)
+
+
+def cross_entropy_loss(logits, targets, mask, vocab_size: int):
+    """Mean next-token cross entropy.  ``logits`` may be vocab-padded —
+    padded columns are masked to -inf before the softmax.  Stable fp32
+    reduction regardless of logits dtype."""
+    lp = logits.astype(jnp.float32)
+    v_pad = lp.shape[-1]
+    if v_pad > vocab_size:
+        col = jnp.arange(v_pad) >= vocab_size
+        lp = jnp.where(col, -1e30, lp)
+    lse = jax.nn.logsumexp(lp, axis=-1)
+    gold = jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,221 @@
+"""Architecture configuration and registry.
+
+One ``ArchConfig`` instance per assigned architecture lives in
+``repro/configs/<id>.py``; each also provides a ``smoke()`` reduced
+variant (<=2 layers, d_model<=512, <=4 experts) for CPU tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+__all__ = ["ArchConfig", "register", "get_config", "list_archs",
+           "PAD_MULTIPLE", "padded_vocab"]
+
+PAD_MULTIPLE = 2048  # vocab padded for clean sharding on any mesh axis <= 2048
+
+
+def padded_vocab(vocab_size: int, multiple: int = PAD_MULTIPLE) -> int:
+    return ((vocab_size + multiple - 1) // multiple) * multiple
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    source: str = ""               # citation (paper / model card)
+
+    # --- attention ---
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None   # SWA (mixtral); also the
+                                           # long-context decode fallback
+    long_context_window: Optional[int] = None  # window used only for the
+                                           # long_500k shape on dense archs
+
+    # --- MLA (deepseek-v2) ---
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0              # per-expert FFN width (defaults to d_ff)
+    moe_every: int = 1             # MoE on layers with idx % moe_every == moe_offset
+    moe_offset: int = 0
+    first_dense: int = 0           # leading dense layers (deepseek-v2: 1)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+
+    # --- hybrid (jamba): one attn layer per `attn_period` layers ---
+    attn_period: int = 0           # 8 for jamba (1 attn + 7 mamba)
+
+    # --- modality frontends (stubs; see DESIGN.md carve-out) ---
+    arch_type: str = "decoder"     # decoder | encdec
+    n_frames: int = 0              # audio encoder positions (whisper: 1500)
+    n_patches: int = 0             # vlm patch embeddings (phi-3-v: 576)
+
+    # --- training ---
+    schedule: str = "cosine"       # wsd for minicpm
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    @property
+    def vocab_padded(self) -> int:
+        return padded_vocab(self.vocab_size)
+
+    @property
+    def moe_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def d_inner(self) -> int:      # mamba inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding + layers), used for the
+        EFL-FG cost model and the MODEL_FLOPS roofline term."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_padded
+        emb = v * d * (1 if self.tie_embeddings else 2)
+
+        def attn_params():
+            if self.use_mla:
+                qh = self.qk_nope_dim + self.qk_rope_dim
+                p = d * self.q_lora_rank + self.q_lora_rank * self.n_heads * qh
+                p += d * (self.kv_lora_rank + self.qk_rope_dim)
+                p += self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+                p += self.n_heads * self.v_head_dim * d
+                return p
+            hd = self.head_dim
+            return (d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                    + self.n_heads * hd * d)
+
+        def dense_ffn():
+            return 3 * d * ff
+
+        def moe_ffn():
+            per = 3 * d * self.moe_ff
+            return (self.n_experts + self.n_shared_experts) * per + d * self.n_experts
+
+        def mamba_params():
+            di, st, nh = self.d_inner, self.ssm_state, self.ssm_heads
+            in_proj = d * (2 * di + 2 * st + nh)  # x, z, B, C, dt
+            conv = self.ssm_conv * (di + 2 * st)
+            out = di * d
+            return in_proj + conv + out + 2 * nh  # A_log, D
+
+        total = emb
+        for i in range(self.n_layers):
+            if self.family == "ssm":
+                total += mamba_params()
+                continue
+            is_attn = (self.attn_period == 0) or (i % self.attn_period == 0)
+            total += attn_params() if is_attn else mamba_params()
+            if self.is_moe and i >= self.first_dense and \
+               (i - self.first_dense) % self.moe_every == self.moe_offset:
+                total += moe_ffn()
+            elif self.family != "ssm":
+                total += dense_ffn()
+        return int(total)
+
+    def n_active_params(self) -> int:
+        """Active (per-token) parameters — MoE counts only routed top-k +
+        shared experts.  6 * N_active * D is the roofline MODEL_FLOPS."""
+        if not self.is_moe:
+            return self.n_params()
+        full = self.n_params()
+        per = 3 * self.d_model * self.moe_ff
+        n_moe_layers = sum(
+            1 for i in range(self.n_layers)
+            if i >= self.first_dense
+            and (i - self.first_dense) % self.moe_every == self.moe_offset)
+        inactive = n_moe_layers * (self.n_experts - self.top_k) * per
+        return int(full - inactive)
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """Smoke-test variant: same family/topology, tiny sizes."""
+        base = dict(
+            n_layers=min(self.n_layers, 2 if self.attn_period == 0
+                         else self.attn_period),
+            d_model=min(self.d_model, 256),
+            n_heads=min(self.n_heads, 4),
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=64,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 1024),
+        )
+        if self.is_moe:
+            base.update(n_experts=min(self.n_experts, 4),
+                        top_k=min(self.top_k, 2),
+                        moe_d_ff=min(self.moe_ff, 256),
+                        first_dense=min(self.first_dense, 1),
+                        n_shared_experts=min(self.n_shared_experts, 1))
+        if self.use_mla:
+            base.update(q_lora_rank=64, kv_lora_rank=32, qk_nope_dim=32,
+                        qk_rope_dim=16, v_head_dim=32)
+        if self.family in ("ssm", "hybrid"):
+            base.update(ssm_state=min(self.ssm_state, 64) or 64,
+                        ssm_head_dim=32, ssm_chunk=64)
+        if self.attn_period:
+            base.update(attn_period=min(self.attn_period, 4),
+                        n_layers=min(self.attn_period, 4))
+        if self.n_frames:
+            base.update(n_frames=64)
+        if self.n_patches:
+            base.update(n_patches=16)
+        base.update(overrides)
+        return dataclasses.replace(self, **base)
+
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    if not _REGISTRY:
+        _load_all()
+    return _REGISTRY[name]
+
+
+def list_archs():
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all():
+    # importing repro.configs registers every architecture
+    import repro.configs  # noqa: F401

@@ -1,0 +1,153 @@
+"""Encoder-decoder transformer (whisper family).
+
+The mel-spectrogram + conv feature extractor is a STUB per the DESIGN.md
+carve-out: the encoder consumes precomputed frame embeddings
+(b, n_frames, d_model).  Everything downstream — bidirectional encoder,
+causal decoder with cross-attention, train loss, cached decode — is real.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (dense_init, embed_init, rmsnorm, rmsnorm_init,
+                     cross_entropy_loss)
+from .attention import attn_init, attn_apply, init_kv_cache, sdpa
+from .mlp import ffn_init, ffn_apply
+
+__all__ = ["encdec_init", "encode", "encdec_loss", "encdec_init_cache",
+           "encdec_decode_step", "encdec_forward"]
+
+
+# --- cross-attention ---------------------------------------------------------
+
+def _xattn_init(cfg, key, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+
+
+def _xattn_apply(cfg, p, x, memory):
+    """x: (b, s, d) queries; memory: (b, m, d) encoder output."""
+    b, s, _ = x.shape
+    m = memory.shape[1]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (memory @ p["wk"]).reshape(b, m, kv, hd)
+    v = (memory @ p["wv"]).reshape(b, m, kv, hd)
+    out = sdpa(q, k, v, causal=False)
+    return out.reshape(b, s, h * hd) @ p["wo"]
+
+
+# --- init ---------------------------------------------------------------------
+
+def _enc_layer_init(cfg, key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn_init(cfg, k1, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "ffn": ffn_init(cfg, k2, dtype)}
+
+
+def _dec_layer_init(cfg, key, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn_init(cfg, k1, dtype),
+            "lnx": rmsnorm_init(cfg.d_model, dtype),
+            "xattn": _xattn_init(cfg, k2, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "ffn": ffn_init(cfg, k3, dtype)}
+
+
+def encdec_init(cfg, key, dtype=jnp.float32):
+    kt, ke, kd = jax.random.split(key, 3)
+    L = cfg.n_layers
+    return {
+        "embed": embed_init(kt, cfg.vocab_padded, cfg.d_model, dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(cfg, k, dtype))(
+            jax.random.split(ke, L)),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(cfg, k, dtype))(
+            jax.random.split(kd, L)),
+        "ln_enc": rmsnorm_init(cfg.d_model, dtype),
+        "ln_dec": rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+# --- encoder ------------------------------------------------------------------
+
+def encode(cfg, params, frames, remat=True):
+    """frames: (b, n_frames, d_model) stub embeddings -> memory."""
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1]),
+                                 frames.shape[:2])
+
+    def body(x, p):
+        h, _ = attn_apply(cfg, p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                          positions, causal=False)
+        x = x + h
+        x = x + ffn_apply(p["ffn"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+        return x, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, frames, params["enc_layers"])
+    return rmsnorm(x, params["ln_enc"], cfg.norm_eps)
+
+
+# --- decoder ------------------------------------------------------------------
+
+def _dec_body(cfg, p, x, positions, memory, cache, causal_window=None):
+    h, cache = attn_apply(cfg, p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                          positions, cache=cache, window=causal_window)
+    x = x + h
+    x = x + _xattn_apply(cfg, p["xattn"], rmsnorm(x, p["lnx"], cfg.norm_eps),
+                         memory)
+    x = x + ffn_apply(p["ffn"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return x, cache
+
+
+def encdec_forward(cfg, params, frames, tokens, remat=True):
+    """Teacher-forced decode over the full target sequence."""
+    memory = encode(cfg, params, frames, remat=remat)
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(xc, p):
+        xc, _ = _dec_body(cfg, p, xc, positions, memory, None)
+        return xc, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    x = rmsnorm(x, params["ln_dec"], cfg.norm_eps)
+    return x @ params["embed"].T
+
+
+def encdec_loss(cfg, params, frames, batch, remat=True):
+    logits = encdec_forward(cfg, params, frames, batch.tokens, remat=remat)
+    ce = cross_entropy_loss(logits, batch.targets, batch.mask, cfg.vocab_size)
+    return ce, {"ce": ce}
+
+
+def encdec_init_cache(cfg, batch, cache_len, dtype=jnp.float32):
+    one = init_kv_cache(cfg, batch, cache_len, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), one)
+
+
+def encdec_decode_step(cfg, params, caches, memory, tokens, pos):
+    """One decode token against cached self-attention + encoder memory."""
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(pos + jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(xc, xs):
+        p, c = xs
+        xc, c = _dec_body(cfg, p, xc, positions, memory, c)
+        return xc, c
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], caches))
+    x = rmsnorm(x, params["ln_dec"], cfg.norm_eps)
+    return x @ params["embed"].T, new_caches

@@ -1,0 +1,27 @@
+"""Gated (SwiGLU) feed-forward layer — the dense FFN used by every
+assigned architecture's non-MoE layers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+__all__ = ["ffn_init", "ffn_apply"]
+
+
+def ffn_init(cfg, key, dtype, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, ff, dtype),
+        "w_up": dense_init(k2, d, ff, dtype),
+        "w_down": dense_init(k3, ff, d, dtype),
+    }
+
+
+def ffn_apply(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]

@@ -1,0 +1,178 @@
+"""Decoder language model: embeddings + scanned segments + LM head.
+
+Serves every decoder-style assigned architecture (dense, MoE, MLA, SSM,
+hybrid, VLM).  The VLM variant consumes a stubbed patch-embedding prefix
+(`embeds_prefix`) per the DESIGN.md carve-out; whisper's encoder-decoder
+lives in `encdec.py`.
+
+All entry points are pure functions of (cfg, params, ...) so they can be
+jit'ed / pjit'ed with explicit shardings by the launcher.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import embed_init, rmsnorm, rmsnorm_init, cross_entropy_loss
+from .blocks import segments_for, segment_init, segment_apply, segment_cache
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step",
+           "prefill"]
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    keys = jax.random.split(key, 3 + len(segments_for(cfg)))
+    params = {
+        "embed": embed_init(keys[0], cfg.vocab_padded, cfg.d_model, dtype),
+        "ln_f": rmsnorm_init(cfg.d_model, dtype),
+        "segments": [segment_init(cfg, k, dtype, seg)
+                     for seg, k in zip(segments_for(cfg), keys[2:])],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[1], cfg.vocab_padded,
+                                       cfg.d_model, dtype)
+    return params
+
+
+def _logits(cfg, params, x, logit_sharding=None):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    out = x @ head.T
+    if logit_sharding is not None:
+        out = jax.lax.with_sharding_constraint(out, logit_sharding)
+    return out
+
+
+def _backbone(cfg, params, x, positions, caches=None, window=None,
+              remat=True, ring=False):
+    """Run all segments.  caches: list aligned with segments (or None)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for i, seg in enumerate(segments_for(cfg)):
+        c = None if caches is None else caches[i]
+        x, c, a = segment_apply(cfg, params["segments"][i], x, positions,
+                                seg, cache=c, window=window, remat=remat,
+                                ring=ring)
+        aux = aux + a
+        new_caches.append(c)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return x, (None if caches is None else new_caches), aux
+
+
+def forward(cfg, params, tokens, *, embeds_prefix=None, window=None,
+            remat=True, logit_sharding=None):
+    """Full-sequence forward.  tokens: (b, s) int32.  ``embeds_prefix``:
+    (b, p, d_model) stub modality embeddings prepended to the token
+    embeddings (VLM).  Returns (logits (b, s[+p], V_pad), aux)."""
+    x = params["embed"][tokens]
+    if embeds_prefix is not None:
+        x = jnp.concatenate([embeds_prefix.astype(x.dtype), x], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x, _, aux = _backbone(cfg, params, x, positions, window=window,
+                          remat=remat)
+    return _logits(cfg, params, x, logit_sharding), aux
+
+
+def chunked_ce(cfg, params, x, targets, mask, *, chunk: int = 512,
+               logit_sharding=None):
+    """Cross entropy without materializing the (b, s, V_pad) logits.
+
+    §Perf hillclimb (memory term): scans over sequence chunks; per step
+    only a (b, chunk, V_pad) logits tile exists and is immediately reduced
+    to (lse, gold) per token.  jax.checkpoint recomputes the tile in the
+    backward pass, trading one extra head matmul for O(s/chunk)x less live
+    memory — CE buffers dominate the train_4k baseline temp allocations
+    (EXPERIMENTS.md §Perf).
+    """
+    b, s, d = x.shape
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+    v_col = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+
+    def body(carry, xs):
+        nll_sum, m_sum = carry
+        xi, ti, mi = xs
+        lg = xi @ head.T
+        if logit_sharding is not None:
+            lg = jax.lax.with_sharding_constraint(lg, logit_sharding)
+        lp = jnp.where(v_col, -1e30, lg.astype(jnp.float32))
+        lse = jax.nn.logsumexp(lp, axis=-1)
+        gold = jnp.take_along_axis(lp, ti[..., None], axis=-1)[..., 0]
+        nll = ((lse - gold) * mi).sum()
+        return (nll_sum + nll, m_sum + mi.sum()), None
+
+    (nll, m), _ = jax.lax.scan(
+        jax.checkpoint(body),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, tc, mc))
+    return nll / jnp.maximum(m, 1.0)
+
+
+def loss_fn(cfg, params, batch, *, embeds_prefix=None, remat=True,
+            logit_sharding=None, ce_chunk=None):
+    """Next-token CE (+ MoE aux).  batch: TokenBatch-like with
+    .tokens/.targets/.mask.  With a VLM prefix, the loss is computed on the
+    text positions only (prefix logits are dropped).  ``ce_chunk``: use the
+    fused chunked-CE path (no full-logits materialization)."""
+    if ce_chunk:
+        x = params["embed"][batch.tokens]
+        if embeds_prefix is not None:
+            x = jnp.concatenate([embeds_prefix.astype(x.dtype), x], axis=1)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x, _, aux = _backbone(cfg, params, x, positions, remat=remat)
+        if embeds_prefix is not None:
+            x = x[:, embeds_prefix.shape[1]:]
+        ce = chunked_ce(cfg, params, x, batch.targets, batch.mask,
+                        chunk=ce_chunk, logit_sharding=logit_sharding)
+    else:
+        logits, aux = forward(cfg, params, batch.tokens,
+                              embeds_prefix=embeds_prefix, remat=remat,
+                              logit_sharding=logit_sharding)
+        if embeds_prefix is not None:
+            logits = logits[:, embeds_prefix.shape[1]:]
+        ce = cross_entropy_loss(logits, batch.targets, batch.mask,
+                                cfg.vocab_size)
+    loss = ce + cfg.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.float32):
+    """Stacked per-segment caches sized for ``cache_len`` total positions
+    (attention layers; SSM layers carry O(1) state)."""
+    return [segment_cache(cfg, batch, cache_len, dtype, seg)
+            for seg in segments_for(cfg)]
+
+
+def prefill(cfg, params, caches, tokens, *, embeds_prefix=None, window=None):
+    """Run the prompt through the model, filling the caches.  Returns
+    (logits_last, caches)."""
+    x = params["embed"][tokens]
+    if embeds_prefix is not None:
+        x = jnp.concatenate([embeds_prefix.astype(x.dtype), x], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x, caches, _ = _backbone(cfg, params, x, positions, caches=caches,
+                             window=window, remat=False)
+    return _logits(cfg, params, x[:, -1:]), caches
+
+
+def decode_step(cfg, params, caches, tokens, pos, *, window=None,
+                ring=False):
+    """One decode step.  tokens: (b, 1) int32; pos: scalar int32 absolute
+    position of the new token.  ``ring=True``: attention caches are
+    fully-wrapped ring buffers (windowed long-context decode) — attend
+    every slot.  Returns (logits (b, 1, V_pad), caches)."""
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(pos + jnp.arange(x.shape[1]), x.shape[:2])
+    x, caches, _ = _backbone(cfg, params, x, positions, caches=caches,
+                             window=window, remat=False, ring=ring)
+    return _logits(cfg, params, x), caches

@@ -1,0 +1,57 @@
+"""Activation-sharding context.
+
+The launcher (repro.launch.specs.build_dryrun / train drivers) installs
+mesh axis info here before tracing; the model layers then pin their
+activation layouts with with_sharding_constraint.  Without these
+constraints GSPMD occasionally picks pathological layouts — the observed
+worst case re-sharded attention activations from batch-split to
+head_dim-split, inserting a 3.5 GB score all-reduce *inside* the
+(layers x accum x q-chunk) loop nest (~30 TB/step/device; see
+EXPERIMENTS.md §Perf iteration 2).
+
+Disabled by default so tests / single-device runs are unaffected.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX = {"enabled": False, "dp": None, "dp_size": 1, "model_size": 1}
+
+__all__ = ["set_ctx", "clear_ctx", "constrain_bshd", "constrain_bsd"]
+
+
+def set_ctx(mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp_size = 1
+    for a in dp:
+        dp_size *= sizes[a]
+    _CTX.update(enabled=True, dp=dp, dp_size=dp_size,
+                model_size=sizes.get("model", 1))
+
+
+def clear_ctx():
+    _CTX.update(enabled=False)
+
+
+def _batch_axis(b: int):
+    return _CTX["dp"] if b % _CTX["dp_size"] == 0 else None
+
+
+def constrain_bshd(x):
+    """(b, s, h, hd): batch over dp; heads over model when divisible."""
+    if not _CTX["enabled"] or x.ndim != 4:
+        return x
+    h_ax = "model" if x.shape[2] % _CTX["model_size"] == 0 else None
+    return jax.lax.with_sharding_constraint(
+        x, P(_batch_axis(x.shape[0]), None, h_ax, None))
+
+
+def constrain_bsd(x):
+    """(b, s, d): batch over dp, rest replicated (residual stream)."""
+    if not _CTX["enabled"] or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(_batch_axis(x.shape[0]), None, None))

@@ -1,0 +1,209 @@
+"""Mamba2 layer — SSD (state-space duality) chunked scan [arXiv:2405.21060].
+
+Train/prefill use the chunked SSD form: within-chunk attention-like
+quadratic term + cross-chunk recurrent state passing (a `lax.scan` over
+chunk summaries).  Decode is the O(1) recurrent update on the
+(heads, head_dim, d_state) state — this is what makes the SSM/hybrid archs
+native at long_500k.
+
+Layout (single B/C group, as in mamba2-370m):
+  in_proj : d_model -> [z (di), x (di), B (ds), C (ds), dt (nh)]
+  conv1d  : causal depthwise width-4 over [x, B, C]
+  SSD     : per-head scalar decay A, state (nh, hd, ds)
+  out     : y * silu(z) -> RMSNorm -> out_proj
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rmsnorm, rmsnorm_init
+from .shardctx import constrain_bshd, constrain_bsd
+
+__all__ = ["ssm_init", "ssm_apply", "init_ssm_cache", "ssd_reference"]
+
+
+def ssm_init(cfg, key, dtype):
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * ds
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * ds + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim))
+                   * (1.0 / jnp.sqrt(cfg.ssm_conv))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _segsum(x):
+    """x: (..., l) -> (..., l, l) with out[i, j] = sum_{k=j+1..i} x_k
+    (lower-triangular; -inf above the diagonal)."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), dtype=bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int, h0=None):
+    """Chunked SSD.  x: (bt, s, nh, hd); dt: (bt, s, nh); a: (nh,) <0;
+    b, c: (bt, s, ds); h0: optional initial state (bt, nh, hd, ds).
+    Returns y: (bt, s, nh, hd), final state (bt, nh, hd, ds)."""
+    bt, s, nh, hd = x.shape
+    ds = b.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        # pad to a chunk multiple: dt=0 padding is exact (decay exp(0)=1,
+        # contribution dt*x=0), so the final state is unaffected
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        y, final = ssd_chunked(x, dt, a, b, c, chunk, h0=h0)
+        return y[:, :s], final
+    nc = s // chunk
+    f32 = jnp.float32
+    xc = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(bt, nc, chunk, nh, hd)
+    da = (dt.astype(f32) * a.astype(f32)).reshape(bt, nc, chunk, nh)  # log decay
+    bc = b.astype(f32).reshape(bt, nc, chunk, ds)
+    cc = c.astype(f32).reshape(bt, nc, chunk, ds)
+
+    da_cs = jnp.cumsum(da, axis=2)                          # (bt,nc,l,nh)
+    # --- intra-chunk (diagonal blocks) ---
+    L = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))          # (bt,nc,nh,l,l)
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", cc, bc, L, xc)
+
+    # --- chunk summaries ---
+    decay_states = jnp.exp(da_cs[:, :, -1:, :] - da_cs)     # (bt,nc,l,nh)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", bc, decay_states, xc)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])               # (bt,nc,nh)
+
+    def scan_fn(h, inp):
+        st, dec = inp                                        # (bt,nh,hd,ds), (bt,nh)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((bt, nh, hd, ds), f32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (bt,nc,nh,hd,ds)
+
+    # --- inter-chunk contribution ---
+    in_decay = jnp.exp(da_cs)                                # decay from chunk start
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", cc, prev_states, in_decay)
+
+    y = (y_diag + y_off).reshape(bt, s, nh, hd)
+    return y, final
+
+
+def ssd_reference(x, dt, a, b, c):
+    """Naive O(s) recurrent oracle for tests.  Same signature/returns as
+    ssd_chunked (minus chunking)."""
+    bt, s, nh, hd = x.shape
+    ds = b.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        xt, dtt, bt_, ct = inp
+        da = jnp.exp(dtt.astype(f32) * a.astype(f32))        # (bt?, nh)
+        dbx = jnp.einsum("bhp,bn->bhpn", xt.astype(f32) * dtt.astype(f32)[..., None],
+                         bt_.astype(f32))
+        h = h * da[..., None, None] + dbx
+        y = jnp.einsum("bhpn,bn->bhp", h, ct.astype(f32))
+        return h, y
+
+    h0 = jnp.zeros((bt, nh, hd, ds), f32)
+    final, ys = jax.lax.scan(
+        step, h0,
+        (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+         b.transpose(1, 0, 2), c.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3), final
+
+
+def _causal_conv(seq, w, b_, cache=None):
+    """Depthwise causal conv.  seq: (bt, s, cdim); w: (width, cdim).
+    With cache (bt, width-1, cdim): uses it as left context, returns
+    (out, new_cache)."""
+    width = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((seq.shape[0], width - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = cache.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i] for i in range(width))
+    new_cache = full[:, -(width - 1):] if width > 1 else pad
+    return jax.nn.silu(out + b_), new_cache
+
+
+def ssm_apply(cfg, p, x, cache=None):
+    """x: (bt, s, d_model) -> (out, new_cache)."""
+    bt, s, _ = x.shape
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"]
+    z, xs, b, c, dt = jnp.split(proj, [di, 2 * di, 2 * di + ds, 2 * di + 2 * ds],
+                                axis=-1)
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)
+    conv_cache = None if cache is None else cache["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_cache)
+    xs, b, c = jnp.split(conv_out, [di, di + ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (bt,s,nh)
+    a = -jnp.exp(p["A_log"])                                     # (nh,)
+    xh = constrain_bshd(xs.reshape(bt, s, nh, hd))
+
+    if cache is None:
+        y, _ = ssd_chunked(xh, dt, a, b, c, cfg.ssm_chunk)
+        new_cache = None
+    elif s > 1:
+        # cached prefill: chunked SSD from the cached state
+        y, final = ssd_chunked(xh, dt, a, b, c, cfg.ssm_chunk,
+                               h0=cache["state"].astype(jnp.float32))
+        new_cache = {"conv": new_conv, "state": final,
+                     "pos": cache["pos"] + s}
+    else:
+        # recurrent decode: s is tiny (==1)
+        state = cache["state"].astype(jnp.float32)
+        da = jnp.exp(dt * a)                                     # (bt,s,nh)
+        dbx = jnp.einsum("bshp,bsn->bshpn",
+                         xh.astype(jnp.float32) * dt[..., None],
+                         b.astype(jnp.float32))
+        # sequential over s (s==1 in decode)
+        def step(h, inp):
+            da_t, dbx_t, c_t = inp
+            h = h * da_t[..., None, None] + dbx_t
+            y_t = jnp.einsum("bhpn,bn->bhp", h, c_t)
+            return h, y_t
+        state, ys = jax.lax.scan(
+            step, state,
+            (da.transpose(1, 0, 2), dbx.transpose(1, 0, 2, 3, 4),
+             c.astype(jnp.float32).transpose(1, 0, 2)))
+        y = ys.transpose(1, 0, 2, 3)
+        new_cache = {"conv": new_conv, "state": state,
+                     "pos": cache["pos"] + s}
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bt, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    return constrain_bsd(y @ p["out_proj"]), new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype):
+    di, ds = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * ds), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, ds),
+                           jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }

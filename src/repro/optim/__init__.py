@@ -1,0 +1,9 @@
+"""Optimizer substrate: AdamW, schedules (cosine / WSD), train-step factory."""
+
+from .adamw import AdamWConfig, AdamWState, adamw_init, adamw_update, global_norm
+from .schedules import cosine_schedule, wsd_schedule, make_schedule
+from .trainer import TrainState, make_train_step, init_train_state
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "global_norm", "cosine_schedule", "wsd_schedule", "make_schedule",
+           "TrainState", "make_train_step", "init_train_state"]

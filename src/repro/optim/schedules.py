@@ -1,0 +1,40 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM's headline
+schedule [arXiv:2404.06395] — linear warmup, long flat stable phase, short
+exponential-ish decay tail)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "wsd_schedule", "make_schedule"]
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, min_ratio: float = 0.01):
+    """Warmup -> stable (flat peak) -> decay over the final decay_frac."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total * (1.0 - decay_frac)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1),
+                    0, 1)
+    # exponential-style decay to min_ratio (MiniCPM uses ~0.5^(x/T_d))
+    decay = peak_lr * jnp.power(min_ratio, prog)
+    out = jnp.where(step < warmup, warm,
+                    jnp.where(step < decay_start, peak_lr, decay))
+    return out
+
+
+def make_schedule(kind: str, **kw):
+    if kind == "wsd":
+        return lambda s: wsd_schedule(s, **kw)
+    return lambda s: cosine_schedule(s, **kw)

@@ -1,0 +1,46 @@
+import os
+import sys
+
+# Tests must see the default single CPU device (the dry-run's 512-device
+# XLA_FLAGS is set only inside repro.launch.dryrun subprocesses).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_pool():
+    """A fast 6-expert pool on a small CCPP-like stream for algorithm tests."""
+    import jax.numpy as jnp
+    from repro.data import make_dataset, pretrain_split
+    from repro.experts import fit_kernel_expert, fit_mlp_expert
+    from repro.experts.pool import ExpertPool
+    import jax
+
+    ds = make_dataset("ccpp")
+    (xp, yp), (xs, ys) = pretrain_split(ds)
+    xp, yp = xp[:120], yp[:120]
+    experts, names = [], []
+    for g in (0.1, 1.0):
+        experts.append(fit_kernel_expert("gaussian", g, xp, yp))
+        names.append(f"gaussian[{g}]")
+    experts.append(fit_kernel_expert("polynomial", 2.0, xp, yp))
+    names.append("poly[2]")
+    experts.append(fit_kernel_expert("sigmoid", 0.1, xp, yp))
+    names.append("sigmoid[0.1]")
+    experts.append(fit_mlp_expert(jax.random.PRNGKey(0), xp, yp, 1, steps=50))
+    names.append("mlp1")
+    experts.append(fit_mlp_expert(jax.random.PRNGKey(1), xp, yp, 2, steps=50))
+    names.append("mlp2")
+    n = np.array([e.n_params for e in experts], float)
+    pool = ExpertPool(tuple(experts), tuple(names),
+                      jnp.asarray(n / n.max(), jnp.float32))
+    return pool, xs[:600], ys[:600]

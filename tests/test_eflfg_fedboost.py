@@ -1,0 +1,147 @@
+"""Algorithm 2 (EFL-FG) end-to-end + FedBoost baseline properties."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (init_state, plan_round, update_state, round_step,
+                        fedboost_init, fedboost_plan, fedboost_update,
+                        project_simplex, RegretTracker, theorem1_bound)
+
+
+def test_eflfg_hard_budget_many_rounds():
+    K = 12
+    rng = np.random.default_rng(0)
+    costs = jnp.asarray(rng.uniform(0.1, 1.0, K), jnp.float32)
+    B = jnp.float32(2.5)
+    state = init_state(K)
+    key = jax.random.PRNGKey(0)
+    for t in range(300):
+        key, k = jax.random.split(key)
+        L = jnp.asarray(rng.uniform(0, 1, (K, 3)), jnp.float32)
+        state, plan, _ = round_step(state, k, L, costs, B,
+                                    jnp.float32(0.05), jnp.float32(0.1))
+        assert float(plan.round_cost) <= 2.5 + 1e-5
+        assert bool(plan.sel[plan.drawn])          # self-loop => drawn in S_t
+
+
+def test_eflfg_concentrates_on_best_model():
+    """With a persistently better model, its ensemble weight approaches 1."""
+    K = 8
+    best = 3
+    rng = np.random.default_rng(1)
+    costs = jnp.asarray(rng.uniform(0.2, 0.6, K), jnp.float32)
+    state = init_state(K)
+    key = jax.random.PRNGKey(1)
+    for t in range(400):
+        key, k = jax.random.split(key)
+        base = rng.uniform(0.5, 1.0, (K, 1))
+        base[best] = rng.uniform(0.0, 0.1)
+        state, plan, _ = round_step(state, k, jnp.asarray(base, jnp.float32),
+                                    costs, jnp.float32(2.0),
+                                    jnp.float32(0.1), jnp.float32(0.1))
+    w = np.exp(np.asarray(state.log_w) - np.asarray(state.log_w).max())
+    assert np.argmax(w) == best
+    # u concentrates on nodes whose ensemble CONTAINS the best model (any
+    # such node is an equally good draw) — check via the final graph
+    assert bool(plan.adj[int(np.argmax(np.asarray(state.log_u))), best])
+
+
+def test_regret_sublinear_on_stochastic_losses():
+    """Average regret per round must shrink (R_T / T decreasing tail)."""
+    K = 10
+    T = 600
+    rng = np.random.default_rng(2)
+    means = rng.uniform(0.3, 0.7, K)
+    means[4] = 0.1
+    costs = jnp.asarray(rng.uniform(0.2, 0.8, K), jnp.float32)
+    eta = xi = 1.0 / np.sqrt(T)
+    state = init_state(K)
+    tracker = RegretTracker(K)
+    key = jax.random.PRNGKey(2)
+    for t in range(T):
+        key, k = jax.random.split(key)
+        L = np.clip(rng.normal(means, 0.05)[:, None], 0, 1)
+        state, plan, ens = round_step(state, k, jnp.asarray(L, jnp.float32),
+                                      costs, jnp.float32(3.0),
+                                      jnp.float32(eta), jnp.float32(xi))
+        tracker.update(float(ens), L.sum(1))
+    curve = tracker.regret_curve()
+    r_rate_mid = curve[T // 2] / (T // 2)
+    r_rate_end = curve[-1] / T
+    assert r_rate_end < r_rate_mid, "per-round regret should decay"
+    assert tracker.best_model() == 4
+    # Theorem 1 bound evaluates finite and dominates the empirical curve
+    bound = theorem1_bound(T, K, n_out_kstar_1=K, eta=eta, xi=xi,
+                           n_clients_per_round=1,
+                           dom_sizes=np.full(T, 3))
+    assert np.isfinite(bound[-1])
+    assert curve[-1] <= bound[-1]
+
+
+def test_simplex_projection():
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        v = jnp.asarray(rng.normal(0, 2, 9), jnp.float32)
+        p = np.asarray(project_simplex(v))
+        assert abs(p.sum() - 1) < 1e-5
+        assert (p >= -1e-7).all()
+    # already on simplex -> unchanged
+    v = jnp.asarray([0.2, 0.3, 0.5])
+    assert np.allclose(np.asarray(project_simplex(v)), [0.2, 0.3, 0.5],
+                       atol=1e-6)
+
+
+def test_fedboost_expected_cost_within_budget_but_violates():
+    K = 10
+    rng = np.random.default_rng(4)
+    costs = jnp.asarray(rng.uniform(0.3, 1.0, K), jnp.float32)
+    B = 3.0
+    state = fedboost_init(K)
+    key = jax.random.PRNGKey(4)
+    costs_np = np.asarray(costs)
+    tot, viol, T = 0.0, 0, 400
+    for t in range(T):
+        key, k = jax.random.split(key)
+        sel, pi, mix, cost = fedboost_plan(state, k, costs, jnp.float32(B))
+        g = jnp.asarray(rng.uniform(0, 1, K), jnp.float32)
+        state = fedboost_update(state, sel, pi, g, jnp.float32(0.01))
+        c = float(cost)
+        tot += c
+        viol += c > B + 1e-6
+    assert tot / T <= B * 1.15, "expected cost must track the budget"
+    assert viol > 0, "FedBoost's instantaneous budget DOES get violated"
+    assert abs(float(jnp.sum(state.alpha)) - 1.0) < 1e-4
+
+
+def test_placement_cached_costs():
+    """Beyond-paper: resident models get cheap re-transmission, so at the
+    same budget the cached planner ships more members for fewer bytes."""
+    from repro.core.placement import (placement_init, effective_costs,
+                                      placement_update, plan_round_cached)
+    K = 10
+    rng = np.random.default_rng(0)
+    costs = jnp.asarray(rng.uniform(0.5, 1.0, K), jnp.float32)
+    state = init_state(K)
+    pstate = placement_init(K)
+    key = jax.random.PRNGKey(0)
+    wire, sizes = [], []
+    for t in range(60):
+        key, k = jax.random.split(key)
+        plan, pstate, w = plan_round_cached(state, pstate, k, costs,
+                                            jnp.float32(2.0),
+                                            jnp.float32(0.1), ttl=8)
+        # hard guarantee still holds against EFFECTIVE costs
+        assert float(w) <= 2.0 + 1e-5
+        wire.append(float(w))
+        sizes.append(int(np.asarray(plan.sel).sum()))
+        L = jnp.asarray(rng.uniform(0, 1, (K,)), jnp.float32)
+        state = update_state(state, plan, L, jnp.float32(0.5),
+                             jnp.float32(0.1))
+    # once caches are warm, wire bytes collapse (the paper's objective!)
+    # while the ensemble stays at least as large
+    assert np.mean(wire[10:]) < 0.4 * np.mean(wire[:1])
+    assert np.mean(sizes[10:]) >= np.mean(sizes[:3]) - 1.0
+    # residency never makes a model MORE expensive
+    c_eff = effective_costs(pstate, costs, ttl=8)
+    assert (np.asarray(c_eff) <= np.asarray(costs) + 1e-6).all()

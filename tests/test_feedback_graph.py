@@ -1,0 +1,92 @@
+"""Algorithm 1 (feedback-graph generation): properties + oracle match."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import feedback_graph, feedback_graph_np
+
+settings.register_profile("ci", max_examples=12, deadline=None,
+                          database=None, derandomize=True)
+settings.load_profile("ci")
+
+
+def _case(seed, K, budget_mult):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.05, 1.0, K)
+    c = rng.uniform(0.05, 1.0, K)
+    B = budget_mult * c.max()      # (a3): B >= max cost
+    return w, c, B
+
+
+@given(st.integers(0, 10_000), st.sampled_from([3, 8, 22]),
+       st.floats(1.0, 6.0))
+def test_budget_never_violated(seed, K, budget_mult):
+    """The hard guarantee of the paper: every out-neighborhood costs <= B,
+    so ANY drawn node yields a transmit set within budget."""
+    w, c, B = _case(seed, K, budget_mult)
+    adj = np.asarray(feedback_graph(jnp.log(w), jnp.asarray(c),
+                                    jnp.float32(B), jnp.full((K,), 1e30)))
+    for k in range(K):
+        assert c[adj[k]].sum() <= B + 1e-5
+
+
+@given(st.integers(0, 10_000), st.sampled_from([3, 8, 22]), st.floats(1.0, 4.0))
+def test_self_loops_always_present(seed, K, budget_mult):
+    w, c, B = _case(seed, K, budget_mult)
+    adj = np.asarray(feedback_graph(jnp.log(w), jnp.asarray(c),
+                                    jnp.float32(B), jnp.full((K,), 1e30)))
+    assert np.diag(adj).all()
+
+
+@given(st.integers(0, 5_000), st.sampled_from([4, 9]), st.floats(1.2, 4.0))
+def test_matches_numpy_oracle(seed, K, budget_mult):
+    """lax.while_loop implementation == literal pseudo-code transcription."""
+    w, c, B = _case(seed, K, budget_mult)
+    adj_j = np.asarray(feedback_graph(jnp.log(w), jnp.asarray(c),
+                                      jnp.float32(B), jnp.full((K,), 1e30)))
+    adj_n = feedback_graph_np(w, c, B, np.full(K, 1e30))
+    assert (adj_j == adj_n).all()
+
+
+@given(st.integers(0, 5_000), st.sampled_from([5, 10]))
+def test_weight_constraint_monotone(seed, K):
+    """With a finite previous-round weight sum, the new neighborhood's
+    weight sum never exceeds it (eq. 2's second constraint)."""
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.05, 1.0, K)
+    c = rng.uniform(0.05, 0.5, K)
+    B = 3.0
+    w_prev = rng.uniform(w.max(), w.sum(), K)   # feasible but binding
+    adj = np.asarray(feedback_graph(jnp.log(w), jnp.asarray(c),
+                                    jnp.float32(B),
+                                    jnp.asarray(np.log(w_prev),
+                                                jnp.float32)))
+    for k in range(K):
+        # self loop always allowed; appended nodes respect the cap
+        extra = adj[k] & (np.arange(K) != k)
+        if extra.any():
+            assert w[adj[k]].sum() <= w_prev[k] * (1 + 1e-4)
+
+
+def test_greedy_prefers_cheap_high_weight():
+    """eq. (3): among eligible nodes the max w/(cost_sum + c) is appended
+    first — a cheap good model beats an expensive equal one."""
+    w = np.array([1.0, 0.9, 0.9])
+    c = np.array([1.0, 1.0, 0.1])
+    adj = feedback_graph_np(w, c, 1.2, np.full(3, 1e30))
+    # node 0: budget 1.2, self costs 1.0 -> only node 2 (c=0.1) fits
+    assert adj[0, 2] and not adj[0, 1]
+
+
+def test_larger_budget_denser_graph():
+    rng = np.random.default_rng(1)
+    K = 12
+    w = rng.uniform(0.1, 1.0, K)
+    c = rng.uniform(0.1, 1.0, K)
+    prev = np.full(K, 1e30)
+    edges = []
+    for B in (1.0, 2.0, 4.0, 8.0):
+        adj = feedback_graph_np(w, c, B * c.max(), prev)
+        edges.append(adj.sum())
+    assert edges == sorted(edges), f"density should grow with budget {edges}"

@@ -1,0 +1,123 @@
+"""Pallas kernel validation (interpret mode): shape/dtype sweeps vs the
+pure-jnp oracles, plus hypothesis property tests."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ensemble_combine import ops as ec_ops, ref as ec_ref
+from repro.kernels.kernel_gram import ops as kg_ops, ref as kg_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.models.attention import sdpa
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+# --- ensemble_combine ---------------------------------------------------------
+
+@pytest.mark.parametrize("K,N", [(4, 64), (22, 1000), (22, 1024), (7, 4097)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ensemble_combine_sweep(K, N, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(K * N), 3)
+    preds = jax.random.normal(ks[0], (K, N), dtype)
+    log_w = jax.random.normal(ks[1], (K,))
+    sel = jax.random.bernoulli(ks[2], 0.5, (K,))
+    sel = sel.at[0].set(True)
+    out = ec_ops.ensemble_combine(preds, log_w, sel)
+    ref = ec_ref.ensemble_combine_ref(preds, log_w, sel)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@given(st.integers(0, 10_000))
+def test_ensemble_combine_convexity(seed):
+    """Output is a convex combination: bounded by selected preds' range."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    K, N = 9, 130
+    preds = jax.random.normal(ks[0], (K, N))
+    log_w = jax.random.normal(ks[1], (K,))
+    sel = jax.random.bernoulli(ks[2], 0.6, (K,)).at[2].set(True)
+    out = np.asarray(ec_ops.ensemble_combine(preds, log_w, sel))
+    p = np.asarray(preds)[np.asarray(sel)]
+    assert (out <= p.max(0) + 1e-4).all() and (out >= p.min(0) - 1e-4).all()
+
+
+# --- kernel_gram ---------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,param", [
+    ("gaussian", 0.01), ("gaussian", 1.0), ("gaussian", 100.0),
+    ("polynomial", 1.0), ("polynomial", 4.0),
+    ("sigmoid", 0.1), ("sigmoid", 10.0),
+])
+@pytest.mark.parametrize("N,M,d", [(64, 64, 4), (517, 733, 21), (128, 512, 27)])
+def test_kernel_gram_sweep(kind, param, N, M, d):
+    ks = jax.random.split(jax.random.PRNGKey(int(param * 10) + N), 3)
+    x = jax.random.normal(ks[0], (N, d))
+    a = jax.random.normal(ks[1], (M, d))
+    alpha = jax.random.normal(ks[2], (M,)) * 0.05
+    out = kg_ops.kernel_predict(kind, param, x, a, alpha)
+    ref = kg_ref.kernel_predict_ref(kind, param, x, a, alpha)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=5e-3, rtol=5e-3)
+
+
+@given(st.integers(0, 10_000))
+def test_kernel_gram_gaussian_bounds(seed):
+    """Gaussian kernel values in (0, 1] => |y| <= sum |alpha|."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (33, 5))
+    a = jax.random.normal(ks[1], (47, 5))
+    alpha = jax.random.normal(ks[2], (47,))
+    out = np.asarray(kg_ops.kernel_predict("gaussian", 0.7, x, a, alpha))
+    assert (np.abs(out) <= np.abs(np.asarray(alpha)).sum() + 1e-4).all()
+
+
+# --- flash_attention ------------------------------------------------------------
+
+@pytest.mark.parametrize("s,t,h,kv,d", [
+    (128, 128, 4, 4, 64),      # MHA, tile-aligned
+    (300, 300, 8, 2, 64),      # GQA, ragged
+    (1, 700, 4, 4, 128),       # decode-style single query
+    (200, 200, 6, 3, 32),      # grouping 2
+])
+@pytest.mark.parametrize("window", [None, 128])
+def test_flash_attention_sweep(s, t, h, kv, d, window):
+    ks = jax.random.split(jax.random.PRNGKey(s * t + h), 3)
+    q = jax.random.normal(ks[0], (2, s, h, d))
+    k = jax.random.normal(ks[1], (2, t, kv, d))
+    v = jax.random.normal(ks[2], (2, t, kv, d))
+    off = t - s if s < t else 0
+    out = fa_ops.flash_attention(q, k, v, causal=True, window=window,
+                                 q_offset=off)
+    ref = sdpa(q, k, v, causal=True, window=window, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.bfloat16)
+    out = fa_ops.flash_attention(q, k, v, causal=True)
+    ref = sdpa(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+@given(st.integers(0, 5000))
+def test_flash_rows_are_convex_combinations(seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 40, 2, 16))
+    k = jax.random.normal(ks[1], (1, 40, 2, 16))
+    v = jax.random.normal(ks[2], (1, 40, 2, 16))
+    out = np.asarray(fa_ops.flash_attention(q, k, v, causal=True))
+    vmin = np.asarray(v).min()
+    vmax = np.asarray(v).max()
+    assert (out >= vmin - 1e-3).all() and (out <= vmax + 1e-3).all()

@@ -1,0 +1,56 @@
+"""End-to-end federated simulation: the paper's §IV claims, in miniature."""
+
+import numpy as np
+
+from repro.experts import pool_predict_all
+from repro.federated import SimConfig, run_simulation
+
+
+def _preds(small_pool):
+    pool, xs, ys = small_pool
+    return pool, pool_predict_all(pool, xs), ys
+
+
+def test_eflfg_zero_budget_violations(small_pool):
+    pool, preds, ys = _preds(small_pool)
+    res = run_simulation("eflfg", preds, ys, pool.costs, T=120,
+                         cfg=SimConfig(budget=2.0, seed=0))
+    assert res.budget_violations == 0
+    assert res.sel_sizes.min() >= 1
+    assert np.isfinite(res.mse_curve).all()
+
+
+def test_fedboost_violates_budget(small_pool):
+    pool, preds, ys = _preds(small_pool)
+    res = run_simulation("fedboost", preds, ys, pool.costs, T=120,
+                         cfg=SimConfig(budget=2.0, seed=0))
+    assert res.violation_frac > 0.02
+
+
+def test_eflfg_not_worse_than_fedboost(small_pool):
+    """Table I direction: EFL-FG's final MSE <= FedBoost's (margin for
+    stochasticity)."""
+    pool, preds, ys = _preds(small_pool)
+    a = run_simulation("eflfg", preds, ys, pool.costs, T=250,
+                       cfg=SimConfig(budget=2.0, seed=1))
+    b = run_simulation("fedboost", preds, ys, pool.costs, T=250,
+                       cfg=SimConfig(budget=2.0, seed=1))
+    assert a.final_mse <= b.final_mse * 1.10
+
+
+def test_bandwidth_formula_limits_clients(small_pool):
+    pool, preds, ys = _preds(small_pool)
+    res = run_simulation("eflfg", preds, ys, pool.costs, T=40,
+                         cfg=SimConfig(budget=2.0, uplink_bandwidth=12.0,
+                                       loss_bandwidth=1.0, seed=0))
+    # N_t = floor(12 / (|S_t|+1)) <= 6 for |S_t| >= 1
+    assert res.budget_violations == 0
+
+
+def test_mse_metric_is_running_mean(small_pool):
+    pool, preds, ys = _preds(small_pool)
+    res = run_simulation("eflfg", preds, ys, pool.costs, T=60,
+                         cfg=SimConfig(budget=2.0, seed=2))
+    # running mean: t * MSE_t is non-decreasing cumulative sum of positives
+    cum = res.mse_curve * np.arange(1, 61)
+    assert (np.diff(cum) >= -1e-9).all()
