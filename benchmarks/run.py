@@ -15,12 +15,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main() -> None:
     fast = bool(int(os.environ.get("BENCH_FAST", "0")))
-    from benchmarks import paper_tables, kernel_bench, roofline, placement
+    from benchmarks import (paper_tables, kernel_bench, roofline, placement,
+                            engine_bench)
 
     rows = []
+    rows += engine_bench.engine(fast=fast)
     rows += paper_tables.table1(fast=fast)
     rows += paper_tables.fig1(fast=fast)
     rows += paper_tables.regret(fast=fast)
+    rows += paper_tables.budget_sweep(fast=fast)
     rows += placement.placement(fast=fast)
     rows += kernel_bench.kernels()
     rows += roofline.roofline("pod")

@@ -12,18 +12,21 @@ from .graph import feedback_graph, feedback_graph_np, row_log_weight_sums
 from .domset import dominating_set, dominating_set_np, independence_number_np
 from . import policy
 from .eflfg import (EFLFGState, EFLFGRoundOut, init_state, plan_round,
-                    update_state, round_step)
+                    update_state, round_step, make_eflfg_scan_body)
 from .fedboost import (FedBoostState, fedboost_init, fedboost_plan,
-                       fedboost_update, project_simplex)
-from .regret import RegretTracker, theorem1_bound
+                       fedboost_update, project_simplex,
+                       make_fedboost_scan_body)
+from .regret import (RegretCarry, regret_init, regret_update, regret_value,
+                     RegretTracker, theorem1_bound)
 
 __all__ = [
     "feedback_graph", "feedback_graph_np", "row_log_weight_sums",
     "dominating_set", "dominating_set_np", "independence_number_np",
     "policy",
     "EFLFGState", "EFLFGRoundOut", "init_state", "plan_round",
-    "update_state", "round_step",
+    "update_state", "round_step", "make_eflfg_scan_body",
     "FedBoostState", "fedboost_init", "fedboost_plan", "fedboost_update",
-    "project_simplex",
+    "project_simplex", "make_fedboost_scan_body",
+    "RegretCarry", "regret_init", "regret_update", "regret_value",
     "RegretTracker", "theorem1_bound",
 ]

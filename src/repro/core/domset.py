@@ -31,22 +31,21 @@ def dominating_set(adj: jnp.ndarray) -> jnp.ndarray:
     K = adj.shape[0]
     adj_i = adj.astype(jnp.int32)
 
-    def cond(state):
-        _, covered = state
-        return ~jnp.all(covered)
-
     def body(state):
-        dom, covered = state
-        gains = adj_i @ (~covered).astype(jnp.int32)  # uncovered out-neighbors
+        dom, unc, _ = state
+        gains = adj_i @ unc                           # uncovered out-neighbors
         gains = jnp.where(dom, -1, gains)             # never re-pick
         pick = jnp.argmax(gains)
         dom = dom.at[pick].set(True)
-        covered = covered | adj[pick]
-        return dom, covered
+        unc = unc * (1 - adj_i[pick])
+        return dom, unc, jnp.any(unc)
 
+    # uncovered carried as the int mask the matvec consumes; the
+    # continue-flag rides in the carry so cond() costs nothing extra
     dom0 = jnp.zeros((K,), dtype=bool)
-    covered0 = jnp.zeros((K,), dtype=bool)
-    dom, _ = jax.lax.while_loop(cond, body, (dom0, covered0))
+    unc0 = jnp.ones((K,), dtype=jnp.int32)
+    dom, _, _ = jax.lax.while_loop(lambda s: s[-1], body,
+                                   (dom0, unc0, jnp.bool_(True)))
     return dom
 
 

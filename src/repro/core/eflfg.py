@@ -22,7 +22,8 @@ from .graph import feedback_graph, row_log_weight_sums
 from .domset import dominating_set
 from . import policy
 
-__all__ = ["EFLFGState", "EFLFGRoundOut", "init_state", "plan_round", "update_state", "round_step"]
+__all__ = ["EFLFGState", "EFLFGRoundOut", "init_state", "plan_round",
+           "update_state", "round_step", "make_eflfg_scan_body"]
 
 _LOG_INF = 1e30
 
@@ -84,6 +85,33 @@ def update_state(state: EFLFGState, plan: EFLFGRoundOut,
     # current-round neighborhoods under the weights the next round sees).
     log_prev = row_log_weight_sums(plan.adj, log_w)
     return EFLFGState(log_w, log_u, log_prev, state.t + 1)
+
+
+def make_eflfg_scan_body(loss_fn, costs: jnp.ndarray, budget: jnp.ndarray,
+                         eta: jnp.ndarray, xi: jnp.ndarray):
+    """Build a ``lax.scan`` body running one full Algorithm-2 round.
+
+    ``loss_fn(plan, loss_carry) -> (model_losses, ens_loss, new_loss_carry,
+    out)`` supplies the client-side evaluation: who the clients are, how
+    many of them uplink, what their losses look like.  Everything it
+    returns must be fixed-shape so the composed body stays traceable; the
+    per-round ``out`` pytree is stacked by ``lax.scan`` into the engine's
+    metric arrays.
+
+    The scan carry is ``(EFLFGState, prng_key, loss_carry)`` — the same
+    key-splitting discipline as the reference Python loop, so a scan over
+    rounds reproduces the loop draw-for-draw.
+    """
+
+    def body(carry, _):
+        state, key, loss_carry = carry
+        key, kdraw = jax.random.split(key)
+        plan = plan_round(state, kdraw, costs, budget, xi)
+        model_losses, ens_loss, loss_carry, out = loss_fn(plan, loss_carry)
+        state = update_state(state, plan, model_losses, ens_loss, eta)
+        return (state, key, loss_carry), out
+
+    return body
 
 
 @jax.jit

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["FedBoostState", "fedboost_init", "fedboost_plan",
-           "fedboost_update", "project_simplex"]
+           "fedboost_update", "project_simplex", "make_fedboost_scan_body"]
 
 
 class FedBoostState(NamedTuple):
@@ -76,3 +76,25 @@ def fedboost_update(state: FedBoostState, sel: jnp.ndarray, pi: jnp.ndarray,
     g = jnp.where(sel, grad_alpha / pi, 0.0)
     alpha = project_simplex(state.alpha - lr * g)
     return FedBoostState(alpha=alpha, t=state.t + 1)
+
+
+def make_fedboost_scan_body(grad_fn, costs: jnp.ndarray, budget: jnp.ndarray,
+                            lr: jnp.ndarray):
+    """Build a ``lax.scan`` body for one streaming FedBoost round.
+
+    ``grad_fn((sel, pi, mix, cost), loss_carry) -> (grad_alpha,
+    new_loss_carry, out)`` supplies the clients' SGD gradient of the
+    ensemble loss w.r.t. the mixture weights (fixed-shape, traceable).
+    The scan carry is ``(FedBoostState, prng_key, loss_carry)`` with the
+    same key-splitting discipline as the reference loop.
+    """
+
+    def body(carry, _):
+        state, key, loss_carry = carry
+        key, ksub = jax.random.split(key)
+        sel, pi, mix, cost = fedboost_plan(state, ksub, costs, budget)
+        grad, loss_carry, out = grad_fn((sel, pi, mix, cost), loss_carry)
+        state = fedboost_update(state, sel, pi, grad, lr)
+        return (state, key, loss_carry), out
+
+    return body

@@ -1,41 +1,117 @@
 """Regret accounting (eq. 10) and the Theorem-1 bound evaluator.
 
-``RegretTracker`` accumulates, per round, the (expected or realized)
-ensemble loss and the per-model cumulative losses, from which the regret
-w.r.t. the best model in hindsight is computed.  ``theorem1_bound``
-evaluates the right-hand side of eq. (11) so benchmarks can overlay the
-empirical regret against the proven bound.
+Two layers:
+
+* ``RegretCarry`` / ``regret_init`` / ``regret_update`` — fixed-shape,
+  traceable accumulation of the cumulative ensemble loss and per-model
+  cumulative losses.  These are the carries threaded through the
+  ``lax.scan`` simulation engine (``repro.federated.engine``): every
+  quantity is a fixed-shape array, so the whole regret bookkeeping jits
+  and vmaps.
+
+* ``RegretTracker`` — a thin NumPy wrapper for post-hoc analysis.  It
+  keeps the streaming ``update`` API used by the reference Python loop
+  and can be rebuilt from per-round loss arrays recorded by the scan
+  engine (``from_rounds``), in float64 so curves are exact regardless of
+  the on-device accumulation dtype.
+
+``theorem1_bound`` evaluates the right-hand side of eq. (11) so
+benchmarks can overlay the empirical regret against the proven bound.
 """
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import numpy as np
 
-__all__ = ["RegretTracker", "theorem1_bound"]
+import jax.numpy as jnp
+
+__all__ = ["RegretCarry", "regret_init", "regret_update", "regret_value",
+           "RegretTracker", "theorem1_bound"]
+
+
+class RegretCarry(NamedTuple):
+    """Traceable regret accumulator: cumulative losses after round t."""
+    ens_cum: jnp.ndarray     # scalar, cumulative ensemble loss
+    model_cum: jnp.ndarray   # (K,), cumulative per-model losses
+
+
+def regret_init(K: int, dtype=jnp.float32) -> RegretCarry:
+    return RegretCarry(ens_cum=jnp.zeros((), dtype),
+                       model_cum=jnp.zeros((K,), dtype))
+
+
+def regret_update(carry: RegretCarry, ens_loss: jnp.ndarray,
+                  model_losses: jnp.ndarray) -> RegretCarry:
+    """One round of eq. (10) accumulation; pure and fixed-shape."""
+    return RegretCarry(ens_cum=carry.ens_cum + ens_loss,
+                       model_cum=carry.model_cum + model_losses)
+
+
+def regret_value(carry: RegretCarry) -> jnp.ndarray:
+    """R_t = cumulative ensemble loss - best model's cumulative loss."""
+    return carry.ens_cum - jnp.min(carry.model_cum)
 
 
 class RegretTracker:
-    def __init__(self, K: int):
+    """NumPy wrapper over preallocated arrays (no per-round list append).
+
+    Streaming use (reference loop / hand-rolled experiments)::
+
+        tracker = RegretTracker(K)
+        tracker.update(ens_loss, model_losses)   # once per round
+
+    Post-hoc use (scan engine)::
+
+        tracker = RegretTracker.from_rounds(ens_losses, model_losses)
+    """
+
+    def __init__(self, K: int, capacity: int = 256):
         self.K = K
-        self.ens_cum = []          # cumulative ensemble loss after each round
-        self.model_cum = []        # (K,) cumulative per-model losses
-        self._ens = 0.0
-        self._models = np.zeros(K)
+        self._n = 0
+        self._ens_cum = np.empty(capacity)          # cumulative after round t
+        self._best_cum = np.empty(capacity)         # min_k model_cum at t
+        self._models = np.zeros(K)                  # running per-model sums
+
+    # -- streaming API ----------------------------------------------------
+    def _grow(self):
+        cap = 2 * len(self._ens_cum)
+        self._ens_cum = np.resize(self._ens_cum, cap)
+        self._best_cum = np.resize(self._best_cum, cap)
 
     def update(self, ens_loss: float, model_losses: np.ndarray):
-        self._ens += float(ens_loss)
-        self._models = self._models + np.asarray(model_losses)
-        self.ens_cum.append(self._ens)
-        self.model_cum.append(self._models.copy())
+        if self._n == len(self._ens_cum):
+            self._grow()
+        prev = self._ens_cum[self._n - 1] if self._n else 0.0
+        self._models += np.asarray(model_losses, dtype=float)
+        self._ens_cum[self._n] = prev + float(ens_loss)
+        self._best_cum[self._n] = self._models.min()
+        self._n += 1
 
+    # -- bulk construction from scan-engine outputs -----------------------
+    @classmethod
+    def from_rounds(cls, ens_losses: np.ndarray,
+                    model_losses: np.ndarray) -> "RegretTracker":
+        """Build from per-round arrays: (T,) ensemble, (T, K) per-model."""
+        ens_losses = np.asarray(ens_losses, dtype=float)
+        model_losses = np.asarray(model_losses, dtype=float)
+        T, K = model_losses.shape
+        tr = cls(K, capacity=max(T, 1))
+        tr._n = T
+        tr._ens_cum[:T] = np.cumsum(ens_losses)
+        model_cum = np.cumsum(model_losses, axis=0)
+        tr._best_cum[:T] = model_cum.min(axis=1) if T else 0.0
+        tr._models = model_cum[-1] if T else np.zeros(K)
+        return tr
+
+    # -- analysis ---------------------------------------------------------
     def regret_curve(self) -> np.ndarray:
         """R_t = cumulative ensemble loss - best model's cumulative loss."""
-        ens = np.asarray(self.ens_cum)
-        best = np.asarray([m.min() for m in self.model_cum])
-        return ens - best
+        return self._ens_cum[:self._n] - self._best_cum[:self._n]
 
     def best_model(self) -> int:
-        return int(np.argmin(self.model_cum[-1]))
+        return int(np.argmin(self._models))
 
 
 def theorem1_bound(T: int, K: int, n_out_kstar_1: int, eta: float, xi: float,

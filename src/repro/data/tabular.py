@@ -17,6 +17,7 @@ Datasets (paper §IV):
 
 from __future__ import annotations
 
+import zlib
 from typing import NamedTuple
 
 import numpy as np
@@ -39,7 +40,10 @@ DATASETS = {
 
 def make_dataset(name: str, seed: int = 0) -> TabularDataset:
     n, d = DATASETS[name]
-    rng = np.random.default_rng(seed + hash(name) % 65536)
+    # zlib.crc32, not hash(): Python string hashing is salted per process
+    # (PYTHONHASHSEED), which made every process generate a different
+    # surrogate dataset — nondeterministic tests and benchmarks.
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % 65536)
     # correlated features: x = z @ M with random mixing
     z = rng.standard_normal((n, d)).astype(np.float64)
     mix = rng.standard_normal((d, d)) / np.sqrt(d)

@@ -1,8 +1,20 @@
-"""Federated-learning substrate: round simulation + mesh-sharded client
-evaluation."""
+"""Federated-learning substrate: round simulation (reference loop +
+device-resident scan engine) and mesh-sharded client evaluation.
 
-from .simulation import SimConfig, SimResult, run_simulation
+``run_simulation`` is the scan engine — the default for all callers.
+``run_simulation_reference`` is the per-round Python loop kept as the
+execution oracle: it dispatches the same round body once per round, so
+engine trajectories must match it bit-for-bit.  The round-body
+*semantics* are pinned separately against independent float64 NumPy
+oracles (see ``tests/test_engine_equivalence.py``).
+"""
+
+from .simulation import SimConfig, SimResult, run_simulation_reference
+from .engine import run_simulation_scan, run_sweep, SweepResult
 from .sharded import sharded_round_losses, make_client_eval
 
+run_simulation = run_simulation_scan
+
 __all__ = ["SimConfig", "SimResult", "run_simulation",
-           "sharded_round_losses", "make_client_eval"]
+           "run_simulation_reference", "run_simulation_scan", "run_sweep",
+           "SweepResult", "sharded_round_losses", "make_client_eval"]

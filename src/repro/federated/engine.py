@@ -1,0 +1,183 @@
+"""Device-resident simulation engine: whole experiments as one dispatch.
+
+The reference loop (`repro.federated.simulation`) pays a Python
+iteration, a jit dispatch, and host<->device transfers per round — at the
+paper's scale (thousands of rounds, sweeps over seeds and budgets) that is
+orders of magnitude slower than the hardware allows.  Here the entire
+experiment is a single jit-compiled ``jax.lax.scan`` over rounds:
+
+* the online stream cursor, client-loss evaluation and uplink-bandwidth
+  client counting are fixed-shape traceable ops (the round body is built
+  by ``make_round_body``, shared verbatim with the reference loop, so
+  trajectories match bit-for-bit),
+* metric/regret accounting rides in the carry as fixed-shape arrays
+  (``repro.core.regret.RegretCarry``),
+* ``run_sweep`` vmaps the scan over a seed axis — and optionally a budget
+  grid — so an entire table of the paper's comparisons runs as one
+  device program.
+
+``run_simulation_scan`` runs one (algo, seed, budget) configuration and
+returns the same ``SimResult`` as the reference.  It is exported from
+``repro.federated`` as ``run_simulation`` — the default for all callers.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import RegretTracker
+from .simulation import SimConfig, SimResult, make_round_body
+
+__all__ = ["run_simulation_scan", "run_sweep", "SweepResult"]
+
+
+# Compiled scans are cached per configuration: the stream data, PRNG key
+# and budget are jit *arguments*, so re-running (other seeds, other
+# datasets of the same shape, budget grids) never recompiles.
+_SCAN_CACHE: dict = {}
+_SCAN_UNROLL = 1   # >1 lets XLA fuse across rounds: faster, but rounding
+                   # then differs from the per-round reference dispatch,
+                   # breaking bit-exact trajectory equivalence
+
+
+def _cfg_key(cfg: SimConfig, T: int):
+    return (T, cfg.n_clients, cfg.clients_per_round, cfg.loss_scale,
+            cfg.uplink_bandwidth, cfg.loss_bandwidth, cfg.rates(T))
+
+
+def _make_scan(algo: str, T: int, cfg: SimConfig):
+    """Build ``scan(preds, y, costs, key, budget) -> per-round outputs``."""
+    eta, xi = cfg.rates(T)
+    eta, xi = jnp.float32(eta), jnp.float32(xi)
+
+    def scan(preds, y, costs, key, budget):
+        body, init_carry = make_round_body(
+            algo, preds, y, costs, cfg, jnp.asarray(budget, jnp.float32),
+            eta, xi)
+        _, outs = jax.lax.scan(body, init_carry(key), None, length=T,
+                               unroll=_SCAN_UNROLL)
+        return outs
+
+    return scan
+
+
+def _get_scan(algo: str, T: int, cfg: SimConfig, sweep: str = ""):
+    key = (algo, sweep) + _cfg_key(cfg, T)
+    fn = _SCAN_CACHE.get(key)
+    if fn is None:
+        scan = _make_scan(algo, T, cfg)
+        if sweep == "seeds":
+            def fn(preds, y, costs, keys, budget):
+                return jax.vmap(
+                    lambda k: _sweep_outs(scan(preds, y, costs, k, budget))
+                )(keys)
+        elif sweep == "grid":
+            def fn(preds, y, costs, keys, budgets):
+                per_seed = jax.vmap(
+                    lambda k, b: _sweep_outs(scan(preds, y, costs, k, b)),
+                    in_axes=(0, None))
+                return jax.vmap(per_seed, in_axes=(None, 0))(keys, budgets)
+        else:
+            fn = scan
+        fn = _SCAN_CACHE[key] = jax.jit(fn)
+    return fn
+
+
+def _sweep_outs(outs):
+    outs = dict(outs)
+    outs.pop("ml_norm")              # (T, K) per config: sweep keeps it lean
+    outs.pop("dom_size")
+    return outs
+
+
+def _to_result(outs, T: int, budget: float, name: str) -> SimResult:
+    """Host-side float64 metric reduction (identical to the reference's
+    ``_Metrics``) over the scan's per-round outputs."""
+    ens_sq = np.asarray(outs["ens_sq_mean"], dtype=float)
+    mse_curve = np.cumsum(ens_sq) / np.arange(1, T + 1)
+    round_costs = np.asarray(outs["cost"], dtype=float)
+    violations = int((round_costs > budget + 1e-6).sum())
+    sel_masks = np.asarray(outs["sel"])
+    tracker = RegretTracker.from_rounds(np.asarray(outs["ens_norm"]),
+                                        np.asarray(outs["ml_norm"]))
+    return SimResult(mse_curve, violations, violations / T, tracker,
+                     sel_masks.sum(1), np.asarray(outs["dom_size"]),
+                     round_costs, name, sel_masks)
+
+
+def run_simulation_scan(algo: str, preds, y, costs, T: int,
+                        cfg: SimConfig) -> SimResult:
+    """Run ``T`` rounds of ``algo`` as one jitted ``lax.scan`` dispatch.
+
+    Same arguments and result as ``run_simulation_reference`` — the
+    trajectories (selection masks, costs, loss curves) are identical; only
+    the wall-clock differs.
+    """
+    preds = jnp.asarray(preds, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    costs = jnp.asarray(costs, jnp.float32)
+    scan = _get_scan(algo, T, cfg)
+    outs = scan(preds, y, costs, jax.random.PRNGKey(cfg.seed),
+                jnp.float32(cfg.budget))
+    outs = jax.tree.map(np.asarray, outs)
+    return _to_result(outs, T, cfg.budget, algo)
+
+
+class SweepResult:
+    """Stacked curves from a vmapped sweep.
+
+    Leading axes of every field are the sweep axes: ``(n_seeds, T, ...)``,
+    or ``(n_budgets, n_seeds, T, ...)`` when a budget grid was given.
+
+    Fields: ``mse_curves``, ``regret_curves`` (on-device float32
+    accumulation), ``sel_sizes``, ``round_costs``, ``violations``
+    (counts per configuration), ``seeds``, ``budgets``.
+    """
+
+    def __init__(self, outs, seeds, budgets, T: int):
+        ens_sq = np.asarray(outs["ens_sq_mean"], dtype=float)
+        self.mse_curves = np.cumsum(ens_sq, -1) / np.arange(1, T + 1)
+        self.regret_curves = np.asarray(outs["regret"], dtype=float)
+        self.sel_sizes = np.asarray(outs["sel"]).sum(-1)
+        self.round_costs = np.asarray(outs["cost"], dtype=float)
+        b = np.asarray(budgets, dtype=float)
+        bcast = b[:, None, None] if b.ndim else b
+        self.violations = (self.round_costs > bcast + 1e-6).sum(-1)
+        self.seeds = np.asarray(seeds)
+        self.budgets = b
+
+    @property
+    def final_mse(self) -> np.ndarray:
+        return self.mse_curves[..., -1]
+
+
+def run_sweep(algo: str, preds, y, costs, T: int, cfg: SimConfig,
+              seeds: Sequence[int],
+              budgets: Optional[Sequence[float]] = None) -> SweepResult:
+    """Vmap the scan engine over seeds (and optionally a budget grid).
+
+    One compiled program executes every (budget, seed) configuration —
+    the sweep the paper's tables need, in a single device dispatch.
+    Per-round (T, K) loss matrices are not materialized per
+    configuration; regret accumulates on device via ``RegretCarry``.
+    """
+    preds = jnp.asarray(preds, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    costs = jnp.asarray(costs, jnp.float32)
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    if budgets is None:
+        fn = _get_scan(algo, T, cfg, sweep="seeds")
+        outs = fn(preds, y, costs, keys, jnp.float32(cfg.budget))
+        budgets_arr = np.float64(cfg.budget)
+    else:
+        budgets_j = jnp.asarray(list(budgets), jnp.float32)
+        fn = _get_scan(algo, T, cfg, sweep="grid")
+        outs = fn(preds, y, costs, keys, budgets_j)
+        budgets_arr = np.asarray(budgets_j)
+    outs = jax.tree.map(np.asarray, outs)
+    return SweepResult(outs, seeds, budgets_arr, T)

@@ -25,7 +25,11 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.5 exports shard_map at top level
+    from jax import shard_map
+except ImportError:  # jax 0.4.x keeps it in jax.experimental
+    from jax.experimental.shard_map import shard_map
 
 __all__ = ["sharded_round_losses", "make_client_eval"]
 

@@ -1,4 +1,4 @@
-"""Federated ensemble-learning simulation (paper §IV setup).
+"""Federated ensemble-learning simulation (paper §IV setup): reference loop.
 
 100 clients, a server holding the 22-expert pool, an online stream: at each
 round the server plans a transmit set (EFL-FG graph draw or FedBoost
@@ -15,11 +15,22 @@ squared errors: MSE_t = (1/t) sum_tau (1/|C_tau|) sum_i (yhat - y)^2.
 The number of clients per round follows the paper's uplink bandwidth
 formula N_t = floor(b_t / (b_loss * (|S_t| + 1))) when ``uplink_bandwidth``
 is set, else it is the fixed ``clients_per_round``.
+
+This module holds the *reference* execution path: one Python iteration per
+round, one jitted dispatch of the round body, host-side float64 metric
+bookkeeping.  The device-resident engine (`repro.federated.engine`) runs
+the *same* round body — built by ``make_round_body`` from the traceable
+pieces below — as a single ``lax.scan``, so the two paths produce
+bit-identical trajectories (selection masks, costs, losses) and differ
+only in execution strategy.  Equivalence is pinned by
+``tests/test_engine_equivalence.py``; use the engine for anything
+performance-sensitive.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
 from typing import Optional
 
 import numpy as np
@@ -27,11 +38,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (init_state, plan_round, update_state,
-                        fedboost_init, fedboost_plan, fedboost_update,
+from repro.core import (init_state, fedboost_init,
+                        make_eflfg_scan_body, make_fedboost_scan_body,
+                        regret_init, regret_update, regret_value,
                         RegretTracker)
 
-__all__ = ["SimConfig", "SimResult", "run_simulation"]
+__all__ = ["SimConfig", "SimResult", "run_simulation_reference",
+           "make_round_body", "client_window_losses", "fedboost_window_grad",
+           "n_clients_traceable", "eval_window"]
 
 
 @dataclass
@@ -46,6 +60,11 @@ class SimConfig:
     loss_bandwidth: float = 1.0       # b_loss
     seed: int = 0
 
+    def rates(self, T: int):
+        eta = self.eta if self.eta is not None else 1.0 / np.sqrt(T)
+        xi = self.xi if self.xi is not None else 1.0 / np.sqrt(T)
+        return float(eta), float(xi)
+
 
 @dataclass
 class SimResult:
@@ -57,129 +76,239 @@ class SimResult:
     dom_sizes: np.ndarray            # |D_t| per round (EFL-FG only)
     round_costs: np.ndarray
     name: str = ""
+    sel_masks: Optional[np.ndarray] = None  # (T, K) bool transmit sets
 
     @property
     def final_mse(self) -> float:
         return float(self.mse_curve[-1])
 
 
+# ---------------------------------------------------------------------------
+# Traceable client-side evaluation (shared by reference loop + scan engine)
+# ---------------------------------------------------------------------------
+
+def eval_window(cfg: SimConfig) -> int:
+    """Static per-round client-window size.
+
+    With the bandwidth formula active, N_t is data dependent (up to
+    ``n_clients``); a fixed window + mask keeps every shape static so the
+    same code jits, scans, and vmaps.  Without it N_t is constant.
+    """
+    if cfg.uplink_bandwidth is None:
+        return cfg.clients_per_round
+    return cfg.n_clients
+
+
+def n_clients_traceable(cfg: SimConfig, sel_size: jnp.ndarray) -> jnp.ndarray:
+    """Paper's uplink formula N_t = floor(b_t / (b_loss (|S_t|+1))) as a
+    traceable float32 computation (clamped to [1, n_clients])."""
+    if cfg.uplink_bandwidth is None:
+        return jnp.full_like(sel_size, cfg.clients_per_round)
+    n = jnp.floor(jnp.float32(cfg.uplink_bandwidth)
+                  / (jnp.float32(cfg.loss_bandwidth)
+                     * (sel_size.astype(jnp.float32) + 1.0)))
+    return jnp.clip(n.astype(sel_size.dtype), 1, cfg.n_clients)
+
+
+@partial(jax.jit, static_argnames=("window",))
+def client_window_losses(preds: jnp.ndarray, y: jnp.ndarray,
+                         cursor: jnp.ndarray, n_t: jnp.ndarray,
+                         mix: jnp.ndarray, loss_scale: float, window: int):
+    """One round of client-side evaluation on a fixed-size stream window.
+
+    The round's ``n_t`` active clients are the first ``n_t`` positions of
+    the ``window``-wide slice starting at ``cursor`` (wrapping); the rest
+    are masked out.
+
+    Returns ``(ens_sq_mean, ens_loss_norm, model_losses_norm)``.
+    """
+    n_stream = preds.shape[1]
+    offs = jnp.arange(window)
+    idx = (cursor + offs) % n_stream
+    cmask = offs < n_t
+    p_cl = preds[:, idx]                           # (K, window)
+    y_cl = y[idx]
+    sq = (p_cl - y_cl[None, :]) ** 2               # per-model sq errors
+    model_losses = jnp.where(cmask[None, :],
+                             jnp.minimum(sq / loss_scale, 1.0), 0.0).sum(1)
+    yhat = mix @ p_cl                              # true ensemble prediction
+    ens_sq = jnp.where(cmask, (yhat - y_cl) ** 2, 0.0)
+    ens_sq_mean = ens_sq.sum() / n_t.astype(ens_sq.dtype)
+    ens_loss = jnp.minimum(ens_sq / loss_scale, 1.0).sum()
+    return ens_sq_mean, ens_loss, model_losses
+
+
+@partial(jax.jit, static_argnames=("window",))
+def fedboost_window_grad(preds: jnp.ndarray, y: jnp.ndarray,
+                         cursor: jnp.ndarray, n_t: jnp.ndarray,
+                         mix: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Streaming clients' SGD gradient of the ensemble loss wrt the mixture
+    weights over the round's window: g_k = 2/n sum_i (yhat - y) f_k(x_i)."""
+    n_stream = preds.shape[1]
+    offs = jnp.arange(window)
+    idx = (cursor + offs) % n_stream
+    cmask = offs < n_t
+    p_cl = preds[:, idx]
+    y_cl = y[idx]
+    resid = jnp.where(cmask, mix @ p_cl - y_cl, 0.0)
+    return (2.0 / n_t.astype(resid.dtype)) * (p_cl @ resid)
+
+
+def _eflfg_loss_fn(preds, y, cfg, W):
+    """Client-side evaluation closure for the EFL-FG round body.
+
+    ``loss_carry = (stream cursor, RegretCarry)``; the per-round ``out``
+    pytree carries everything the metric layers need.
+    """
+    def loss_fn(plan, loss_carry):
+        cursor, racc = loss_carry
+        sel_size = jnp.sum(plan.sel).astype(jnp.int32)
+        n_t = n_clients_traceable(cfg, sel_size)
+        ens_sq, ens_norm, ml_norm = client_window_losses(
+            preds, y, cursor, n_t, plan.mix, cfg.loss_scale, W)
+        racc = regret_update(racc, ens_norm, ml_norm)
+        out = dict(sel=plan.sel, dom_size=jnp.sum(plan.dom),
+                   cost=plan.round_cost, ens_sq_mean=ens_sq,
+                   ens_norm=ens_norm, ml_norm=ml_norm,
+                   regret=regret_value(racc))
+        cursor = (cursor + n_t) % preds.shape[1]
+        return ml_norm, ens_norm, (cursor, racc), out
+    return loss_fn
+
+
+def _fedboost_grad_fn(preds, y, cfg, W):
+    """Client-side gradient closure for the FedBoost round body."""
+    def grad_fn(plan, loss_carry):
+        sel, _pi, mix, cost = plan
+        cursor, racc = loss_carry
+        sel_size = jnp.sum(sel).astype(jnp.int32)
+        n_t = n_clients_traceable(cfg, sel_size)
+        ens_sq, ens_norm, ml_norm = client_window_losses(
+            preds, y, cursor, n_t, mix, cfg.loss_scale, W)
+        grad = fedboost_window_grad(preds, y, cursor, n_t, mix, W)
+        racc = regret_update(racc, ens_norm, ml_norm)
+        out = dict(sel=sel, dom_size=jnp.zeros((), jnp.int32),
+                   cost=cost, ens_sq_mean=ens_sq,
+                   ens_norm=ens_norm, ml_norm=ml_norm,
+                   regret=regret_value(racc))
+        cursor = (cursor + n_t) % preds.shape[1]
+        return grad, (cursor, racc), out
+    return grad_fn
+
+
+def make_round_body(algo: str, preds, y, costs, cfg: SimConfig, budget,
+                    eta, xi):
+    """Build the one-round scan body and its initial-carry constructor.
+
+    Returns ``(body, init_carry)`` where ``body(carry, _) -> (carry, out)``
+    is a pure traceable function (the ``lax.scan`` body) and
+    ``init_carry(key)`` builds the round-0 carry.  The reference loop runs
+    ``body`` once per Python iteration; the engine scans it — the round
+    computation itself is the same traced function either way.
+    """
+    K = preds.shape[0]
+    W = eval_window(cfg)
+    if algo == "eflfg":
+        body = make_eflfg_scan_body(
+            _eflfg_loss_fn(preds, y, cfg, W), costs, budget, eta, xi)
+        algo_init = lambda: init_state(K)
+    elif algo == "fedboost":
+        body = make_fedboost_scan_body(
+            _fedboost_grad_fn(preds, y, cfg, W), costs, budget, eta)
+        algo_init = lambda: fedboost_init(K)
+    else:
+        raise ValueError(f"unknown algo {algo!r}")
+
+    def init_carry(key):
+        return (algo_init(), key, (jnp.int32(0), regret_init(K)))
+
+    return body, init_carry
+
+
+# ---------------------------------------------------------------------------
+# Reference loop: per-round dispatch, host-side float64 metrics
+# ---------------------------------------------------------------------------
+
 class _Metrics:
     def __init__(self, K: int, T: int, budget: float):
-        self.regret = RegretTracker(K)
+        self.regret = RegretTracker(K, capacity=T)
         self.T, self.budget = T, budget
         self.mse_curve = np.empty(T)
         self.sel_sizes = np.zeros(T, dtype=int)
         self.dom_sizes = np.zeros(T, dtype=int)
         self.round_costs = np.empty(T)
+        self.sel_masks = np.zeros((T, K), dtype=bool)
         self.violations = 0
         self._sq = 0.0
 
-    def record(self, t, sel_size, cost, ens_sq_mean, ens_loss_norm,
-               model_losses_norm, dom_size=0):
-        self.sel_sizes[t] = sel_size
-        self.dom_sizes[t] = dom_size
+    def record(self, t, out):
+        sel = np.asarray(out["sel"])
+        cost = float(out["cost"])
+        self.sel_masks[t] = sel
+        self.sel_sizes[t] = int(sel.sum())
+        self.dom_sizes[t] = int(out["dom_size"])
         self.round_costs[t] = cost
         if cost > self.budget + 1e-6:
             self.violations += 1
-        self._sq += ens_sq_mean
+        self._sq += float(out["ens_sq_mean"])
         self.mse_curve[t] = self._sq / (t + 1)
-        self.regret.update(ens_loss_norm, model_losses_norm)
+        self.regret.update(float(out["ens_norm"]), np.asarray(out["ml_norm"]))
 
     def result(self, name) -> SimResult:
         return SimResult(self.mse_curve, self.violations,
                          self.violations / self.T, self.regret,
                          self.sel_sizes, self.dom_sizes, self.round_costs,
-                         name)
+                         name, self.sel_masks)
 
 
-def _clients_for_round(cfg: SimConfig, sel_size: int) -> int:
-    if cfg.uplink_bandwidth is None:
-        return cfg.clients_per_round
-    n = int(cfg.uplink_bandwidth // (cfg.loss_bandwidth * (sel_size + 1)))
-    return max(1, min(n, cfg.n_clients))
+# Jitted per-round steps are cached per configuration, mirroring the
+# engine's scan cache (stream data, budget and rates are jit arguments):
+# repeated reference runs retrace nothing, so reference-vs-engine
+# benchmarks compare execution strategies, not compile counts.
+_STEP_CACHE: dict = {}
 
 
-def _client_losses(preds_np, y, cursor, n_t, mix, loss_scale):
-    """One round of client-side evaluation on the next n_t stream samples.
-    Returns (new_cursor, ens_sq_mean, ens_loss_norm, model_losses_norm)."""
-    n_stream = preds_np.shape[1]
-    idx = np.arange(cursor, cursor + n_t) % n_stream
-    p_cl = preds_np[:, idx]                        # (K, n_t)
-    y_cl = y[idx]
-    sq = (p_cl - y_cl[None, :]) ** 2               # per-model sq errors
-    model_losses_norm = np.minimum(sq / loss_scale, 1.0).sum(1)
-    yhat = mix @ p_cl                              # true ensemble prediction
-    ens_sq = (yhat - y_cl) ** 2
-    return (cursor + n_t, float(ens_sq.mean()),
-            float(np.minimum(ens_sq / loss_scale, 1.0).sum()),
-            model_losses_norm)
+def _get_step(algo: str, cfg: SimConfig, eta: float, xi: float):
+    # eta/xi ride in the closure as compile-time constants — the same
+    # structure as the engine's scan (engine._make_scan), so XLA folds
+    # constants identically in both programs and trajectories stay
+    # bit-identical between the two execution paths.
+    key = (algo, cfg.n_clients, cfg.clients_per_round, cfg.loss_scale,
+           cfg.uplink_bandwidth, cfg.loss_bandwidth, eta, xi)
+    fn = _STEP_CACHE.get(key)
+    if fn is None:
+        eta_j, xi_j = jnp.float32(eta), jnp.float32(xi)
+
+        def step(preds, y, costs, budget, carry):
+            body, _ = make_round_body(algo, preds, y, costs, cfg, budget,
+                                      eta_j, xi_j)
+            return body(carry, None)
+        fn = _STEP_CACHE[key] = jax.jit(step)
+    return fn
 
 
-def run_simulation(algo: str, preds, y, costs, T: int,
-                   cfg: SimConfig) -> SimResult:
-    """Run ``T`` rounds of ``algo`` in {"eflfg", "fedboost"}.
+def run_simulation_reference(algo: str, preds, y, costs, T: int,
+                             cfg: SimConfig) -> SimResult:
+    """Run ``T`` rounds of ``algo`` in {"eflfg", "fedboost"}, one Python
+    iteration and one device dispatch per round (the execution oracle the
+    scan engine is tested against; see module docstring).
 
     ``preds``: (K, n_stream) precomputed expert predictions on the online
     stream (identical numbers to per-round client evaluation — clients are
     deterministic functions of the transmitted models, so precomputation is
     a pure speed optimization, not a semantic change).
     """
-    preds_np = np.asarray(preds)
-    y = np.asarray(y)
+    preds = jnp.asarray(preds, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
     costs = jnp.asarray(costs, jnp.float32)
-    K = preds_np.shape[0]
-    eta = cfg.eta if cfg.eta is not None else 1.0 / np.sqrt(T)
-    xi = cfg.xi if cfg.xi is not None else 1.0 / np.sqrt(T)
-    eta_j, xi_j, budget_j = (jnp.float32(eta), jnp.float32(xi),
-                             jnp.float32(cfg.budget))
-    key = jax.random.PRNGKey(cfg.seed)
-    metrics = _Metrics(K, T, cfg.budget)
-    cursor = 0
-    costs_np = np.asarray(costs)
-
-    if algo == "eflfg":
-        state = init_state(K)
-        plan_fn = jax.jit(lambda s, k: plan_round(s, k, costs, budget_j, xi_j))
-        upd_fn = jax.jit(
-            lambda s, pl, ml, el: update_state(s, pl, ml, el, eta_j))
-        for t in range(T):
-            key, kdraw = jax.random.split(key)
-            plan = plan_fn(state, kdraw)
-            sel = np.asarray(plan.sel)
-            mix = np.asarray(plan.mix, np.float64)
-            n_t = _clients_for_round(cfg, int(sel.sum()))
-            cursor, ens_sq, ens_norm, ml_norm = _client_losses(
-                preds_np, y, cursor, n_t, mix, cfg.loss_scale)
-            state = upd_fn(state, plan, jnp.asarray(ml_norm, jnp.float32),
-                           jnp.float32(ens_norm))
-            metrics.record(t, int(sel.sum()), float(plan.round_cost),
-                           ens_sq, ens_norm, ml_norm,
-                           dom_size=int(np.asarray(plan.dom).sum()))
-
-    elif algo == "fedboost":
-        state = fedboost_init(K)
-        plan_fn = jax.jit(lambda s, k: fedboost_plan(s, k, costs, budget_j))
-        upd_fn = jax.jit(fedboost_update)
-        for t in range(T):
-            key, ksub = jax.random.split(key)
-            sel_j, pi, mix_j, cost_j = plan_fn(state, ksub)
-            sel = np.asarray(sel_j)
-            mix = np.asarray(mix_j, np.float64)
-            n_t = _clients_for_round(cfg, int(sel.sum()))
-            idx = np.arange(cursor, cursor + n_t) % preds_np.shape[1]
-            cursor, ens_sq, ens_norm, ml_norm = _client_losses(
-                preds_np, y, cursor - 0, n_t, mix, cfg.loss_scale)
-            # streaming clients uplink the SGD gradient of the ensemble
-            # loss wrt the mixture weights: g_k = 2/n sum_i (yhat-y) f_k(x)
-            p_cl = preds_np[:, idx]
-            y_cl = y[idx]
-            resid = mix @ p_cl - y_cl
-            grad = (2.0 / n_t) * (p_cl @ resid)
-            state = upd_fn(state, sel_j, pi,
-                           jnp.asarray(grad, jnp.float32), eta_j)
-            metrics.record(t, int(sel.sum()), float(cost_j), ens_sq,
-                           ens_norm, ml_norm)
-    else:
-        raise ValueError(f"unknown algo {algo!r}")
-
+    eta, xi = cfg.rates(T)
+    budget_j = jnp.float32(cfg.budget)
+    step = _get_step(algo, cfg, eta, xi)
+    _, init_carry = make_round_body(algo, preds, y, costs, cfg, budget_j,
+                                    jnp.float32(eta), jnp.float32(xi))
+    metrics = _Metrics(preds.shape[0], T, cfg.budget)
+    carry = init_carry(jax.random.PRNGKey(cfg.seed))
+    for t in range(T):
+        carry, out = step(preds, y, costs, budget_j, carry)
+        metrics.record(t, out)
     return metrics.result(algo)

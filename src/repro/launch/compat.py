@@ -1,0 +1,14 @@
+"""Cross-version jax compatibility helpers."""
+
+from __future__ import annotations
+
+__all__ = ["cost_analysis_dict"]
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a [dict] on jax 0.4.x and a
+    plain dict on newer jax; normalize to a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca

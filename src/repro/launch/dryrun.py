@@ -95,7 +95,10 @@ def run_one(arch: str, shape: str, mesh_name: str, *, fsdp=None, accum=None,
     meta["mesh"] = mesh_name
     meta["devices"] = int(mesh.devices.size)
 
-    jax.set_mesh(mesh)
+    from repro.launch.mesh import set_global_mesh, as_shardings
+    set_global_mesh(mesh)
+    in_specs = as_shardings(mesh, in_specs)
+    out_specs = as_shardings(mesh, out_specs)
     # serving donates the KV/SSM caches (argument 1): the updated cache
     # aliases the input buffer instead of double-buffering — on v5e this
     # is the difference between fitting and not for the 32k MHA caches.
@@ -124,7 +127,8 @@ def run_one(arch: str, shape: str, mesh_name: str, *, fsdp=None, accum=None,
         rec["memory"] = {"error": str(e)}
 
     try:
-        ca = compiled.cost_analysis()
+        from repro.launch.compat import cost_analysis_dict
+        ca = cost_analysis_dict(compiled)
         rec["cost"] = {k: float(v) for k, v in ca.items()
                        if isinstance(v, (int, float)) and
                        ("flops" in k or "bytes" in k or "utilization" not in k)}

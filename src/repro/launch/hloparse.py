@@ -115,7 +115,10 @@ def _dot_flops(lines):
             continue
         out = shapes.get(name, [])
         cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
-        lhs_name_m = re.search(r"dot\(\s*%?([\w.\-]+)", rhs)
+        # operands may carry inline type annotations: dot(f32[4,64]{1,0} %x, ...)
+        lhs_name_m = re.search(
+            r"dot\(\s*(?:(?:pred|bf16|f8e4m3fn|f8e5m2|[suf]\d+|c64|c128|token"
+            r"|opaque)\[[\d,]*\](?:\{[\d,*]*\})?\s+)?%?([\w.\-]+)", rhs)
         k = 1
         if cm and lhs_name_m:
             lhs = shapes.get(lhs_name_m.group(1), [])

@@ -12,8 +12,10 @@ XLA_FLAGS before any jax initialization and only then builds the mesh.
 from __future__ import annotations
 
 import jax
+from jax.sharding import NamedSharding, PartitionSpec
 
-__all__ = ["make_production_mesh", "data_axes", "MESH_SHAPES"]
+__all__ = ["make_production_mesh", "data_axes", "MESH_SHAPES",
+           "set_global_mesh", "as_shardings"]
 
 MESH_SHAPES = {
     "pod": ((16, 16), ("data", "model")),
@@ -24,6 +26,26 @@ MESH_SHAPES = {
 def make_production_mesh(*, multi_pod: bool = False):
     shape, axes = MESH_SHAPES["multipod" if multi_pod else "pod"]
     return jax.make_mesh(shape, axes)
+
+
+def set_global_mesh(mesh) -> None:
+    """``jax.set_mesh`` compat: real call on jax>=0.5, context entry on 0.4.x
+    (where ``with mesh:`` is the only way to install a global mesh)."""
+    if hasattr(jax, "set_mesh"):
+        jax.set_mesh(mesh)
+    else:
+        mesh.__enter__()
+
+
+def as_shardings(mesh, specs):
+    """PartitionSpec pytree -> NamedSharding pytree.
+
+    jax 0.4.x rejects bare ``PartitionSpec`` in ``jit`` in/out_shardings;
+    newer jax accepts either, so this is always safe to apply.
+    """
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, PartitionSpec) else s,
+        specs, is_leaf=lambda s: isinstance(s, PartitionSpec))
 
 
 def data_axes(mesh) -> tuple:

@@ -62,8 +62,10 @@ from repro.models import get_config, model
 from repro.optim import AdamWConfig, make_train_step, init_train_state
 from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import set_global_mesh, as_shardings
+
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-jax.set_mesh(mesh)
+set_global_mesh(mesh)
 
 cfg = get_config("qwen3-1.7b").reduced(n_layers=2, vocab_size=2048,
                                        d_model=256, n_heads=4, n_kv_heads=2)
@@ -94,15 +96,19 @@ sspecs = sh.train_state_specs(state_shapes, pspecs)
 batch = tuple(jax.ShapeDtypeStruct((16, 64), d)
               for d in (jnp.int32, jnp.int32, jnp.float32))
 bspecs = sh.batch_specs(batch, mesh)
-lowered = jax.jit(step, in_shardings=(sspecs, bspecs),
-                  out_shardings=(sspecs, None)).lower(state_shapes, batch)
+lowered = jax.jit(step, in_shardings=as_shardings(mesh, (sspecs, bspecs)),
+                  out_shardings=as_shardings(mesh, (sspecs, None))
+                  ).lower(state_shapes, batch)
 compiled = lowered.compile()
+from repro.launch.compat import cost_analysis_dict
+
 ma = compiled.memory_analysis()
+ca = cost_analysis_dict(compiled)
 print(json.dumps({
     "ok": True,
     "devices": jax.device_count(),
     "temp": int(ma.temp_size_in_bytes),
-    "flops": float(compiled.cost_analysis().get("flops", 0)),
+    "flops": float(ca.get("flops", 0)),
 }))
 """
 
@@ -113,7 +119,9 @@ def test_multipod_reduced_dryrun_subprocess():
     512-device production compile."""
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
-    env.pop("JAX_PLATFORMS", None)
+    # forced host devices only exist on the CPU platform; pinning it also
+    # skips the (slow, sandbox-hostile) accelerator backend probe.
+    env["JAX_PLATFORMS"] = "cpu"
     p = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
                        capture_output=True, text=True, env=env, timeout=420)
     assert p.returncode == 0, p.stderr[-3000:]

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.ensemble_combine import ops as ec_ops, ref as ec_ref

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import sdpa, chunked_sdpa
