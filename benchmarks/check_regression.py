@@ -1,0 +1,191 @@
+"""CI benchmark-regression gate for the simulation engine.
+
+Runs a fresh ``BENCH_FAST=1`` engine benchmark in-process (median-of-5,
+the noise-robust fast-mode estimator) — or reuses an already-measured
+record via ``BENCH_REGRESSION_FRESH=path``, as CI does with the
+benchmark-smoke step's output — and compares it against the committed
+``BENCH_engine.json`` baseline's ``fast`` section.  The job
+fails (exit 1) when any gated engine timing slows down by more than
+``BENCH_REGRESSION_THRESHOLD`` (default 0.30 = 30%).
+
+CI runners and developer machines differ in raw speed, so absolute
+wall-clock cannot be gated across machines without false alarms.  Every
+gated timing is therefore *machine-normalized* first: divided by the
+same run's ``t_reference_s`` (the warm per-round reference loop — the
+same code in baseline and fresh runs, so it cancels the hardware's
+speed out of the ratio).  A >30% regression in the normalized timing
+means the engine got slower relative to the machine it runs on — a real
+code regression, not a slow runner.  Raw per-round timings are printed
+alongside as context and warned about (never failed) when they drift.
+
+The gate also trips on correctness regressions: the fresh run must
+reproduce reference-vs-scan and fused-vs-unfused selection-mask
+equality (the ``*_trajectories_identical`` flags).
+
+    PYTHONPATH=src python -m benchmarks.check_regression [baseline.json]
+
+Exit codes: 0 ok, 1 regression, 2 missing/invalid baseline.  Baselines
+are refreshed by re-running ``benchmarks.engine_bench`` (each mode
+rewrites its own section; commit the updated BENCH_engine.json).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+# Timings gated after machine normalization (divided by t_reference_s).
+GATED = ("t_scan_s", "t_scan_unfused_s", "t_sweep8_s")
+# Timings only reported/warned (the canary itself + the retracing loop).
+REPORTED = ("t_reference_s", "t_loop_baseline_s")
+ALGOS = ("eflfg", "fedboost")
+
+
+def _fail(msg: str, code: int = 1):
+    print(f"REGRESSION-GATE FAIL: {msg}", file=sys.stderr)
+    sys.exit(code)
+
+
+def load_baseline(path: str) -> dict:
+    if not os.path.exists(path):
+        _fail(f"baseline {path} not found — run "
+              "`BENCH_FAST=1 python -m benchmarks.engine_bench` and commit "
+              "BENCH_engine.json", code=2)
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != 2 or "fast" not in doc:
+        _fail(f"baseline {path} has no fast-mode section (schema "
+              f"{doc.get('schema')!r}) — refresh it with "
+              "`BENCH_FAST=1 python -m benchmarks.engine_bench`", code=2)
+    return doc["fast"]
+
+
+def check(base: dict, fresh: dict, threshold: float):
+    """Compare one fresh fast-mode record against the baseline section.
+
+    Returns (failures, warnings): warnings are strings; each failure is a
+    ``(kind, message)`` tuple with kind ``"timing"`` (rerunning may clear
+    CI noise) or ``"hard"`` (deterministic — retrying cannot help).
+    """
+    failures, warnings = [], []
+    for algo in ALGOS:
+        b, f = base.get(algo), fresh.get(algo)
+        if b is None or f is None:
+            failures.append(("hard", f"{algo}: section missing from "
+                             f"{'baseline' if b is None else 'fresh run'}"))
+            continue
+        for flag in ("trajectories_identical",
+                     "fused_trajectories_identical"):
+            if not f.get(flag, False):
+                failures.append(("hard", f"{algo}: {flag} is false in the "
+                                 "fresh run (engine correctness "
+                                 "regression)"))
+        bref, fref = b["t_reference_s"], f["t_reference_s"]
+        if bref <= 0 or fref <= 0:
+            failures.append(("hard", f"{algo}: non-positive reference "
+                             "timing"))
+            continue
+        for key in GATED:
+            if key not in b or key not in f:
+                warnings.append(f"{algo}/{key}: missing from "
+                                f"{'baseline' if key not in b else 'fresh run'}"
+                                " — gate skipped")
+                continue
+            b_rel, f_rel = b[key] / bref, f[key] / fref
+            ratio = f_rel / b_rel if b_rel > 0 else float("inf")
+            line = (f"{algo}/{key}: normalized {b_rel:.3f} -> {f_rel:.3f} "
+                    f"(x{ratio:.2f}); raw {b[key]:.4f}s -> {f[key]:.4f}s")
+            if ratio > 1.0 + threshold:
+                failures.append(("timing",
+                                 line + f"  [> +{threshold:.0%}]"))
+            else:
+                print("  ok   " + line)
+        for key in REPORTED:
+            if key in b and key in f and b[key] > 0:
+                ratio = f[key] / b[key]
+                if ratio > 1.0 + threshold:
+                    warnings.append(f"{algo}/{key}: raw {b[key]:.4f}s -> "
+                                    f"{f[key]:.4f}s (x{ratio:.2f}) — "
+                                    "machine-dependent, not gated")
+    return failures, warnings
+
+
+def _merge_best(fresh_runs: list) -> dict:
+    """Per-metric best (min) across repeated fresh runs: transient CI
+    load only ever inflates a timing, so the min over retries is the
+    noise-robust view the gate should judge.  Correctness flags must
+    hold in *every* run (all-of semantics)."""
+    best = json.loads(json.dumps(fresh_runs[0]))
+    for run in fresh_runs[1:]:
+        for algo in ALGOS:
+            got = run.get(algo, {})
+            mine = best.setdefault(algo, {})
+            for key in GATED + REPORTED:
+                if key in got and key in mine:
+                    mine[key] = min(mine[key], got[key])
+            for flag in ("trajectories_identical",
+                         "fused_trajectories_identical"):
+                if flag in mine:
+                    mine[flag] = mine[flag] and got.get(flag, False)
+    return best
+
+
+def main():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks.engine_bench import OUT_PATH, run_engine_bench
+
+    baseline_path = sys.argv[1] if len(sys.argv) > 1 else OUT_PATH
+    threshold = float(os.environ.get("BENCH_REGRESSION_THRESHOLD", "0.30"))
+    retries = int(os.environ.get("BENCH_REGRESSION_RETRIES", "2"))
+    base = load_baseline(baseline_path)
+    print(f"baseline: {os.path.abspath(baseline_path)} (fast section, "
+          f"T={base.get('T')}); threshold +{threshold:.0%}")
+    # BENCH_REGRESSION_FRESH reuses an already-measured fast record (CI's
+    # benchmark-smoke output) as the first sample, so the gate only pays
+    # for a bench run when a retry is actually needed.
+    fresh = None
+    fresh_path = os.environ.get("BENCH_REGRESSION_FRESH", "")
+    if fresh_path and os.path.exists(fresh_path):
+        try:
+            with open(fresh_path) as f:
+                doc = json.load(f)
+            if doc.get("schema") == 2 and doc.get("fast", {}).get("fast"):
+                fresh = doc["fast"]
+                print(f"fresh sample: reusing {fresh_path} (smoke run)")
+        except (json.JSONDecodeError, OSError):
+            pass
+    if fresh is None:
+        print("running fresh fast-mode engine bench (median of 5, warm)...")
+        _, fresh = run_engine_bench(fast=True)
+    fresh_runs = [fresh]
+
+    failures, warnings = check(base, fresh, threshold)
+    # A loaded runner inflates timings transiently; retry (compiles are
+    # already cached, so reruns are cheap) and judge the per-metric best.
+    # Only timing failures are retryable — correctness-flag and
+    # missing-section failures are deterministic, so rerunning the bench
+    # would just burn the gate's wall-clock on an inevitable failure.
+    while (failures and retries > 0
+           and all(kind == "timing" for kind, _ in failures)):
+        retries -= 1
+        print(f"  {len(failures)} metric(s) over threshold — retrying "
+              f"({retries} retr{'y' if retries == 1 else 'ies'} left)...")
+        # The retracing loop baseline is reported, never gated — skip it
+        # on retries (it dominates a fast-mode run's wall-clock).
+        _, rerun = run_engine_bench(fast=True, skip_loop_baseline=True)
+        fresh_runs.append(rerun)
+        failures, warnings = check(base, _merge_best(fresh_runs), threshold)
+
+    for w in warnings:
+        print("  warn " + w)
+    if failures:
+        for _, line in failures:
+            print("  FAIL " + line, file=sys.stderr)
+        _fail(f"{len(failures)} gate check(s) failed "
+              f"(threshold +{threshold:.0%})")
+    print("regression gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,11 @@ Paper configuration: T=2000 rounds, the K=22 expert pool size, 100
 clients, budget B=3.  The stream is synthetic (the engine's cost is
 independent of where the (K, n_stream) prediction matrix came from).
 
-Three timings per algorithm, all best-of-5 warm (compiles excluded):
+Timings per algorithm (warm, compiles excluded; repetitions are
+*interleaved* across paths so transient machine load cancels out of the
+gate's normalized ratios; full mode reports best-of-5 — the classic
+noise-floor estimator — while ``BENCH_FAST=1`` reports median-of-5, the
+robust estimator the CI regression gate compares against):
 
 * ``t_loop_baseline_s`` — a faithful reconstruction of the pre-engine
   ``run_simulation`` loop (per-call jit lambdas, float64 NumPy client
@@ -14,9 +18,19 @@ Three timings per algorithm, all best-of-5 warm (compiles excluded):
   retraces — that is its shipped behavior, so it is timed as such.
 * ``t_reference_s`` — the in-tree ``run_simulation_reference``: the
   bit-exact per-round execution oracle (cached jitted step, host
-  metrics).
-* ``t_scan_s`` — the ``lax.scan`` engine; ``t_sweep8_s`` vmaps it over
-  8 seeds.
+  metrics).  Doubles as the machine-speed canary the regression gate
+  normalizes by.
+* ``t_scan_s`` — the ``lax.scan`` engine with the default Pallas-fused
+  client eval; ``t_scan_unfused_s`` flips ``SimConfig.use_fused`` off
+  (the ~6-small-op round body the kernel replaced) and
+  ``fused_round_speedup`` is their ratio — the in-scan round-body win.
+  ``fused_trajectories_identical`` bit-compares the two engines'
+  selection masks.  ``t_sweep8_s`` vmaps the fused scan over 8 seeds.
+
+``BENCH_engine.json`` holds one section per mode (``full`` / ``fast``);
+a run refreshes its own section and preserves the other, so the
+committed baseline carries both the paper-scale numbers and the
+fast-mode medians that ``benchmarks/check_regression.py`` gates on.
 
     PYTHONPATH=src python -m benchmarks.engine_bench        # full T=2000
     BENCH_FAST=1 ... python -m benchmarks.engine_bench      # CI smoke
@@ -26,11 +40,13 @@ from __future__ import annotations
 
 import json
 import os
+import statistics
 import time
 
 import numpy as np
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
+SCHEMA = 2
 
 
 # ---------------------------------------------------------------------------
@@ -108,7 +124,15 @@ def _loop_baseline(algo, preds, y, costs, T, cfg):
     return mse
 
 
-def engine(fast: bool = False):
+def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False):
+    """Measure every engine path; returns ``(rows, rec)`` without touching
+    the baseline file (``engine`` wraps this and writes the JSON).
+
+    ``skip_loop_baseline`` drops the retracing pre-engine loop — the
+    slowest, never-gated path — so the regression gate's noise retries
+    stay cheap; its rec fields/rows are simply absent then.
+    """
+    from dataclasses import replace
     from repro.federated import (SimConfig, run_simulation_reference,
                                  run_simulation_scan, run_sweep)
 
@@ -118,61 +142,112 @@ def engine(fast: bool = False):
     preds = rng.normal(0, 1, (K, n_stream)).astype(np.float32)
     y = rng.normal(0, 1, n_stream).astype(np.float32)
     costs = rng.uniform(0.05, 1.0, K).astype(np.float32)
-    cfg = SimConfig(n_clients=n_clients, budget=3.0, seed=0)
+    cfg = SimConfig(n_clients=n_clients, budget=3.0, seed=0, use_fused=True)
+    cfg_unfused = replace(cfg, use_fused=False)
     seeds = list(range(n_seeds))
 
+    estimator = "median of 5" if fast else "best of 5"
     rec = {"T": T, "K": K, "n_clients": n_clients, "budget": cfg.budget,
-           "fast": fast, "timing": "best of 5 (warm; compiles excluded "
-           "except the baseline's per-call jits, which are its shipped "
-           "behavior)"}
+           "fast": fast,
+           "timing": f"{estimator} (warm; compiles excluded except the "
+           "baseline's per-call jits, which are its shipped behavior)"}
     rows = []
 
-    def best_of(fn, n=5):
-        """Min wall-clock over n runs — the noise-robust estimator."""
-        times, result = [], None
+    def measure_all(thunks, n=5):
+        """Time every path with *interleaved* repetitions — each rep runs
+        all paths back-to-back, so transient machine load hits them
+        equally and the regression gate's normalized ratios stay stable.
+        Warm estimator per path: best-of (full) or median-of (fast, the
+        CI-noise-robust statistic the regression gate compares)."""
+        samples = {name: [] for name in thunks}
+        results = {}
         for _ in range(n):
-            t0 = time.time()
-            result = fn()
-            times.append(time.time() - t0)
-        return min(times), result
+            for name, fn in thunks.items():
+                t0 = time.time()
+                results[name] = fn()
+                samples[name].append(time.time() - t0)
+        pick = statistics.median if fast else min
+        return {name: (pick(ts), results[name])
+                for name, ts in samples.items()}
 
     for algo in ("eflfg", "fedboost"):
         # warm every cached path before timing
         run_simulation_scan(algo, preds, y, costs, T=T, cfg=cfg)
+        run_simulation_scan(algo, preds, y, costs, T=T, cfg=cfg_unfused)
         run_simulation_reference(algo, preds, y, costs, T=T, cfg=cfg)
         run_sweep(algo, preds, y, costs, T=T, cfg=cfg, seeds=seeds)
-        t_base, _ = best_of(
-            lambda: _loop_baseline(algo, preds, y, costs, T, cfg))
-        t_scan, res_s = best_of(
-            lambda: run_simulation_scan(algo, preds, y, costs, T=T, cfg=cfg))
-        t_ref, res_r = best_of(
-            lambda: run_simulation_reference(algo, preds, y, costs, T=T,
-                                             cfg=cfg))
-        t_sweep, _ = best_of(
-            lambda: run_sweep(algo, preds, y, costs, T=T, cfg=cfg,
-                              seeds=seeds))
+        thunks = {
+            "base": lambda: _loop_baseline(algo, preds, y, costs, T, cfg),
+            "scan": lambda: run_simulation_scan(algo, preds, y, costs, T=T,
+                                                cfg=cfg),
+            "unfused": lambda: run_simulation_scan(algo, preds, y, costs,
+                                                   T=T, cfg=cfg_unfused),
+            "ref": lambda: run_simulation_reference(algo, preds, y, costs,
+                                                    T=T, cfg=cfg),
+            "sweep": lambda: run_sweep(algo, preds, y, costs, T=T, cfg=cfg,
+                                       seeds=seeds),
+        }
+        if skip_loop_baseline:
+            thunks.pop("base")
+        m = measure_all(thunks)
+        t_scan, t_unf, t_ref, t_sweep = (
+            m[k][0] for k in ("scan", "unfused", "ref", "sweep"))
+        res_s, res_u, res_r = m["scan"][1], m["unfused"][1], m["ref"][1]
         identical = bool(np.array_equal(res_r.sel_masks, res_s.sel_masks))
+        fused_identical = bool(np.array_equal(res_s.sel_masks,
+                                              res_u.sel_masks))
         rec[algo] = {
-            "t_loop_baseline_s": round(t_base, 4),
             "t_reference_s": round(t_ref, 4),
             "t_scan_s": round(t_scan, 4),
-            "speedup": round(t_base / t_scan, 2),
+            "t_scan_unfused_s": round(t_unf, 4),
             "speedup_vs_bitexact_reference": round(t_ref / t_scan, 2),
+            "fused_round_speedup": round(t_unf / t_scan, 2),
             "t_sweep8_s": round(t_sweep, 4),
             "sweep_per_seed_s": round(t_sweep / n_seeds, 4),
             "trajectories_identical": identical,
+            "fused_trajectories_identical": fused_identical,
         }
-        rows.append((f"engine/{algo}/loop_baseline_us_per_round",
-                     t_base / T * 1e6, ""))
         rows.append((f"engine/{algo}/reference_us_per_round",
                      t_ref / T * 1e6, f"{res_r.final_mse:.5f}"))
         rows.append((f"engine/{algo}/scan_us_per_round",
                      t_scan / T * 1e6, f"{res_s.final_mse:.5f}"))
-        rows.append((f"engine/{algo}/speedup", "-",
-                     f"{t_base / t_scan:.2f}"))
-    with open(OUT_PATH, "w") as f:
-        json.dump(rec, f, indent=1)
+        rows.append((f"engine/{algo}/scan_unfused_us_per_round",
+                     t_unf / T * 1e6, f"{res_u.final_mse:.5f}"))
+        rows.append((f"engine/{algo}/fused_round_speedup", "-",
+                     f"{t_unf / t_scan:.2f}"))
+        if not skip_loop_baseline:
+            t_base = m["base"][0]
+            rec[algo]["t_loop_baseline_s"] = round(t_base, 4)
+            rec[algo]["speedup"] = round(t_base / t_scan, 2)
+            rows.append((f"engine/{algo}/loop_baseline_us_per_round",
+                         t_base / T * 1e6, ""))
+            rows.append((f"engine/{algo}/speedup", "-",
+                         f"{t_base / t_scan:.2f}"))
+    return rows, rec
+
+
+def write_baseline(rec, out_path=OUT_PATH):
+    """Refresh this mode's section of the baseline file, preserving the
+    other mode's committed numbers (full and fast runs co-exist)."""
+    doc = {"schema": SCHEMA}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                prev = json.load(f)
+            if prev.get("schema") == SCHEMA:
+                doc.update({k: prev[k] for k in ("full", "fast")
+                            if k in prev})
+        except (json.JSONDecodeError, OSError):
+            pass   # unreadable baseline: rewrite from scratch
+    doc["fast" if rec["fast"] else "full"] = rec
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1)
         f.write("\n")
+
+
+def engine(fast: bool = False):
+    rows, rec = run_engine_bench(fast=fast)
+    write_baseline(rec)
     return rows
 
 

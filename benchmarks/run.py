@@ -1,6 +1,12 @@
 """Benchmark harness: one function per paper table/figure + kernels +
 roofline.  Prints ``name,us_per_call,derived`` CSV rows.
 
+Each benchmark runs isolated: a raising benchmark no longer aborts (or
+silently truncates) the whole harness — the remaining benchmarks still
+run and their rows/artifacts are emitted, but the process exits non-zero
+listing every failure, so CI fails loudly instead of uploading a
+partial artifact as if it were complete.
+
     PYTHONPATH=src python -m benchmarks.run           # full (paper rounds)
     BENCH_FAST=1 PYTHONPATH=src python -m benchmarks.run   # CI-speed
 """
@@ -9,6 +15,7 @@ from __future__ import annotations
 
 import os
 import sys
+import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -18,20 +25,35 @@ def main() -> None:
     from benchmarks import (paper_tables, kernel_bench, roofline, placement,
                             engine_bench)
 
-    rows = []
-    rows += engine_bench.engine(fast=fast)
-    rows += paper_tables.table1(fast=fast)
-    rows += paper_tables.fig1(fast=fast)
-    rows += paper_tables.regret(fast=fast)
-    rows += paper_tables.budget_sweep(fast=fast)
-    rows += placement.placement(fast=fast)
-    rows += kernel_bench.kernels()
-    rows += roofline.roofline("pod")
-    rows += roofline.roofline("multipod")
+    benches = [
+        ("engine", lambda: engine_bench.engine(fast=fast)),
+        ("table1", lambda: paper_tables.table1(fast=fast)),
+        ("fig1", lambda: paper_tables.fig1(fast=fast)),
+        ("regret", lambda: paper_tables.regret(fast=fast)),
+        ("budget_sweep", lambda: paper_tables.budget_sweep(fast=fast)),
+        ("placement", lambda: placement.placement(fast=fast)),
+        ("kernels", kernel_bench.kernels),
+        ("roofline/pod", lambda: roofline.roofline("pod")),
+        ("roofline/multipod", lambda: roofline.roofline("multipod")),
+    ]
+
+    rows, failures = [], []
+    for name, fn in benches:
+        try:
+            rows += fn()
+        except Exception:
+            failures.append(name)
+            print(f"benchmark {name!r} FAILED:", file=sys.stderr)
+            traceback.print_exc()
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us if isinstance(us, str) else f'{us:.1f}'},{derived}")
+
+    if failures:
+        print(f"{len(failures)} benchmark(s) failed: {', '.join(failures)}",
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -43,6 +43,9 @@ class EFLFGRoundOut(NamedTuple):
     sel: jnp.ndarray            # (K,) bool, S_t = N_out(I_t)
     mix: jnp.ndarray            # (K,) eq. (5) ensemble mixture weights
     round_cost: jnp.ndarray     # scalar, sum of costs of S_t
+    log_w: jnp.ndarray          # (K,) log-weights the mixture derives from
+                                # (lets fused client eval redo eq. (5)
+                                # in-kernel; see repro.kernels.client_eval)
 
 
 def init_state(K: int) -> EFLFGState:
@@ -68,7 +71,8 @@ def plan_round(state: EFLFGState, key: jax.Array, costs: jnp.ndarray,
     sel = adj[drawn]
     mix = policy.ensemble_mix_weights(state.log_w, sel)
     round_cost = jnp.sum(jnp.where(sel, costs, 0.0))
-    return EFLFGRoundOut(adj, dom, p, drawn, sel, mix, round_cost)
+    return EFLFGRoundOut(adj, dom, p, drawn, sel, mix, round_cost,
+                         state.log_w)
 
 
 def update_state(state: EFLFGState, plan: EFLFGRoundOut,

@@ -9,7 +9,10 @@ experiment is a single jit-compiled ``jax.lax.scan`` over rounds:
 * the online stream cursor, client-loss evaluation and uplink-bandwidth
   client counting are fixed-shape traceable ops (the round body is built
   by ``make_round_body``, shared verbatim with the reference loop, so
-  trajectories match bit-for-bit),
+  trajectories match bit-for-bit); with ``SimConfig.use_fused`` (the
+  default) the client evaluation inside the scan is one Pallas-fused
+  launch per round (``repro.kernels.client_eval``) instead of ~6 small
+  ops,
 * metric/regret accounting rides in the carry as fixed-shape arrays
   (``repro.core.regret.RegretCarry``),
 * ``run_sweep`` vmaps the scan over a seed axis — and optionally a budget
@@ -47,7 +50,8 @@ _SCAN_UNROLL = 1   # >1 lets XLA fuse across rounds: faster, but rounding
 
 def _cfg_key(cfg: SimConfig, T: int):
     return (T, cfg.n_clients, cfg.clients_per_round, cfg.loss_scale,
-            cfg.uplink_bandwidth, cfg.loss_bandwidth, cfg.rates(T))
+            cfg.uplink_bandwidth, cfg.loss_bandwidth, cfg.use_fused,
+            cfg.rates(T))
 
 
 def _make_scan(algo: str, T: int, cfg: SimConfig):

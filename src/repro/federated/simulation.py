@@ -25,6 +25,14 @@ bit-identical trajectories (selection masks, costs, losses) and differ
 only in execution strategy.  Equivalence is pinned by
 ``tests/test_engine_equivalence.py``; use the engine for anything
 performance-sensitive.
+
+Within either execution path, the *client-side evaluation* itself has
+two implementations selected by ``SimConfig.use_fused``: the unfused
+ops below (``client_window_losses`` + ``fedboost_window_grad`` + the
+planner's eq.-(5) mixing) or the Pallas-fused
+``repro.kernels.client_eval`` kernel, which runs them as one launch per
+round.  Fused-vs-unfused parity (bit-equal selection trajectories,
+float32-tolerance curves) is pinned by ``tests/test_client_eval.py``.
 """
 
 from __future__ import annotations
@@ -42,6 +50,7 @@ from repro.core import (init_state, fedboost_init,
                         make_eflfg_scan_body, make_fedboost_scan_body,
                         regret_init, regret_update, regret_value,
                         RegretTracker)
+from repro.kernels.client_eval import ops as client_eval_ops
 
 __all__ = ["SimConfig", "SimResult", "run_simulation_reference",
            "make_round_body", "client_window_losses", "fedboost_window_grad",
@@ -59,6 +68,10 @@ class SimConfig:
     uplink_bandwidth: Optional[float] = None  # b_t; None = fixed N_t
     loss_bandwidth: float = 1.0       # b_loss
     seed: int = 0
+    use_fused: bool = True            # Pallas-fused client eval (one kernel
+                                      # per round) vs the unfused ~6-op path;
+                                      # trajectories agree (float32, pinned
+                                      # by tests/test_client_eval.py)
 
     def rates(self, T: int):
         eta = self.eta if self.eta is not None else 1.0 / np.sqrt(T)
@@ -154,50 +167,106 @@ def fedboost_window_grad(preds: jnp.ndarray, y: jnp.ndarray,
     return (2.0 / n_t.astype(resid.dtype)) * (p_cl @ resid)
 
 
-def _eflfg_loss_fn(preds, y, cfg, W):
+def _eflfg_loss_fn(evaluate, cfg, n_stream):
     """Client-side evaluation closure for the EFL-FG round body.
 
     ``loss_carry = (stream cursor, RegretCarry)``; the per-round ``out``
-    pytree carries everything the metric layers need.
+    pytree carries everything the metric layers need.  ``evaluate(plan,
+    cursor, n_t) -> (ens_sq_mean, ens_norm, model_losses, grad)`` is the
+    fused-or-unfused evaluation (see ``make_round_body``); everything
+    around it — client counting, regret accounting, the out dict, the
+    cursor advance — is shared, so the two execution strategies cannot
+    drift apart structurally.
     """
     def loss_fn(plan, loss_carry):
         cursor, racc = loss_carry
         sel_size = jnp.sum(plan.sel).astype(jnp.int32)
         n_t = n_clients_traceable(cfg, sel_size)
-        ens_sq, ens_norm, ml_norm = client_window_losses(
-            preds, y, cursor, n_t, plan.mix, cfg.loss_scale, W)
+        ens_sq, ens_norm, ml_norm, _ = evaluate(plan, cursor, n_t)
         racc = regret_update(racc, ens_norm, ml_norm)
         out = dict(sel=plan.sel, dom_size=jnp.sum(plan.dom),
                    cost=plan.round_cost, ens_sq_mean=ens_sq,
                    ens_norm=ens_norm, ml_norm=ml_norm,
                    regret=regret_value(racc))
-        cursor = (cursor + n_t) % preds.shape[1]
+        cursor = (cursor + n_t) % n_stream
         return ml_norm, ens_norm, (cursor, racc), out
     return loss_fn
 
 
-def _fedboost_grad_fn(preds, y, cfg, W):
-    """Client-side gradient closure for the FedBoost round body."""
+def _fedboost_grad_fn(evaluate, cfg, n_stream):
+    """Client-side gradient closure for the FedBoost round body (same
+    ``evaluate`` contract as ``_eflfg_loss_fn``, with the gradient slot
+    populated)."""
     def grad_fn(plan, loss_carry):
-        sel, _pi, mix, cost = plan
+        sel, _pi, _mix, cost = plan
         cursor, racc = loss_carry
         sel_size = jnp.sum(sel).astype(jnp.int32)
         n_t = n_clients_traceable(cfg, sel_size)
-        ens_sq, ens_norm, ml_norm = client_window_losses(
-            preds, y, cursor, n_t, mix, cfg.loss_scale, W)
-        grad = fedboost_window_grad(preds, y, cursor, n_t, mix, W)
+        ens_sq, ens_norm, ml_norm, grad = evaluate(plan, cursor, n_t)
         racc = regret_update(racc, ens_norm, ml_norm)
         out = dict(sel=sel, dom_size=jnp.zeros((), jnp.int32),
                    cost=cost, ens_sq_mean=ens_sq,
                    ens_norm=ens_norm, ml_norm=ml_norm,
                    regret=regret_value(racc))
-        cursor = (cursor + n_t) % preds.shape[1]
+        cursor = (cursor + n_t) % n_stream
         return grad, (cursor, racc), out
     return grad_fn
 
 
+def _make_evaluate(algo: str, fused: bool, preds, y, cfg: SimConfig,
+                   W: int, ext=None):
+    """Build the ``evaluate(plan, cursor, n_t)`` callback: the only part
+    of the round body that differs between the fused Pallas kernel and
+    the unfused ops.
+
+    EFL-FG fused recomputes the eq.-(5) log-space mixture in-kernel from
+    ``plan.log_w`` (no gradient needed); FedBoost's plan mixture is
+    already on the simplex, so the kernel applies it directly
+    (``weighting="none"``) and emits the SGD gradient.
+
+    ``ext`` optionally supplies a precomputed ``extend_stream`` result —
+    the reference loop passes it so the loop-invariant extension is built
+    once per *run* instead of once per per-round jit dispatch.
+    """
+    if fused:
+        preds_ext, y_ext = (client_eval_ops.extend_stream(preds, y, W)
+                            if ext is None else ext)
+    if algo == "eflfg":
+        if fused:
+            def evaluate(plan, cursor, n_t):
+                ev = client_eval_ops.client_eval(
+                    preds_ext, y_ext, cursor, n_t, plan.log_w, plan.sel,
+                    loss_scale=cfg.loss_scale, window=W, weighting="log",
+                    with_grad=False)
+                return ev.ens_sq_mean, ev.ens_norm, ev.model_losses, None
+        else:
+            def evaluate(plan, cursor, n_t):
+                return client_window_losses(
+                    preds, y, cursor, n_t, plan.mix, cfg.loss_scale, W
+                ) + (None,)
+    elif algo == "fedboost":
+        if fused:
+            def evaluate(plan, cursor, n_t):
+                sel, _pi, mix, _cost = plan
+                ev = client_eval_ops.client_eval(
+                    preds_ext, y_ext, cursor, n_t, mix, sel,
+                    loss_scale=cfg.loss_scale, window=W, weighting="none",
+                    with_grad=True)
+                return ev.ens_sq_mean, ev.ens_norm, ev.model_losses, ev.grad
+        else:
+            def evaluate(plan, cursor, n_t):
+                _sel, _pi, mix, _cost = plan
+                losses = client_window_losses(
+                    preds, y, cursor, n_t, mix, cfg.loss_scale, W)
+                grad = fedboost_window_grad(preds, y, cursor, n_t, mix, W)
+                return losses + (grad,)
+    else:
+        raise ValueError(f"unknown algo {algo!r}")
+    return evaluate
+
+
 def make_round_body(algo: str, preds, y, costs, cfg: SimConfig, budget,
-                    eta, xi):
+                    eta, xi, ext=None):
     """Build the one-round scan body and its initial-carry constructor.
 
     Returns ``(body, init_carry)`` where ``body(carry, _) -> (carry, out)``
@@ -205,19 +274,27 @@ def make_round_body(algo: str, preds, y, costs, cfg: SimConfig, budget,
     ``init_carry(key)`` builds the round-0 carry.  The reference loop runs
     ``body`` once per Python iteration; the engine scans it — the round
     computation itself is the same traced function either way.
+
+    With ``cfg.use_fused`` the client-side evaluation goes through the
+    Pallas-fused ``repro.kernels.client_eval`` op (one launch per round)
+    on a wrap-free W-extended copy of the stream — loop-invariant, so
+    the scan engine builds it once per jitted call, and the reference
+    loop precomputes it once per run and passes it in via ``ext``.
+    Streams shorter than the window fall back to the unfused
+    modulo-gather path (the extension trick needs ``W <= n_stream``).
     """
-    K = preds.shape[0]
+    K, n_stream = preds.shape
     W = eval_window(cfg)
+    fused = cfg.use_fused and W <= n_stream
+    evaluate = _make_evaluate(algo, fused, preds, y, cfg, W, ext)
     if algo == "eflfg":
-        body = make_eflfg_scan_body(
-            _eflfg_loss_fn(preds, y, cfg, W), costs, budget, eta, xi)
+        body = make_eflfg_scan_body(_eflfg_loss_fn(evaluate, cfg, n_stream),
+                                    costs, budget, eta, xi)
         algo_init = lambda: init_state(K)
-    elif algo == "fedboost":
-        body = make_fedboost_scan_body(
-            _fedboost_grad_fn(preds, y, cfg, W), costs, budget, eta)
-        algo_init = lambda: fedboost_init(K)
     else:
-        raise ValueError(f"unknown algo {algo!r}")
+        body = make_fedboost_scan_body(
+            _fedboost_grad_fn(evaluate, cfg, n_stream), costs, budget, eta)
+        algo_init = lambda: fedboost_init(K)
 
     def init_carry(key):
         return (algo_init(), key, (jnp.int32(0), regret_init(K)))
@@ -274,14 +351,14 @@ def _get_step(algo: str, cfg: SimConfig, eta: float, xi: float):
     # constants identically in both programs and trajectories stay
     # bit-identical between the two execution paths.
     key = (algo, cfg.n_clients, cfg.clients_per_round, cfg.loss_scale,
-           cfg.uplink_bandwidth, cfg.loss_bandwidth, eta, xi)
+           cfg.uplink_bandwidth, cfg.loss_bandwidth, cfg.use_fused, eta, xi)
     fn = _STEP_CACHE.get(key)
     if fn is None:
         eta_j, xi_j = jnp.float32(eta), jnp.float32(xi)
 
-        def step(preds, y, costs, budget, carry):
+        def step(preds, y, costs, budget, carry, ext):
             body, _ = make_round_body(algo, preds, y, costs, cfg, budget,
-                                      eta_j, xi_j)
+                                      eta_j, xi_j, ext=ext)
             return body(carry, None)
         fn = _STEP_CACHE[key] = jax.jit(step)
     return fn
@@ -304,11 +381,18 @@ def run_simulation_reference(algo: str, preds, y, costs, T: int,
     eta, xi = cfg.rates(T)
     budget_j = jnp.float32(cfg.budget)
     step = _get_step(algo, cfg, eta, xi)
+    # The fused path's W-extended stream is loop-invariant: build it once
+    # per run here and feed it through the per-round jitted step, instead
+    # of re-concatenating (K, n_stream) inside every round's dispatch.
+    W = eval_window(cfg)
+    ext = (client_eval_ops.extend_stream(preds, y, W)
+           if cfg.use_fused and W <= preds.shape[1] else None)
     _, init_carry = make_round_body(algo, preds, y, costs, cfg, budget_j,
-                                    jnp.float32(eta), jnp.float32(xi))
+                                    jnp.float32(eta), jnp.float32(xi),
+                                    ext=ext)
     metrics = _Metrics(preds.shape[0], T, cfg.budget)
     carry = init_carry(jax.random.PRNGKey(cfg.seed))
     for t in range(T):
-        carry, out = step(preds, y, costs, budget_j, carry)
+        carry, out = step(preds, y, costs, budget_j, carry, ext)
         metrics.record(t, out)
     return metrics.result(algo)

@@ -1,6 +1,8 @@
 """Pallas TPU kernels (validated in interpret mode on CPU).
 
   ensemble_combine  eq. (5) masked weighted expert mixing
+  client_eval       fused per-round client evaluation (gather + eq.-(5)
+                    mixing + window losses + FedBoost grad, one launch)
   kernel_gram       fused kernel-regression predict (client hot path)
   flash_attention   GQA/causal/sliding-window attention (arch substrate)
 
@@ -9,7 +11,9 @@ dispatch), ref.py (pure-jnp oracle used by the allclose test sweeps).
 """
 
 from .ensemble_combine import ops as ensemble_combine_ops
+from .client_eval import ops as client_eval_ops
 from .kernel_gram import ops as kernel_gram_ops
 from .flash_attention import ops as flash_attention_ops
 
-__all__ = ["ensemble_combine_ops", "kernel_gram_ops", "flash_attention_ops"]
+__all__ = ["ensemble_combine_ops", "client_eval_ops", "kernel_gram_ops",
+           "flash_attention_ops"]

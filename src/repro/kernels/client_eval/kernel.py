@@ -1,0 +1,164 @@
+"""Pallas TPU kernel: fused per-round client evaluation.
+
+One launch per simulation round fuses the whole client-side exchange —
+window gather, eq.-(5) mixture weighting, the ensemble/per-model
+squared-loss accumulators, and the FedBoost mixture gradient — into a
+single pass over the round's (K, W) prediction tile, replacing the ~6
+small ops the unfused round body dispatches per round.
+
+TPU mapping: the extended stream (K, n_stream + W) and targets ride in
+as whole-array VMEM operands — at the paper scale (K=22, n_stream=6000,
+f32) that is ~540 KiB, far under the ~16 MiB VMEM budget — and the round
+window is a *dynamic-start* contiguous load ``preds[:, ds(cursor, W)]``
+(wrap-free thanks to the W-column extension; see ``ref.extend_stream``).
+The cursor / client-count scalars arrive as (1, 1) operands.  All
+downstream compute is one (1, K) x (K, W) MXU matvec plus VPU
+elementwise/reduction work, so a single grid step suffices; streams too
+large for VMEM residency would move ``preds`` to HBM with an async-DMA'd
+window (future work, not needed at paper scale).
+
+The grid is a singleton, which also keeps ``jax.vmap`` batching (the
+engine's sweep path) a *single* batched-grid dispatch per round rather
+than one launch per sweep lane.
+
+Numerics: float32 throughout, formula-for-formula identical to the
+unfused path (`simulation.client_window_losses`,
+``simulation.fedboost_window_grad``, ``policy.ensemble_mix_weights``);
+interpret mode on CPU executes the same XLA ops, so fused-vs-unfused
+round trajectories agree to float32 rounding (empirically bit-equal
+selection masks on the paper config — pinned by the benchmark's
+``fused_trajectories_identical`` field and ``tests/test_client_eval.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import WEIGHTINGS, mix_weights_ref
+
+__all__ = ["client_eval_pallas"]
+
+
+def _client_eval_kernel(preds_ref, y_ref, cursor_ref, nt_ref, w_ref,
+                        sel_ref, mix_ref, scal_ref, ml_ref, grad_ref,
+                        *, loss_scale: float, window: int, weighting: str,
+                        with_grad: bool, interpret: bool):
+    # preds_ref: (K, S+W); y_ref: (1, S+W); cursor/nt: (1, 1) int32;
+    # w_ref/sel_ref: (1, K); outputs: mix/ml/grad (1, K), scal (1, 2).
+    cursor = cursor_ref[0, 0]
+    n_t = nt_ref[0, 0]
+    pw = preds_ref[:, pl.ds(cursor, window)]            # (K, W) gather
+    yw = y_ref[:, pl.ds(cursor, window)]                # (1, W)
+    offs = jax.lax.broadcasted_iota(jnp.int32, (1, window), 1)
+    cmask = offs < n_t                                  # (1, W)
+
+    w = w_ref[...]                                      # (1, K)
+    sel = sel_ref[...] != 0
+    # the one eq.-(5) implementation: pure jnp, reduces over all axes, so
+    # it applies unchanged to the kernel's (1, K) operands — keeping the
+    # fused path formula-identical to the oracle by construction
+    mix = mix_weights_ref(w, sel, weighting)
+    mix_ref[...] = mix.astype(mix_ref.dtype)
+
+    sq = (pw - yw) ** 2                                 # (K, W) broadcast
+    ml = jnp.where(cmask, jnp.minimum(sq / loss_scale, 1.0), 0.0).sum(
+        axis=1)                                         # (K,)
+    ml_ref[...] = ml[None, :].astype(ml_ref.dtype)
+
+    yhat = jnp.dot(mix, pw, preferred_element_type=jnp.float32)  # (1, W)
+    ens_sq = jnp.where(cmask, (yhat - yw) ** 2, 0.0)
+    nf = n_t.astype(ens_sq.dtype)
+    ens_sq_mean = ens_sq.sum() / nf
+    ens_norm = jnp.minimum(ens_sq / loss_scale, 1.0).sum()
+    scal_ref[...] = jnp.stack([ens_sq_mean, ens_norm]).reshape(1, 2).astype(
+        scal_ref.dtype)
+
+    if with_grad:
+        resid = jnp.where(cmask, yhat - yw, 0.0)        # (1, W)
+        if interpret:
+            # Rank-1 matvec, the *same* contraction the unfused
+            # ``p_cl @ resid`` lowers to on CPU: anything else is 1 ulp
+            # off, and the FedBoost alpha trajectory feeds back on
+            # itself, amplifying that ulp over rounds.
+            grad = (2.0 / nf) * jnp.dot(pw, resid[0])
+            grad_ref[...] = grad[None, :].astype(grad_ref.dtype)
+        else:
+            # MXU-friendly rank-2 form for compiled TPU (which is never
+            # bit-comparable to the CPU path in the first place).
+            grad = (2.0 / nf) * jnp.dot(pw, resid.T,
+                                        preferred_element_type=jnp.float32)
+            grad_ref[...] = grad.T.astype(grad_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("loss_scale", "window",
+                                             "weighting", "with_grad",
+                                             "interpret"))
+def client_eval_pallas(preds_ext: jnp.ndarray, y_ext: jnp.ndarray,
+                       cursor: jnp.ndarray, n_t: jnp.ndarray,
+                       w: jnp.ndarray, sel: jnp.ndarray, *,
+                       loss_scale: float, window: int,
+                       weighting: str = "log", with_grad: bool = True,
+                       interpret: bool = True):
+    """Fused client-eval launch.
+
+    ``preds_ext``: (K, n_stream + window) f32; ``y_ext``:
+    (n_stream + window,) f32; ``cursor``/``n_t``: int32 scalars;
+    ``w``/``sel``: (K,).  Returns ``(mix, ens_sq_mean, ens_norm,
+    model_losses, grad)`` with ``grad = None`` when ``with_grad`` is off
+    (the EFL-FG path needs no mixture gradient).
+    """
+    if weighting not in WEIGHTINGS:
+        raise ValueError(f"unknown weighting {weighting!r}")
+    K, SW = preds_ext.shape
+    kern = functools.partial(_client_eval_kernel, loss_scale=loss_scale,
+                             window=window, weighting=weighting,
+                             with_grad=with_grad, interpret=interpret)
+    full = lambda *_: (0, 0)
+    out_shape = [
+        jax.ShapeDtypeStruct((1, K), jnp.float32),   # mix
+        jax.ShapeDtypeStruct((1, 2), jnp.float32),   # [ens_sq_mean, ens_norm]
+        jax.ShapeDtypeStruct((1, K), jnp.float32),   # model_losses
+        jax.ShapeDtypeStruct((1, K), jnp.float32),   # grad
+    ]
+    out_specs = [pl.BlockSpec((1, K), full), pl.BlockSpec((1, 2), full),
+                 pl.BlockSpec((1, K), full), pl.BlockSpec((1, K), full)]
+    if not with_grad:
+        out_shape, out_specs = out_shape[:3], out_specs[:3]
+        kern = _drop_grad_ref(kern)
+    outs = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((K, SW), full),
+            pl.BlockSpec((1, SW), full),
+            pl.BlockSpec((1, 1), full),
+            pl.BlockSpec((1, 1), full),
+            pl.BlockSpec((1, K), full),
+            pl.BlockSpec((1, K), full),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(preds_ext.astype(jnp.float32),
+      y_ext.astype(jnp.float32).reshape(1, SW),
+      jnp.asarray(cursor, jnp.int32).reshape(1, 1),
+      jnp.asarray(n_t, jnp.int32).reshape(1, 1),
+      jnp.asarray(w, jnp.float32).reshape(1, K),
+      jnp.asarray(sel, jnp.int32).reshape(1, K))
+    mix, scal, ml = outs[0][0], outs[1], outs[2]
+    grad = outs[3][0] if with_grad else None
+    return mix, scal[0, 0], scal[0, 1], ml[0], grad
+
+
+def _drop_grad_ref(kern):
+    """Adapt the 10-ref kernel body to the gradless 9-ref launch."""
+    def wrapped(preds_ref, y_ref, cursor_ref, nt_ref, w_ref, sel_ref,
+                mix_ref, scal_ref, ml_ref):
+        kern(preds_ref, y_ref, cursor_ref, nt_ref, w_ref, sel_ref,
+             mix_ref, scal_ref, ml_ref, None)
+        return
+    return wrapped

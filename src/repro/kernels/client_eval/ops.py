@@ -1,0 +1,43 @@
+"""Public fused client-eval op: backend dispatch for the Pallas kernel.
+
+``client_eval`` is the round-body entry point: interpret mode on CPU
+(the kernel body traces to the same XLA ops as the unfused path, so the
+fused round body keeps its trajectories), compiled Pallas on TPU.  The
+engine (`repro.federated.simulation.make_round_body`) calls it once per
+round behind ``SimConfig.use_fused``; ``extend_stream`` (re-exported
+from ``ref``) prepares the wrap-free stream operands once per jitted
+call.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import client_eval_pallas
+from .ref import ClientEvalOut, extend_stream
+
+__all__ = ["client_eval", "extend_stream", "ClientEvalOut"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def client_eval(preds_ext: jnp.ndarray, y_ext: jnp.ndarray,
+                cursor: jnp.ndarray, n_t: jnp.ndarray,
+                w: jnp.ndarray, sel: jnp.ndarray, *,
+                loss_scale: float, window: int, weighting: str = "log",
+                with_grad: bool = True,
+                interpret: bool | None = None) -> ClientEvalOut:
+    """One fused round of client-side evaluation (see ``ref.client_eval_ref``
+    for exact semantics).  ``grad`` is zeros-shaped ``None``-free only when
+    ``with_grad`` is set; the EFL-FG path skips it.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    mix, ens_sq_mean, ens_norm, model_losses, grad = client_eval_pallas(
+        preds_ext, y_ext, cursor, n_t, w, sel, loss_scale=loss_scale,
+        window=window, weighting=weighting, with_grad=with_grad,
+        interpret=interpret)
+    return ClientEvalOut(mix, ens_sq_mean, ens_norm, model_losses, grad)

@@ -1,0 +1,117 @@
+"""Pure-jnp oracle for the fused client-eval kernel.
+
+One round of the paper's client-side exchange, as a single pass over the
+round's (K, W) prediction window:
+
+* gather the online window ``preds[:, (cursor + 0..W-1) % n_stream]``
+  (realized wrap-free on a W-extended stream, see ``extend_stream``),
+* eq. (5) mixture weighting (log-space softmax over the selected set for
+  EFL-FG, masked renormalization for FedBoost's alpha, or a passthrough
+  when the caller already holds the mixture),
+* ``client_window_losses`` — the ensemble/per-model squared-loss
+  accumulators with the (a2) normalization ``min(sq / loss_scale, 1)``,
+* ``fedboost_window_grad`` — g_k = 2/n_t sum_i (yhat - y_i) f_k(x_i).
+
+The formulas are kept call-for-call identical to the unfused path
+(`repro.federated.simulation.client_window_losses` /
+``fedboost_window_grad`` + `repro.core.policy.ensemble_mix_weights`) so
+the fused round body reproduces the unfused trajectories; the Pallas
+kernel is tested against this oracle and against independent float64
+NumPy implementations in ``tests/test_client_eval.py``.
+
+Semantics at the edges (shared with the unfused path): ``n_t == 0``
+yields ``ens_sq_mean = nan`` and ``grad = nan`` (0/0 and inf*0) — an
+empty round is meaningless and the engine never produces one
+(``n_clients_traceable`` clamps to >= 1); masked accumulators are 0.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+from jax.scipy.special import logsumexp
+
+__all__ = ["ClientEvalOut", "WEIGHTINGS", "mix_weights_ref",
+           "client_eval_ref", "extend_stream"]
+
+WEIGHTINGS = ("log", "linear", "none")
+
+
+class ClientEvalOut(NamedTuple):
+    mix: jnp.ndarray           # (K,) eq.-(5) mixture actually applied
+    ens_sq_mean: jnp.ndarray   # scalar, mean ensemble sq error over n_t
+    ens_norm: jnp.ndarray      # scalar, sum of normalized ensemble losses
+    model_losses: jnp.ndarray  # (K,) sum of normalized per-model losses
+    grad: jnp.ndarray          # (K,) FedBoost mixture gradient
+
+
+def mix_weights_ref(w: jnp.ndarray, sel: jnp.ndarray,
+                    weighting: str) -> jnp.ndarray:
+    """The three mixture rules the round bodies need.
+
+    ``log``:    w = log-weights; eq. (5) softmax over the selected set
+                (identical to ``policy.ensemble_mix_weights``).
+    ``linear``: w = simplex weights (FedBoost alpha); masked renormalize
+                (identical to ``fedboost_plan``'s mixing).
+    ``none``:   w already *is* the mixture; passthrough.
+    """
+    if weighting == "log":
+        masked = jnp.where(sel, w, -jnp.inf)
+        return jnp.exp(masked - logsumexp(masked))
+    if weighting == "linear":
+        masked = jnp.where(sel, w, 0.0)
+        return masked / jnp.maximum(jnp.sum(masked), 1e-12)
+    if weighting == "none":
+        return w
+    raise ValueError(f"unknown weighting {weighting!r}")
+
+
+def extend_stream(preds: jnp.ndarray, y: jnp.ndarray, window: int):
+    """Wrap-free gather trick: append the first ``window`` columns so the
+    round's window ``(cursor + 0..window-1) % n_stream`` is the contiguous
+    slice ``[cursor, cursor + window)`` of the extended stream (valid for
+    every ``cursor < n_stream`` as long as ``window <= n_stream``).
+
+    The extension is loop-invariant — built once per jitted call, *not*
+    per round — which is what lets the kernel gather with one dynamic
+    slice instead of a K x W modulo gather.
+    """
+    n_stream = preds.shape[1]
+    if window > n_stream:
+        raise ValueError(f"window {window} > stream length {n_stream}; "
+                         "the wrap-free extension needs window <= n_stream")
+    return (jnp.concatenate([preds, preds[:, :window]], axis=1),
+            jnp.concatenate([y, y[:window]]))
+
+
+def client_eval_ref(preds_ext: jnp.ndarray, y_ext: jnp.ndarray,
+                    cursor: jnp.ndarray, n_t: jnp.ndarray,
+                    w: jnp.ndarray, sel: jnp.ndarray,
+                    loss_scale: float, window: int,
+                    weighting: str = "log") -> ClientEvalOut:
+    """Single-pass jnp reference of the fused round evaluation.
+
+    ``preds_ext``: (K, n_stream + window) extended predictions;
+    ``y_ext``: (n_stream + window,) extended targets (see
+    ``extend_stream``); ``cursor``/``n_t``: int32 scalars; ``w``/``sel``:
+    (K,) weights + transmit mask.  Returns ``ClientEvalOut``.
+    """
+    K = preds_ext.shape[0]
+    offs = jnp.arange(window)
+    cmask = offs < n_t
+    p_cl = lax.dynamic_slice(preds_ext, (jnp.int32(0), cursor), (K, window))
+    y_cl = lax.dynamic_slice(y_ext, (cursor,), (window,))
+    mix = mix_weights_ref(w, sel, weighting).astype(p_cl.dtype)
+    sq = (p_cl - y_cl[None, :]) ** 2
+    model_losses = jnp.where(cmask[None, :],
+                             jnp.minimum(sq / loss_scale, 1.0), 0.0).sum(1)
+    yhat = mix @ p_cl
+    ens_sq = jnp.where(cmask, (yhat - y_cl) ** 2, 0.0)
+    nf = n_t.astype(ens_sq.dtype)
+    ens_sq_mean = ens_sq.sum() / nf
+    ens_norm = jnp.minimum(ens_sq / loss_scale, 1.0).sum()
+    resid = jnp.where(cmask, yhat - y_cl, 0.0)
+    grad = (2.0 / nf) * (p_cl @ resid)
+    return ClientEvalOut(mix, ens_sq_mean, ens_norm, model_losses, grad)
