@@ -22,6 +22,12 @@ The gate also trips on correctness regressions: the fresh run must
 reproduce reference-vs-scan and fused-vs-unfused selection-mask
 equality (the ``*_trajectories_identical`` flags).
 
+The ``sharded_sweep`` cells (mesh-sharded ``run_sweep`` under 8 forced
+host devices; see ``engine_bench``) are gated on their sharded-vs-vmap
+*ratio* instead — both paths run back to back in one subprocess, so the
+ratio needs no reference-canary normalization — plus a hard
+sharded-equals-vmap bit-equality flag per cell.
+
     PYTHONPATH=src python -m benchmarks.check_regression [baseline.json]
 
 Exit codes: 0 ok, 1 regression, 2 missing/invalid baseline.  Baselines
@@ -40,6 +46,16 @@ GATED = ("t_scan_s", "t_scan_unfused_s", "t_sweep8_s")
 # Timings only reported/warned (the canary itself + the retracing loop).
 REPORTED = ("t_reference_s", "t_loop_baseline_s")
 ALGOS = ("eflfg", "fedboost")
+# Sharded-sweep cells (forced-8-host-device subprocess).  Each cell's
+# sharded timing is normalized by the *same record's* vmap timing — the
+# two paths run back to back in one subprocess, so the ratio is
+# machine-normalized by construction.
+SHARDED_CELLS = ("eflfg", "fedboost", "mesh2d")
+# Cells whose vmap side is quicker than this are pure dispatch overhead
+# (fast-mode fedboost: ~15 ms) — their ratio wobbles ±30% on an idle
+# machine, so they are reported, not timing-gated.  Bit-equality flags
+# are still hard failures for every cell.
+SHARDED_GATE_FLOOR_S = 0.05
 
 
 def _fail(msg: str, code: int = 1):
@@ -111,6 +127,59 @@ def check(base: dict, fresh: dict, threshold: float):
     return failures, warnings
 
 
+def check_sharded(base: dict, fresh: dict, threshold: float):
+    """Gate the ``sharded_sweep`` section: bit-equality flags are hard
+    failures; the sharded/vmap timing ratio of every cell may not slow
+    down by more than ``threshold`` vs the baseline's ratio."""
+    failures, warnings = [], []
+    fsec = fresh.get("sharded_sweep")
+    if fsec is None:
+        failures.append(("hard", "sharded_sweep: section missing from "
+                         "fresh run"))
+        return failures, warnings
+    bsec = base.get("sharded_sweep")
+    if bsec is None:
+        warnings.append("sharded_sweep: baseline has no section — gate "
+                        "skipped (refresh BENCH_engine.json)")
+        return failures, warnings
+    for cell in SHARDED_CELLS:
+        b, f = bsec.get(cell), fsec.get(cell)
+        if b is None or f is None:
+            failures.append(("hard", f"sharded_sweep/{cell}: missing from "
+                             f"{'baseline' if b is None else 'fresh run'}"))
+            continue
+        if not f.get("trajectories_identical", False):
+            failures.append(("hard", f"sharded_sweep/{cell}: sharded "
+                             "trajectories no longer bit-equal to the vmap "
+                             "path (correctness regression)"))
+        # ``rel`` is the median of per-rep sharded/vmap ratios — load
+        # spikes hit both paths of an interleaved rep, so it is far less
+        # noisy than a ratio of independently-estimated timings (the
+        # fallback for pre-``rel`` baselines).
+        b_rel, f_rel = b.get("rel"), f.get("rel")
+        if b_rel is None or f_rel is None:
+            if b["t_sweep_vmap_s"] <= 0 or f["t_sweep_vmap_s"] <= 0:
+                failures.append(("hard", f"sharded_sweep/{cell}: "
+                                 "non-positive vmap timing"))
+                continue
+            b_rel = b_rel or b["t_sweep_sharded_s"] / b["t_sweep_vmap_s"]
+            f_rel = f_rel or f["t_sweep_sharded_s"] / f["t_sweep_vmap_s"]
+        ratio = f_rel / b_rel if b_rel > 0 else float("inf")
+        line = (f"sharded_sweep/{cell}: sharded/vmap {b_rel:.3f} -> "
+                f"{f_rel:.3f} (x{ratio:.2f}); raw "
+                f"{b['t_sweep_sharded_s']:.4f}s -> "
+                f"{f['t_sweep_sharded_s']:.4f}s")
+        if min(b["t_sweep_vmap_s"], f["t_sweep_vmap_s"]) \
+                < SHARDED_GATE_FLOOR_S:
+            print("  rep  " + line + "  [below gating floor "
+                  f"{SHARDED_GATE_FLOOR_S}s vmap — not timing-gated]")
+        elif ratio > 1.0 + threshold:
+            failures.append(("timing", line + f"  [> +{threshold:.0%}]"))
+        else:
+            print("  ok   " + line)
+    return failures, warnings
+
+
 def _merge_best(fresh_runs: list) -> dict:
     """Per-metric best (min) across repeated fresh runs: transient CI
     load only ever inflates a timing, so the min over retries is the
@@ -128,6 +197,31 @@ def _merge_best(fresh_runs: list) -> dict:
                          "fused_trajectories_identical"):
                 if flag in mine:
                     mine[flag] = mine[flag] and got.get(flag, False)
+    # sharded_sweep cells are gated on the sharded/vmap *ratio*: taking
+    # mins of the two timings independently could mix runs and fabricate
+    # a ratio no run produced, so keep each cell from whichever run had
+    # the best ratio, AND-ing the correctness flag across all runs.
+    for run in fresh_runs[1:]:
+        got_sec = run.get("sharded_sweep")
+        best_sec = best.get("sharded_sweep")
+        if not got_sec or not best_sec:
+            continue
+        for cell in SHARDED_CELLS:
+            g, m = got_sec.get(cell), best_sec.get(cell)
+            if not g or not m:
+                continue
+            flag = (m.get("trajectories_identical", False)
+                    and g.get("trajectories_identical", False))
+            try:
+                g_rel = g.get("rel",
+                              g["t_sweep_sharded_s"] / g["t_sweep_vmap_s"])
+                m_rel = m.get("rel",
+                              m["t_sweep_sharded_s"] / m["t_sweep_vmap_s"])
+            except (KeyError, ZeroDivisionError):
+                continue
+            if g_rel < m_rel:
+                best_sec[cell] = dict(g)
+            best_sec[cell]["trajectories_identical"] = flag
     return best
 
 
@@ -160,7 +254,12 @@ def main():
         _, fresh = run_engine_bench(fast=True)
     fresh_runs = [fresh]
 
-    failures, warnings = check(base, fresh, threshold)
+    def check_all(base_rec, fresh_rec):
+        failures, warnings = check(base_rec, fresh_rec, threshold)
+        f2, w2 = check_sharded(base_rec, fresh_rec, threshold)
+        return failures + f2, warnings + w2
+
+    failures, warnings = check_all(base, fresh)
     # A loaded runner inflates timings transiently; retry (compiles are
     # already cached, so reruns are cheap) and judge the per-metric best.
     # Only timing failures are retryable — correctness-flag and
@@ -172,10 +271,16 @@ def main():
         print(f"  {len(failures)} metric(s) over threshold — retrying "
               f"({retries} retr{'y' if retries == 1 else 'ies'} left)...")
         # The retracing loop baseline is reported, never gated — skip it
-        # on retries (it dominates a fast-mode run's wall-clock).
-        _, rerun = run_engine_bench(fast=True, skip_loop_baseline=True)
+        # on retries (it dominates a fast-mode run's wall-clock).  The
+        # cold sharded-sweep subprocess is likewise skipped unless one of
+        # its own cells is what's failing; _merge_best then keeps the
+        # first run's sharded section.
+        sharded_failing = any("sharded_sweep" in msg
+                              for _, msg in failures)
+        _, rerun = run_engine_bench(fast=True, skip_loop_baseline=True,
+                                    skip_sharded=not sharded_failing)
         fresh_runs.append(rerun)
-        failures, warnings = check(base, _merge_best(fresh_runs), threshold)
+        failures, warnings = check_all(base, _merge_best(fresh_runs))
 
     for w in warnings:
         print("  warn " + w)

@@ -27,6 +27,17 @@ robust estimator the CI regression gate compares against):
   ``fused_trajectories_identical`` bit-compares the two engines'
   selection masks.  ``t_sweep8_s`` vmaps the fused scan over 8 seeds.
 
+Each record also carries a ``sharded_sweep`` section measured in a
+*subprocess* under ``--xla_force_host_platform_device_count=8`` (the
+parent has long since locked jax to the visible device count): the
+mesh-sharded ``run_sweep`` path vs the single-device vmap path over the
+same 16-configuration grid, per algorithm, plus one 2-D ``(sweep, data)``
+mesh cell, with bit-equality flags.  Forced host devices share the
+machine's cores, so these cells measure dispatch/collective overhead and
+correctness — not real scale-out (docs/sweeps.md) — and the regression
+gate compares the *sharded/vmap ratio*, which is machine-normalized by
+construction.
+
 ``BENCH_engine.json`` holds one section per mode (``full`` / ``fast``);
 a run refreshes its own section and preserves the other, so the
 committed baseline carries both the paper-scale numbers and the
@@ -41,6 +52,8 @@ from __future__ import annotations
 import json
 import os
 import statistics
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -124,13 +137,128 @@ def _loop_baseline(algo, preds, y, costs, T, cfg):
     return mse
 
 
-def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False):
+# ---------------------------------------------------------------------------
+# Sharded-sweep cells: forced-8-host-device subprocess (the parent process
+# already initialized jax, which locks the device count).
+# ---------------------------------------------------------------------------
+
+_SHARDED_SWEEP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json
+import statistics
+import time
+from dataclasses import replace
+
+import numpy as np
+import jax
+
+from repro.federated import SimConfig, run_sweep, run_sweep_sharded
+from repro.launch.mesh import make_sweep_mesh
+
+fast = bool(int(os.environ.get("BENCH_FAST", "0")))
+T = 300 if fast else 2000
+K, n_clients, n_stream, n_configs = 22, 100, 6000, 16
+rng = np.random.default_rng(1)
+preds = rng.normal(0, 1, (K, n_stream)).astype(np.float32)
+y = rng.normal(0, 1, n_stream).astype(np.float32)
+costs = rng.uniform(0.05, 1.0, K).astype(np.float32)
+seeds = list(range(n_configs))
+pick = statistics.median if fast else min
+
+def identical(a, b):
+    return a.identical_to(b)
+
+# Interleaved reps; returns per-path (estimate, result, samples).  The
+# gate consumes the per-rep pairwise ratio (see cell_rec), so transient
+# machine load - which hits the paths of one rep roughly equally -
+# cancels out of the gated statistic.
+def measure(thunks, n=5):
+    results = {name: fn() for name, fn in thunks.items()}   # warm
+    samples = {name: [] for name in thunks}
+    for _ in range(n):
+        for name, fn in thunks.items():
+            t0 = time.time()
+            results[name] = fn()
+            samples[name].append(time.time() - t0)
+    return {name: (pick(ts), results[name], ts)
+            for name, ts in samples.items()}
+
+def cell_rec(m, vmap_key, sharded_key):
+    t_v, r_v, ts_v = m[vmap_key]
+    t_s, r_s, ts_s = m[sharded_key]
+    rel = statistics.median(s / v for v, s in zip(ts_v, ts_s))
+    return {
+        "t_sweep_vmap_s": round(t_v, 4),
+        "t_sweep_sharded_s": round(t_s, 4),
+        # median of per-rep sharded/vmap ratios: the gated statistic
+        "rel": round(rel, 4),
+        "sharded_vs_vmap": round(1.0 / rel, 2) if rel > 0 else None,
+        "trajectories_identical": identical(r_v, r_s),
+    }
+
+rec = {"devices": jax.device_count(), "n_configs": n_configs, "T": T,
+       "mesh": "sweep8", "note": "forced host devices share the machine's "
+       "cores: these cells measure dispatch/collective overhead and "
+       "bit-equality, not scale-out"}
+
+cfg = SimConfig(n_clients=n_clients, budget=3.0, seed=0)
+cfg_v = replace(cfg, sweep_sharded=False)
+for algo in ("eflfg", "fedboost"):
+    m = measure({
+        "vmap": lambda a=algo: run_sweep(a, preds, y, costs, T=T, cfg=cfg_v,
+                                         seeds=seeds),
+        "sharded": lambda a=algo: run_sweep_sharded(a, preds, y, costs, T=T,
+                                                    cfg=cfg, seeds=seeds),
+    })
+    rec[algo] = cell_rec(m, "vmap", "sharded")
+
+# 2-D (sweep=4, data=2) mesh: bandwidth-mode window W=n_clients=20 divides
+# the data axis, exercising the all-gather window path (unfused on both
+# sides — the Pallas client-eval kernel is single-device; docs/sweeps.md)
+mesh2 = make_sweep_mesh(n_data=2)
+cfg_bw = SimConfig(n_clients=20, budget=3.0, uplink_bandwidth=12.0,
+                   loss_bandwidth=1.0, use_fused=False, seed=0)
+cfg_bw_v = replace(cfg_bw, sweep_sharded=False)
+m = measure({
+    "vmap": lambda: run_sweep("eflfg", preds, y, costs, T=T, cfg=cfg_bw_v,
+                              seeds=seeds),
+    "sharded2d": lambda: run_sweep_sharded("eflfg", preds, y, costs, T=T,
+                                           cfg=cfg_bw, seeds=seeds,
+                                           mesh=mesh2),
+}, n=3)
+rec["mesh2d"] = cell_rec(m, "vmap", "sharded2d")
+print(json.dumps(rec))
+"""
+
+
+def _sharded_sweep_record(fast: bool) -> dict:
+    """Measure the sharded-sweep cells under 8 forced host devices."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(src)
+    env["BENCH_FAST"] = "1" if fast else "0"
+    p = subprocess.run([sys.executable, "-c", _SHARDED_SWEEP_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=1800)
+    if p.returncode != 0:
+        raise RuntimeError("sharded-sweep bench subprocess failed:\n"
+                           + p.stderr[-3000:])
+    return json.loads(p.stdout.strip().splitlines()[-1])
+
+
+def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False,
+                     skip_sharded: bool = False):
     """Measure every engine path; returns ``(rows, rec)`` without touching
     the baseline file (``engine`` wraps this and writes the JSON).
 
     ``skip_loop_baseline`` drops the retracing pre-engine loop — the
     slowest, never-gated path — so the regression gate's noise retries
     stay cheap; its rec fields/rows are simply absent then.
+    ``skip_sharded`` likewise drops the forced-8-device subprocess (a
+    cold process that recompiles everything): the gate's retries pass it
+    when no *sharded* cell is the one failing, reusing the first run's
+    section instead.
     """
     from dataclasses import replace
     from repro.federated import (SimConfig, run_simulation_reference,
@@ -144,6 +272,10 @@ def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False):
     costs = rng.uniform(0.05, 1.0, K).astype(np.float32)
     cfg = SimConfig(n_clients=n_clients, budget=3.0, seed=0, use_fused=True)
     cfg_unfused = replace(cfg, use_fused=False)
+    # t_sweep8_s documents/gates the single-device VMAP path: pin the
+    # dispatch so a baseline refreshed on a multi-device host doesn't
+    # silently measure the sharded path instead.
+    cfg_sweep = replace(cfg, sweep_sharded=False)
     seeds = list(range(n_seeds))
 
     estimator = "median of 5" if fast else "best of 5"
@@ -175,7 +307,7 @@ def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False):
         run_simulation_scan(algo, preds, y, costs, T=T, cfg=cfg)
         run_simulation_scan(algo, preds, y, costs, T=T, cfg=cfg_unfused)
         run_simulation_reference(algo, preds, y, costs, T=T, cfg=cfg)
-        run_sweep(algo, preds, y, costs, T=T, cfg=cfg, seeds=seeds)
+        run_sweep(algo, preds, y, costs, T=T, cfg=cfg_sweep, seeds=seeds)
         thunks = {
             "base": lambda: _loop_baseline(algo, preds, y, costs, T, cfg),
             "scan": lambda: run_simulation_scan(algo, preds, y, costs, T=T,
@@ -184,8 +316,8 @@ def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False):
                                                    T=T, cfg=cfg_unfused),
             "ref": lambda: run_simulation_reference(algo, preds, y, costs,
                                                     T=T, cfg=cfg),
-            "sweep": lambda: run_sweep(algo, preds, y, costs, T=T, cfg=cfg,
-                                       seeds=seeds),
+            "sweep": lambda: run_sweep(algo, preds, y, costs, T=T,
+                                       cfg=cfg_sweep, seeds=seeds),
         }
         if skip_loop_baseline:
             thunks.pop("base")
@@ -223,6 +355,19 @@ def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False):
                          t_base / T * 1e6, ""))
             rows.append((f"engine/{algo}/speedup", "-",
                          f"{t_base / t_scan:.2f}"))
+
+    if not skip_sharded:
+        rec["sharded_sweep"] = sharded = _sharded_sweep_record(fast)
+        cells = [k for k, c in sharded.items()
+                 if isinstance(c, dict) and "t_sweep_vmap_s" in c]
+        for cell in cells:
+            c = sharded[cell]
+            rows.append((f"engine/sharded_sweep/{cell}/vmap_s",
+                         "-", f"{c['t_sweep_vmap_s']:.4f}"))
+            rows.append((f"engine/sharded_sweep/{cell}/sharded_s",
+                         "-", f"{c['t_sweep_sharded_s']:.4f}"))
+            rows.append((f"engine/sharded_sweep/{cell}/identical",
+                         "-", str(c["trajectories_identical"])))
     return rows, rec
 
 

@@ -5,6 +5,13 @@ EFL-FG next to FedBoost, and prints the Table-I-style comparison: EFL-FG
 never violates the budget and reaches a lower MSE.
 
     PYTHONPATH=src python examples/quickstart.py
+
+On a multi-device host (a pod, or forced host devices as below) the
+closing sweep automatically shards its configuration grid over the
+device mesh — same numbers, more devices (docs/sweeps.md):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/quickstart.py
 """
 
 import os
@@ -43,10 +50,12 @@ def main():
               f"mean |S_t|={res.sel_sizes.mean():.2f}  "
               f"regret_T={res.regret.regret_curve()[-1]:.1f}")
 
-    # 5. a 5-seed sweep is one more (vmapped) dispatch, not 5 more loops
+    # 5. a 5-seed sweep is one more dispatch, not 5 more loops — vmapped
+    #    on one device, sharded over the mesh when more are visible
     sw = run_sweep("eflfg", preds, y_stream, pool.costs, T=500,
                    cfg=SimConfig(budget=3.0), seeds=range(5))
-    print(f"eflfg     MSE_T over 5 seeds: {sw.final_mse.mean():.4f} "
+    how = "mesh-sharded" if sw.sharded else "vmapped"
+    print(f"eflfg     MSE_T over 5 seeds ({how}): {sw.final_mse.mean():.4f} "
           f"+/- {sw.final_mse.std():.4f}")
 
 

@@ -17,7 +17,13 @@ experiment is a single jit-compiled ``jax.lax.scan`` over rounds:
   (``repro.core.regret.RegretCarry``),
 * ``run_sweep`` vmaps the scan over a seed axis — and optionally a budget
   grid — so an entire table of the paper's comparisons runs as one
-  device program.
+  device program,
+* with more than one visible device, ``run_sweep`` shards that flat
+  configuration axis over a ``("sweep", "data")`` mesh instead
+  (``run_sweep_sharded``; helpers in ``repro.federated.sweep_sharding``)
+  — grids of hundreds of configurations use the whole pod, and callers
+  are unchanged (same ``SweepResult``, auto-dispatch overridable via
+  ``SimConfig.sweep_sharded``).  See docs/sweeps.md.
 
 ``run_simulation_scan`` runs one (algo, seed, budget) configuration and
 returns the same ``SimResult`` as the reference.  It is exported from
@@ -34,9 +40,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import RegretTracker
+from . import sweep_sharding
 from .simulation import SimConfig, SimResult, make_round_body
 
-__all__ = ["run_simulation_scan", "run_sweep", "SweepResult"]
+__all__ = ["run_simulation_scan", "run_sweep", "run_sweep_sharded",
+           "SweepResult"]
 
 
 # Compiled scans are cached per configuration: the stream data, PRNG key
@@ -54,15 +62,20 @@ def _cfg_key(cfg: SimConfig, T: int):
             cfg.rates(T))
 
 
-def _make_scan(algo: str, T: int, cfg: SimConfig):
-    """Build ``scan(preds, y, costs, key, budget) -> per-round outputs``."""
+def _make_scan(algo: str, T: int, cfg: SimConfig, data_axis=None):
+    """Build ``scan(preds, y, costs, key, budget) -> per-round outputs``.
+
+    ``data_axis = (mesh_axis_name, size)`` marks the scan as traced inside
+    a shard_map with a client/data axis (the 2-D sharded sweep) — see
+    ``make_round_body``.
+    """
     eta, xi = cfg.rates(T)
     eta, xi = jnp.float32(eta), jnp.float32(xi)
 
     def scan(preds, y, costs, key, budget):
         body, init_carry = make_round_body(
             algo, preds, y, costs, cfg, jnp.asarray(budget, jnp.float32),
-            eta, xi)
+            eta, xi, data_axis=data_axis)
         _, outs = jax.lax.scan(body, init_carry(key), None, length=T,
                                unroll=_SCAN_UNROLL)
         return outs
@@ -133,17 +146,41 @@ def run_simulation_scan(algo: str, preds, y, costs, T: int,
 
 
 class SweepResult:
-    """Stacked curves from a vmapped sweep.
+    """Stacked curves from a (possibly mesh-sharded) sweep.
 
-    Leading axes of every field are the sweep axes: ``(n_seeds, T, ...)``,
-    or ``(n_budgets, n_seeds, T, ...)`` when a budget grid was given.
+    Leading axes of every per-round field are the sweep axes —
+    ``(n_seeds, T)``, or ``(n_budgets, n_seeds, T)`` when a budget grid
+    was given — regardless of which execution path produced it (the
+    sharded path unpads and re-assembles into this exact layout, so
+    callers never see the mesh).
 
-    Fields: ``mse_curves``, ``regret_curves`` (on-device float32
-    accumulation), ``sel_sizes``, ``round_costs``, ``violations``
-    (counts per configuration), ``seeds``, ``budgets``.
+    Fields (all host-side ``np.ndarray``):
+      mse_curves:    (..., T) float64 — the paper's running-mean MSE_t,
+                     reduced on host from the engine's per-round float32
+                     ``ens_sq_mean`` outputs.
+      regret_curves: (..., T) float64 view of the on-device float32
+                     ``RegretCarry`` accumulation.
+      sel_sizes:     (..., T) int — |S_t| per round.
+      round_costs:   (..., T) float64 transmit cost per round.
+      violations:    (...,) int — rounds with cost > budget + 1e-6.
+      seeds:         (n_seeds,) as given; budgets: scalar or (n_budgets,).
+      sharded:       True when produced by ``run_sweep_sharded``.
+
+    Determinism: a given (seed, budget) configuration's trajectory is a
+    deterministic function of the inputs only — identical whichever
+    sweep it is embedded in, whichever device computed it, vmapped or
+    sharded.  The 1-D sweep mesh is bit-equal to the vmap path; a 2-D
+    data-axis mesh implies the *unfused* client evaluation and is
+    bit-equal to the unfused vmap path (see docs/sweeps.md).
     """
 
-    def __init__(self, outs, seeds, budgets, T: int):
+    # the per-config result arrays that define trajectory equality between
+    # execution paths — the contract identical_fields (and through it the
+    # sweep-sharding tests and bench bit-equality gates) compares
+    FIELDS = ("mse_curves", "regret_curves", "sel_sizes", "round_costs",
+              "violations")
+
+    def __init__(self, outs, seeds, budgets, T: int, sharded: bool = False):
         ens_sq = np.asarray(outs["ens_sq_mean"], dtype=float)
         self.mse_curves = np.cumsum(ens_sq, -1) / np.arange(1, T + 1)
         self.regret_curves = np.asarray(outs["regret"], dtype=float)
@@ -154,22 +191,137 @@ class SweepResult:
         self.violations = (self.round_costs > bcast + 1e-6).sum(-1)
         self.seeds = np.asarray(seeds)
         self.budgets = b
+        self.sharded = sharded
 
     @property
     def final_mse(self) -> np.ndarray:
         return self.mse_curves[..., -1]
 
+    def identical_fields(self, other: "SweepResult") -> dict:
+        """Per-field exact-equality map vs another sweep's results."""
+        return {f: bool(np.array_equal(getattr(self, f), getattr(other, f)))
+                for f in self.FIELDS}
+
+    def identical_to(self, other: "SweepResult") -> bool:
+        """True iff every ``FIELDS`` array matches ``other`` bit-for-bit."""
+        return all(self.identical_fields(other).values())
+
+
+def _flatten_configs(keys, budgets, default_budget):
+    """Flatten a (seeds x budgets) grid into the flat config axis the
+    sharded path partitions: budgets outermost (row-major), matching the
+    vmap path's ``(n_budgets, n_seeds, ...)`` output layout.  Returns
+    ``(flat_keys, flat_budgets, grid_shape|None, budgets_arr)``."""
+    n_seeds = keys.shape[0]
+    if budgets is None:
+        flat_budgets = jnp.full((n_seeds,), jnp.float32(default_budget))
+        return keys, flat_budgets, None, np.float64(default_budget)
+    budgets_j = jnp.asarray(list(budgets), jnp.float32)
+    n_b = budgets_j.shape[0]
+    flat_keys = jnp.tile(keys, (n_b, 1))
+    flat_budgets = jnp.repeat(budgets_j, n_seeds)
+    return flat_keys, flat_budgets, (n_b, n_seeds), np.asarray(budgets_j)
+
+
+def _get_sharded_sweep(algo: str, T: int, cfg: SimConfig, mesh):
+    """Cached shard_map'd flat sweep for (algo, cfg, T, mesh)."""
+    key = (algo, mesh) + _cfg_key(cfg, T)
+    fn = _SCAN_CACHE.get(key)
+    if fn is None:
+        _, n_data = sweep_sharding.mesh_axes(mesh)
+        data_axis = ((sweep_sharding.DATA_AXIS, n_data)
+                     if n_data > 1 else None)
+        scan = _make_scan(algo, T, cfg, data_axis=data_axis)
+        per_config = lambda p, y, c, k, b: _sweep_outs(scan(p, y, c, k, b))
+        fn = _SCAN_CACHE[key] = sweep_sharding.sharded_sweep_fn(
+            per_config, mesh)
+    return fn
+
+
+def run_sweep_sharded(algo: str, preds, y, costs, T: int, cfg: SimConfig,
+                      seeds: Sequence[int],
+                      budgets: Optional[Sequence[float]] = None,
+                      mesh=None) -> SweepResult:
+    """Run a sweep with the flat (seeds x budgets) axis sharded over a
+    device mesh.
+
+    Same arguments and ``SweepResult`` as ``run_sweep`` plus an optional
+    ``mesh`` (default: every visible device as a pure ``("sweep",)``
+    partition via ``launch.mesh.make_sweep_mesh``).  Each device vmaps
+    the identical per-config scan over its shard of the flat axis; sweeps
+    that don't divide the mesh are padded with copies of the last config
+    and unpadded after the gather (``sweep_sharding.pad_configs``), so
+    any sweep size works on any mesh.  A mesh with a non-trivial
+    ``"data"`` axis additionally distributes each round's client window
+    inside every scan (``sharded.sharded_window_eval``'s psum).
+
+    Determinism: on a 1-D sweep mesh, trajectories are bit-equal to the
+    single-device ``run_sweep`` vmap; a non-trivial data axis (divisible
+    window) uses the unfused all-gather evaluation and is bit-equal to
+    the *unfused* vmap path — the only residual difference vs the
+    default path is the fused-vs-unfused kernel choice, not reduction
+    order.  Both pinned by tests/test_sweep_sharding.py.
+    """
+    preds = jnp.asarray(preds, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    costs = jnp.asarray(costs, jnp.float32)
+    seeds = list(seeds)
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    if mesh is None:
+        mesh = sweep_sharding.default_sweep_mesh()
+    n_sweep, _ = sweep_sharding.mesh_axes(mesh)
+    flat_keys, flat_budgets, grid_shape, budgets_arr = _flatten_configs(
+        keys, budgets, cfg.budget)
+    n_cfg = flat_keys.shape[0]
+    flat_keys, flat_budgets = sweep_sharding.pad_configs(
+        flat_keys, flat_budgets, n_sweep)
+    fn = _get_sharded_sweep(algo, T, cfg, mesh)
+    outs = fn(preds, y, costs, flat_keys, flat_budgets)
+    outs = jax.tree.map(lambda a: np.asarray(a)[:n_cfg], outs)
+    if grid_shape is not None:
+        outs = jax.tree.map(
+            lambda a: a.reshape(grid_shape + a.shape[1:]), outs)
+    return SweepResult(outs, seeds, budgets_arr, T, sharded=True)
+
+
+def _dispatch_sharded(cfg: SimConfig, n_cfg: int) -> bool:
+    """``run_sweep`` auto-dispatch: shard when the config asks for it, or
+    (by default) when >1 device is visible and there is >1 config."""
+    if cfg.sweep_sharded is not None:
+        return cfg.sweep_sharded
+    return jax.device_count() > 1 and n_cfg > 1
+
 
 def run_sweep(algo: str, preds, y, costs, T: int, cfg: SimConfig,
               seeds: Sequence[int],
-              budgets: Optional[Sequence[float]] = None) -> SweepResult:
-    """Vmap the scan engine over seeds (and optionally a budget grid).
+              budgets: Optional[Sequence[float]] = None,
+              mesh=None) -> SweepResult:
+    """Run every (budget, seed) configuration as one compiled program.
 
-    One compiled program executes every (budget, seed) configuration —
-    the sweep the paper's tables need, in a single device dispatch.
-    Per-round (T, K) loss matrices are not materialized per
-    configuration; regret accumulates on device via ``RegretCarry``.
+    ``preds`` (K, n_stream) / ``y`` (n_stream,) / ``costs`` (K,) are the
+    precomputed expert stream; ``seeds`` (and optionally ``budgets``)
+    define the grid.  Returns a ``SweepResult`` whose leading axes are
+    ``(n_seeds,)`` or ``(n_budgets, n_seeds)`` — see its docstring for
+    field shapes.  Per-round (T, K) loss matrices are never materialized
+    per configuration; regret accumulates on device via ``RegretCarry``.
+
+    Execution: on a single device the scan is vmapped over the grid; with
+    more than one visible device the flat configuration axis is sharded
+    over the mesh instead (``run_sweep_sharded`` — same results, padding
+    handled internally).  ``cfg.sweep_sharded`` forces (True) or disables
+    (False) the sharded path; passing ``mesh`` explicitly also forces it
+    (a requested partition is never silently ignored — conflicting with
+    ``sweep_sharded=False`` raises).
     """
+    seeds = list(seeds)
+    budgets = None if budgets is None else list(budgets)
+    n_cfg = len(seeds) * (len(budgets) if budgets is not None else 1)
+    if mesh is not None and cfg.sweep_sharded is False:
+        raise ValueError("run_sweep: mesh= requests the sharded path but "
+                         "cfg.sweep_sharded=False disables it — drop one")
+    if mesh is not None or _dispatch_sharded(cfg, n_cfg):
+        return run_sweep_sharded(algo, preds, y, costs, T, cfg, seeds,
+                                 budgets, mesh=mesh)
     preds = jnp.asarray(preds, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     costs = jnp.asarray(costs, jnp.float32)

@@ -31,7 +31,7 @@ try:  # jax >= 0.5 exports shard_map at top level
 except ImportError:  # jax 0.4.x keeps it in jax.experimental
     from jax.experimental.shard_map import shard_map
 
-__all__ = ["sharded_round_losses", "make_client_eval"]
+__all__ = ["sharded_round_losses", "sharded_window_eval", "make_client_eval"]
 
 
 def sharded_round_losses(preds: jnp.ndarray, y: jnp.ndarray,
@@ -39,10 +39,29 @@ def sharded_round_losses(preds: jnp.ndarray, y: jnp.ndarray,
                          axis: str = "data"):
     """Per-device body: local client shard -> (model_losses, ens_loss).
 
-    preds: (K, n_local) expert predictions on this device's clients.
-    y: (n_local,) labels.  mix: (K,) eq.-(5) mixture weights (replicated).
-    Returns replicated ((K,) summed normalized model losses, scalar summed
-    normalized ensemble loss, scalar summed raw ensemble sq-err).
+    Must be called inside a ``shard_map`` (or ``pmap``) that binds ``axis``
+    (``make_client_eval`` wraps it); shapes below are the *per-device*
+    shards.
+
+    preds: (K, n_local) float32 expert predictions on this device's clients
+      — the client axis is sharded over ``axis``, so the global cohort is
+      (K, n_local * axis_size).
+    y: (n_local,) float32 labels, sharded like ``preds``.
+    mix: (K,) float32 eq.-(5) mixture weights, replicated over ``axis``
+      (they rode down with the server broadcast).
+
+    Returns a replicated tuple (every element is ``psum``-reduced over
+    ``axis``, i.e. identical on all devices — what the server sees after
+    the uplink reduction):
+      model_losses: (K,) summed normalized per-model losses,
+      ens_loss:     scalar summed normalized ensemble loss,
+      ens_sq_sum:   scalar summed raw ensemble squared error.
+
+    Determinism: per-device partial sums are reduced by ``psum``, whose
+    cross-device combine order is fixed by the mesh, so repeated runs on
+    the same mesh are bit-identical; against a *single-device* evaluation
+    of the same cohort the float32 sums may differ in the last ulp
+    (different reduction grouping).
     """
     sq = (preds - y[None, :]) ** 2
     model_losses = jnp.minimum(sq / loss_scale, 1.0).sum(axis=1)
@@ -55,13 +74,88 @@ def sharded_round_losses(preds: jnp.ndarray, y: jnp.ndarray,
     return model_losses, ens_loss, ens_sq_sum
 
 
-def make_client_eval(mesh: Mesh, loss_scale: float = 4.0, axis: str = "data"):
-    """shard_map-wrapped client evaluation over the mesh ``data`` axis.
+def sharded_window_eval(preds: jnp.ndarray, y: jnp.ndarray,
+                        cursor: jnp.ndarray, n_t: jnp.ndarray,
+                        mix: jnp.ndarray, loss_scale: float, window: int,
+                        *, axis: str, axis_size: int,
+                        with_grad: bool = False):
+    """Data-parallel ``simulation.client_window_losses`` (+ FedBoost grad).
 
-    The (K, n) prediction matrix and (n,) labels are sharded over clients;
-    the mixture weights are replicated (they rode down with the broadcast).
-    Outputs are replicated — exactly what the server sees after the uplink
-    reduction.
+    The engine's round body evaluates a fixed ``window``-wide slice of the
+    online stream starting at ``cursor``, with the first ``n_t`` positions
+    active.  Here that window is split into ``axis_size`` contiguous
+    chunks: the device at ``lax.axis_index(axis)`` gathers and evaluates
+    the *elementwise* client losses for window positions
+    ``[d*w_local, (d+1)*w_local)`` (``w_local = window // axis_size`` —
+    the caller guarantees divisibility); the chunks are then
+    ``all_gather``-ed back to the full (K, window) layout and reduced
+    full-width on every device.  This is the 2-D ``(sweep, data)`` mesh
+    composition used by ``repro.federated.engine.run_sweep_sharded``.
+
+    Why all_gather + full-width reduce, not a psum of per-chunk partial
+    sums (``sharded_round_losses``' reduction)?  Chunked partial sums
+    change the float32 reduction grouping by a last-ulp, and EFL-FG's
+    graph draw chaotically amplifies that into *different selection
+    trajectories* within a few hundred rounds.  Gathering the uplinked
+    per-position losses and reducing them in the exact layout the
+    single-device engine reduces keeps the sharded sweep bit-equal to the
+    vmap path (pinned by tests/test_sweep_sharding.py) — and mirrors the
+    paper's wire protocol anyway: clients uplink losses, the *server*
+    reduces.  ``sharded_round_losses`` keeps its cheaper psum for the
+    standalone cohort evaluation, where no scan feeds back into a draw.
+
+    Must be called inside a ``shard_map`` binding ``axis``.  ``preds``
+    (K, n_stream) and ``y`` (n_stream,) are *replicated* over ``axis``
+    (the window chunking, not input sharding, distributes the work — the
+    sequential stream gather wraps modulo ``n_stream`` and may cross any
+    shard boundary).
+
+    Returns ``(ens_sq_mean, ens_loss_norm, model_losses_norm, grad)`` with
+    the same semantics/shapes as ``client_window_losses`` (+ the (K,)
+    mixture gradient, or ``None`` without ``with_grad``), replicated over
+    ``axis``.
+    """
+    n_stream = preds.shape[1]
+    w_local = window // axis_size
+    dev = jax.lax.axis_index(axis)
+    offs = dev * w_local + jnp.arange(w_local)
+    idx = (cursor + offs) % n_stream
+    cmask = offs < n_t
+    p_cl = preds[:, idx]                           # (K, w_local) chunk
+    y_cl = y[idx]
+    sq = (p_cl - y_cl[None, :]) ** 2
+    ml_chunk = jnp.where(cmask[None, :],
+                         jnp.minimum(sq / loss_scale, 1.0), 0.0)
+    yhat = mix @ p_cl
+    ens_sq_chunk = jnp.where(cmask, (yhat - y_cl) ** 2, 0.0)
+    # uplink: device-order tiled gather reassembles the full window layout
+    ml = jax.lax.all_gather(ml_chunk, axis, axis=1, tiled=True)  # (K, W)
+    ens_sq = jax.lax.all_gather(ens_sq_chunk, axis, axis=0, tiled=True)
+    model_losses = ml.sum(1)
+    ens_sq_mean = ens_sq.sum() / n_t.astype(ens_sq.dtype)
+    ens_loss = jnp.minimum(ens_sq / loss_scale, 1.0).sum()
+    grad = None
+    if with_grad:
+        resid_chunk = jnp.where(cmask, yhat - y_cl, 0.0)
+        resid = jax.lax.all_gather(resid_chunk, axis, axis=0, tiled=True)
+        # preds is replicated, so the full-window prediction gather is a
+        # local lookup — no collective needed, and the values (hence the
+        # matmul) are bit-identical to gathering the chunks.
+        idx_full = (cursor + jnp.arange(window)) % n_stream
+        grad = (2.0 / n_t.astype(resid.dtype)) * (preds[:, idx_full] @ resid)
+    return ens_sq_mean, ens_loss, model_losses, grad
+
+
+def make_client_eval(mesh: Mesh, loss_scale: float = 4.0, axis: str = "data"):
+    """shard_map-wrapped ``sharded_round_losses`` over the mesh's ``axis``.
+
+    Returns a jitted ``fn(preds, y, mix) -> (model_losses, ens_loss,
+    ens_sq_sum)`` taking *global* arrays: the (K, n) prediction matrix and
+    (n,) labels are sharded over clients (``n`` must divide the axis
+    size), the (K,) mixture weights are replicated (they rode down with
+    the broadcast).  Outputs are replicated — exactly what the server
+    sees after the uplink reduction.  Works for any per-device
+    expert-prediction source, so the LLM-pool example reuses it.
     """
     fn = partial(sharded_round_losses, loss_scale=loss_scale, axis=axis)
     return jax.jit(shard_map(

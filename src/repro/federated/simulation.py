@@ -72,6 +72,11 @@ class SimConfig:
                                       # per round) vs the unfused ~6-op path;
                                       # trajectories agree (float32, pinned
                                       # by tests/test_client_eval.py)
+    sweep_sharded: Optional[bool] = None  # run_sweep dispatch: None = auto
+                                      # (shard over the device mesh when >1
+                                      # device is visible), True = force the
+                                      # sharded path, False = always the
+                                      # single-device vmap (docs/sweeps.md)
 
     def rates(self, T: int):
         eta = self.eta if self.eta is not None else 1.0 / np.sqrt(T)
@@ -265,8 +270,36 @@ def _make_evaluate(algo: str, fused: bool, preds, y, cfg: SimConfig,
     return evaluate
 
 
+def _make_evaluate_sharded(algo: str, preds, y, cfg: SimConfig, W: int,
+                           data_axis):
+    """Data-parallel ``evaluate`` for round bodies traced inside a
+    shard_map that binds a client/data mesh axis: each device on
+    ``data_axis = (name, size)`` evaluates its contiguous chunk of the
+    round's window and the totals come back via the same psum reduction
+    as ``sharded.sharded_round_losses``.  Same contract as
+    ``_make_evaluate``; requires ``W % size == 0`` (the caller falls back
+    to replicated evaluation otherwise).
+    """
+    from .sharded import sharded_window_eval
+    axis, size = data_axis
+    if algo == "eflfg":
+        def evaluate(plan, cursor, n_t):
+            return sharded_window_eval(
+                preds, y, cursor, n_t, plan.mix, cfg.loss_scale, W,
+                axis=axis, axis_size=size, with_grad=False)
+    elif algo == "fedboost":
+        def evaluate(plan, cursor, n_t):
+            _sel, _pi, mix, _cost = plan
+            return sharded_window_eval(
+                preds, y, cursor, n_t, mix, cfg.loss_scale, W,
+                axis=axis, axis_size=size, with_grad=True)
+    else:
+        raise ValueError(f"unknown algo {algo!r}")
+    return evaluate
+
+
 def make_round_body(algo: str, preds, y, costs, cfg: SimConfig, budget,
-                    eta, xi, ext=None):
+                    eta, xi, ext=None, data_axis=None):
     """Build the one-round scan body and its initial-carry constructor.
 
     Returns ``(body, init_carry)`` where ``body(carry, _) -> (carry, out)``
@@ -282,11 +315,23 @@ def make_round_body(algo: str, preds, y, costs, cfg: SimConfig, budget,
     loop precomputes it once per run and passes it in via ``ext``.
     Streams shorter than the window fall back to the unfused
     modulo-gather path (the extension trick needs ``W <= n_stream``).
+
+    ``data_axis = (mesh_axis_name, size)`` marks the body as being traced
+    inside a shard_map with a client/data axis (the engine's 2-D
+    ``(sweep, data)`` sharded sweep): the client evaluation then splits
+    the round's window across that axis and psums the totals
+    (``_make_evaluate_sharded``).  When the window does not divide the
+    axis size, every device evaluates the full window redundantly instead
+    (replicated inputs make that correct, just not parallel).
     """
     K, n_stream = preds.shape
     W = eval_window(cfg)
-    fused = cfg.use_fused and W <= n_stream
-    evaluate = _make_evaluate(algo, fused, preds, y, cfg, W, ext)
+    if (data_axis is not None and data_axis[1] > 1
+            and W % data_axis[1] == 0):
+        evaluate = _make_evaluate_sharded(algo, preds, y, cfg, W, data_axis)
+    else:
+        fused = cfg.use_fused and W <= n_stream
+        evaluate = _make_evaluate(algo, fused, preds, y, cfg, W, ext)
     if algo == "eflfg":
         body = make_eflfg_scan_body(_eflfg_loss_fn(evaluate, cfg, n_stream),
                                     costs, budget, eta, xi)

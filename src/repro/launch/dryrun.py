@@ -1,9 +1,13 @@
-# The dry-run (and ONLY the dry-run) needs 512 placeholder devices so the
-# production mesh can be built on this CPU-only container.  These two lines
-# MUST run before any other import — jax locks the device count on first
-# initialization.
+# The dry-run (and ONLY the dry-run) needs placeholder devices so the
+# production mesh can be built on this CPU-only container: 512 for the
+# real meshes, 8 for the --reduced grid.  These lines MUST run before any
+# other import — jax locks the device count on first initialization, so
+# the flag has to be chosen from argv before anything imports jax.
 import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+import sys
+_N_FORCED = "8" if "--reduced" in sys.argv else "512"
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + _N_FORCED + " "
                            + os.environ.get("XLA_FLAGS", ""))
 
 """Multi-pod dry-run: lower + compile every (architecture x input-shape)
@@ -17,14 +21,30 @@ Each run writes experiments/dryrun/<arch>__<shape>__<mesh>[__tag].json with
 memory_analysis, cost_analysis FLOPs/bytes, and per-collective byte counts
 parsed from the partitioned HLO (per-device shard shapes).  Those JSONs are
 the single source of truth for EXPERIMENTS.md §Dry-run and §Roofline.
+
+``--reduced`` swaps the 512-device production mesh for a miniature
+(pod=2, data=2, model=2) mesh of 8 forced host devices and shrinks every
+architecture/input shape (``ArchConfig.reduced()``, capped batch/seq) —
+the same reduction tests/test_distribution.py compiles.  ``--reduced
+--all`` regenerates the committed ``experiments/dryrun`` artifact grid
+(docs/sweeps.md documents this); the full 512-device sweep stays an
+off-CI manual run.
 """
 
 import argparse
 import json
 import re
 import subprocess
-import sys
 import time
+
+# the committed reduced-grid artifact set: one representative per model
+# family x {train, decode} (the two modes with distinct sharding rules)
+REDUCED_GRID = [
+    ("qwen3-1.7b", "train_4k"), ("qwen3-1.7b", "decode_32k"),
+    ("mamba2-370m", "train_4k"), ("mamba2-370m", "decode_32k"),
+    ("mixtral-8x22b", "train_4k"), ("mixtral-8x22b", "decode_32k"),
+    ("deepseek-v2-236b", "train_4k"), ("deepseek-v2-236b", "decode_32k"),
+]
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -80,20 +100,25 @@ def collective_bytes(hlo_text: str) -> dict:
 
 def run_one(arch: str, shape: str, mesh_name: str, *, fsdp=None, accum=None,
             expert_parallel=None, ce_chunk=None, accum_dtype="float32",
-            out_dir="experiments/dryrun", tag=""):
+            out_dir="experiments/dryrun", tag="", reduced=False):
     import jax
     from repro.launch.mesh import make_production_mesh
     from repro.launch.specs import build_dryrun
 
     t0 = time.time()
-    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    if reduced:
+        mesh_name = "reduced8"
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
     fn, args, in_specs, out_specs, meta = build_dryrun(
         arch, shape, mesh, fsdp=fsdp, accum=accum,
         expert_parallel=expert_parallel, ce_chunk=ce_chunk,
-        accum_dtype=accum_dtype)
+        accum_dtype=accum_dtype, reduced=reduced)
     meta["ce_chunk"] = ce_chunk
     meta["mesh"] = mesh_name
     meta["devices"] = int(mesh.devices.size)
+    meta["reduced"] = bool(reduced)
 
     from repro.launch.mesh import set_global_mesh, as_shardings
     set_global_mesh(mesh)
@@ -159,9 +184,13 @@ def run_one(arch: str, shape: str, mesh_name: str, *, fsdp=None, accum=None,
     return rec
 
 
-def run_all(meshes, out_dir, timeout=1800, only_missing=False):
+def run_all(meshes, out_dir, timeout=1800, only_missing=False,
+            reduced=False):
     from repro.launch.specs import dryrun_pairs
-    pairs = dryrun_pairs()
+    if reduced:
+        meshes, pairs = ["reduced8"], REDUCED_GRID
+    else:
+        pairs = dryrun_pairs()
     results = []
     for mesh_name in meshes:
         for arch, shape in pairs:
@@ -172,8 +201,8 @@ def run_all(meshes, out_dir, timeout=1800, only_missing=False):
                     results.append((arch, shape, mesh_name, "cached"))
                     continue
             cmd = [sys.executable, "-m", "repro.launch.dryrun",
-                   "--arch", arch, "--shape", shape, "--mesh", mesh_name,
-                   "--out-dir", out_dir]
+                   "--arch", arch, "--shape", shape, "--out-dir", out_dir]
+            cmd += ["--reduced"] if reduced else ["--mesh", mesh_name]
             t0 = time.time()
             try:
                 p = subprocess.run(cmd, capture_output=True, text=True,
@@ -199,6 +228,9 @@ def main():
     ap.add_argument("--shape")
     ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="8-host-device (2,2,2) mesh + reduced arch/shapes "
+                    "(the committed artifact grid; see docs/sweeps.md)")
     ap.add_argument("--only-missing", action="store_true")
     ap.add_argument("--meshes", default="pod,multipod")
     ap.add_argument("--fsdp", type=int, default=None)
@@ -214,13 +246,14 @@ def main():
     if args.all:
         sys.exit(run_all(args.meshes.split(","), args.out_dir,
                          timeout=args.timeout,
-                         only_missing=args.only_missing))
+                         only_missing=args.only_missing,
+                         reduced=args.reduced))
     fsdp = None if args.fsdp is None else bool(args.fsdp)
     ep = None if args.expert_parallel is None else bool(args.expert_parallel)
     run_one(args.arch, args.shape, args.mesh, fsdp=fsdp, accum=args.accum,
             expert_parallel=ep, ce_chunk=args.ce_chunk,
             accum_dtype=args.accum_dtype,
-            out_dir=args.out_dir, tag=args.tag)
+            out_dir=args.out_dir, tag=args.tag, reduced=args.reduced)
 
 
 if __name__ == "__main__":

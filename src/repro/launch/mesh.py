@@ -11,11 +11,13 @@ XLA_FLAGS before any jax initialization and only then builds the mesh.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import NamedSharding, PartitionSpec
+import numpy as np
 
-__all__ = ["make_production_mesh", "data_axes", "MESH_SHAPES",
-           "set_global_mesh", "as_shardings"]
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = ["make_production_mesh", "make_sweep_mesh", "data_axes",
+           "MESH_SHAPES", "set_global_mesh", "as_shardings"]
 
 MESH_SHAPES = {
     "pod": ((16, 16), ("data", "model")),
@@ -26,6 +28,27 @@ MESH_SHAPES = {
 def make_production_mesh(*, multi_pod: bool = False):
     shape, axes = MESH_SHAPES["multipod" if multi_pod else "pod"]
     return jax.make_mesh(shape, axes)
+
+
+def make_sweep_mesh(n_data: int = 1, *, devices=None) -> Mesh:
+    """``("sweep", "data")`` mesh over the visible devices.
+
+    The simulation engine's sharded sweeps (``repro.federated.engine.
+    run_sweep_sharded``) partition the flat (seeds x budgets) configuration
+    axis over ``sweep`` and — when ``n_data > 1`` — the per-round client
+    window over ``data`` (the same client/data axis `repro.federated.
+    sharded` psums over).  ``n_data`` must divide the device count; the
+    remaining devices form the sweep axis.  Like ``make_production_mesh``
+    this is a function, not a module constant, so importing never touches
+    jax device state.
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n_dev = len(devices)
+    if n_data < 1 or n_dev % n_data:
+        raise ValueError(f"n_data={n_data} does not divide the "
+                         f"{n_dev} visible devices")
+    return Mesh(np.array(devices).reshape(n_dev // n_data, n_data),
+                ("sweep", "data"))
 
 
 def set_global_mesh(mesh) -> None:

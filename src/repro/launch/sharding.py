@@ -34,7 +34,7 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["param_specs", "batch_specs", "cache_specs", "train_state_specs",
-           "logits_spec"]
+           "logits_spec", "sweep_specs"]
 
 # leaf name -> spec for the LAST TWO dims (everything left of them: None)
 _RULES_2D = {
@@ -200,6 +200,29 @@ def cache_specs(cache_shapes, mesh, *, seq_shard: bool = False):
             spec[nd - 3] = "model"
         return _guard(leaf.shape, spec, mesh)
     return jax.tree_util.tree_map_with_path(f, cache_shapes)
+
+
+def sweep_specs(mesh, n_configs: Optional[int] = None, axis: str = "sweep"):
+    """Specs for a mesh-sharded flat configuration sweep.
+
+    Returns ``(in_specs, out_spec)`` for the engine's sharded ``run_sweep``
+    shard_map: the stream arrays (preds, y, costs) are replicated, the flat
+    per-config arrays (PRNG keys, budgets) and every output leaf are sharded
+    on their leading dim over ``axis``.  When ``n_configs`` is given it is
+    validated against the axis size — unlike the parameter rules above there
+    is no silent replicate-on-indivisible fallback (that would change the
+    per-device batch shape), so indivisible sweeps must be padded first
+    (``repro.federated.sweep_sharding.pad_configs``).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_shards = sizes[axis]
+    if n_configs is not None and n_configs % n_shards:
+        raise ValueError(
+            f"flat sweep of {n_configs} configs does not divide the "
+            f"{axis}={n_shards} mesh axis — pad it to a multiple first "
+            "(see repro.federated.sweep_sharding.pad_configs)")
+    cfg_spec = P(axis)
+    return (P(), P(), P(), cfg_spec, cfg_spec), cfg_spec
 
 
 def logits_spec(mesh, batch: int):

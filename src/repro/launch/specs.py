@@ -128,10 +128,17 @@ def _decode_cache_len(cfg, shape_name: str, S: int):
 
 def build_dryrun(arch: str, shape_name: str, mesh, *, fsdp=None, accum=None,
                  expert_parallel=None, remat=True, ce_chunk=None,
-                 accum_dtype="float32"):
+                 accum_dtype="float32", reduced=False):
+    """``reduced=True`` shrinks the architecture (``ArchConfig.reduced()``)
+    and caps the input shape (batch 16, seq 512) for the 8-host-device
+    artifact grid — same topology/specs path, compile-sized for CPU."""
     cfg = get_config(arch)
     shp = INPUT_SHAPES[shape_name]
     defaults = arch_defaults(arch, shape_name)
+    if reduced:
+        cfg = cfg.reduced()
+        shp = shp._replace(seq_len=min(shp.seq_len, 512),
+                           global_batch=max(min(shp.global_batch, 16), 4))
     fsdp = defaults["fsdp"] if fsdp is None else fsdp
     accum = defaults["accum"] if accum is None else accum
     expert_parallel = (defaults["expert_parallel"] if expert_parallel is None

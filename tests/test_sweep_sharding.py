@@ -1,0 +1,285 @@
+"""Mesh-sharded sweeps: the sharded ``run_sweep`` path must be bit-equal
+to the single-device vmap path.
+
+Two layers, mirroring tests/test_distribution.py:
+
+* In-process (any device count): the sharded path on a trivial (1, 1)
+  mesh — the full shard_map/padding/unpad machinery with no actual
+  partitioning — plus the pure helpers (``pad_configs``, ``sweep_specs``
+  validation, dispatch override).
+* One subprocess with ``--xla_force_host_platform_device_count=8``
+  running every multi-device equality check (non-divisible padding, the
+  budget grid, auto-dispatch, and the 2-D ``(sweep, data)`` mesh with
+  both the divisible-window gather path and the indivisible-window
+  replicated fallback) and emitting one JSON record the tests assert on.
+
+Equality discipline: the 1-D sweep mesh runs the *identical* per-config
+program as the vmap path, so every comparison there is ``array_equal``
+against the default (fused) engine.  The 2-D data-axis path necessarily
+uses the unfused evaluation (the Pallas client-eval kernel is
+single-device), so its bit-equality is pinned against the unfused vmap
+path; vs the default fused path it inherits the fused-vs-unfused float32
+tolerance of tests/test_client_eval.py (see docs/sweeps.md).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.federated import SweepResult  # noqa: E402
+
+FIELDS = SweepResult.FIELDS
+
+
+# ---------------------------------------------------------------------------
+# In-process: helpers + trivial-mesh sharded path (works on one device)
+# ---------------------------------------------------------------------------
+
+def _stream(K=8, n_stream=400, seed=0):
+    rng = np.random.default_rng(seed)
+    preds = rng.normal(0, 1, (K, n_stream)).astype(np.float32)
+    y = rng.normal(0, 1, n_stream).astype(np.float32)
+    costs = rng.uniform(0.1, 1.0, K).astype(np.float32)
+    return preds, y, costs
+
+
+def test_pad_configs():
+    from repro.federated.sweep_sharding import pad_configs
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in range(5)])
+    budgets = jnp.arange(5, dtype=jnp.float32)
+    pk, pb = pad_configs(keys, budgets, 4)
+    assert pk.shape == (8, 2) and pb.shape == (8,)
+    np.testing.assert_array_equal(np.asarray(pk[:5]), np.asarray(keys))
+    # padding repeats the last (valid) configuration
+    np.testing.assert_array_equal(np.asarray(pk[5:]),
+                                  np.tile(np.asarray(keys[-1]), (3, 1)))
+    np.testing.assert_array_equal(np.asarray(pb[5:]), [4.0, 4.0, 4.0])
+    # already divisible: unchanged objects
+    pk2, pb2 = pad_configs(keys[:4], budgets[:4], 4)
+    assert pk2.shape == (4, 2) and pb2.shape == (4,)
+
+
+def test_sweep_specs_validation():
+    from repro.launch.mesh import make_sweep_mesh
+    from repro.launch.sharding import sweep_specs
+    mesh = make_sweep_mesh()            # trivial on one device
+    in_specs, out_spec = sweep_specs(mesh, n_configs=jax.device_count())
+    assert len(in_specs) == 5
+    bad = 3 * jax.device_count() + 1
+    if jax.device_count() > 1:
+        with pytest.raises(ValueError, match="pad"):
+            sweep_specs(mesh, n_configs=bad)
+
+
+def test_mesh_axes_rejects_foreign_mesh():
+    from repro.federated.sweep_sharding import mesh_axes
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                             ("data", "model"))
+    with pytest.raises(ValueError, match="sweep"):
+        mesh_axes(mesh)
+
+
+def test_sharded_path_trivial_mesh_bit_equal():
+    """Forcing the sharded path on however many devices are visible (one,
+    under tier-1) must reproduce the vmap path bit-for-bit — shard_map,
+    padding and unpadding included."""
+    from dataclasses import replace
+    from repro.federated import SimConfig, run_sweep
+    preds, y, costs = _stream()
+    cfg_v = SimConfig(budget=2.0, sweep_sharded=False)
+    cfg_s = replace(cfg_v, sweep_sharded=True)
+    for algo in ("eflfg", "fedboost"):
+        sv = run_sweep(algo, preds, y, costs, T=60, cfg=cfg_v,
+                       seeds=range(3))
+        ss = run_sweep(algo, preds, y, costs, T=60, cfg=cfg_s,
+                       seeds=range(3))
+        assert not sv.sharded and ss.sharded
+        for f in FIELDS:
+            np.testing.assert_array_equal(getattr(sv, f), getattr(ss, f),
+                                          err_msg=f"{algo}/{f}")
+    # grid layout must survive the flatten/unflatten round trip
+    gv = run_sweep("eflfg", preds, y, costs, T=60, cfg=cfg_v,
+                   seeds=range(3), budgets=[1.0, 2.0])
+    gs = run_sweep("eflfg", preds, y, costs, T=60, cfg=cfg_s,
+                   seeds=range(3), budgets=[1.0, 2.0])
+    assert gs.mse_curves.shape == (2, 3, 60)
+    for f in FIELDS:
+        np.testing.assert_array_equal(getattr(gv, f), getattr(gs, f),
+                                      err_msg=f"grid/{f}")
+
+
+def test_dispatch_rules():
+    from repro.federated.engine import _dispatch_sharded
+    from repro.federated import SimConfig
+    auto = SimConfig()
+    assert _dispatch_sharded(auto, 8) == (jax.device_count() > 1)
+    assert not _dispatch_sharded(auto, 1) or jax.device_count() == 1
+    assert _dispatch_sharded(SimConfig(sweep_sharded=True), 1)
+    assert not _dispatch_sharded(SimConfig(sweep_sharded=False), 8)
+
+
+def test_explicit_mesh_forces_sharded_path():
+    """A requested mesh is never silently ignored: it forces the sharded
+    path, and conflicts with sweep_sharded=False loudly."""
+    from repro.federated import SimConfig, run_sweep
+    from repro.launch.mesh import make_sweep_mesh
+    preds, y, costs = _stream()
+    mesh = make_sweep_mesh()
+    sw = run_sweep("eflfg", preds, y, costs, T=40, cfg=SimConfig(budget=2.0),
+                   seeds=range(2), mesh=mesh)
+    assert sw.sharded
+    with pytest.raises(ValueError, match="sweep_sharded=False"):
+        run_sweep("eflfg", preds, y, costs, T=40,
+                  cfg=SimConfig(budget=2.0, sweep_sharded=False),
+                  seeds=range(2), mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: 8 forced host devices, real partitioning
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json
+from dataclasses import replace
+
+import numpy as np
+import jax
+
+from repro.federated import SimConfig, run_sweep, run_sweep_sharded
+from repro.launch.mesh import make_sweep_mesh
+
+rng = np.random.default_rng(0)
+preds = rng.normal(0, 1, (8, 400)).astype(np.float32)
+y = rng.normal(0, 1, 400).astype(np.float32)
+costs = rng.uniform(0.1, 1.0, 8).astype(np.float32)
+T = 120
+
+def eq(a, b):
+    return a.identical_fields(b)
+
+rec = {"devices": jax.device_count(), "checks": {}}
+cfg = SimConfig(budget=2.0)
+cfg_off = replace(cfg, sweep_sharded=False)
+
+for algo in ("eflfg", "fedboost"):
+    # 12 configs on 8 shards: padding + unpadding, bit-equal to vmap
+    v = run_sweep(algo, preds, y, costs, T=T, cfg=cfg_off, seeds=range(12))
+    s = run_sweep_sharded(algo, preds, y, costs, T=T, cfg=cfg,
+                          seeds=range(12))
+    rec["checks"][f"{algo}/seeds12_pad"] = eq(v, s)
+    rec["checks"][f"{algo}/seeds12_flags"] = {"vmap_not_sharded":
+                                              not v.sharded,
+                                              "sharded_flag": s.sharded}
+
+# auto-dispatch picks the sharded path on a multi-device host
+auto = run_sweep("eflfg", preds, y, costs, T=T, cfg=cfg, seeds=range(12))
+v = run_sweep("eflfg", preds, y, costs, T=T, cfg=cfg_off, seeds=range(12))
+rec["checks"]["auto_dispatch"] = dict(eq(v, auto), sharded=auto.sharded)
+
+# budget grid: 3 x 5 = 15 flat configs (again non-divisible)
+gv = run_sweep("eflfg", preds, y, costs, T=T, cfg=cfg_off, seeds=range(5),
+               budgets=[1.0, 2.0, 3.0])
+gs = run_sweep_sharded("eflfg", preds, y, costs, T=T, cfg=cfg,
+                       seeds=range(5), budgets=[1.0, 2.0, 3.0])
+rec["checks"]["grid3x5_pad"] = dict(eq(gv, gs),
+                                    shape_ok=gs.mse_curves.shape == (3, 5, T))
+
+# 2-D (sweep=4, data=2) mesh, divisible window (W=6): the all-gather
+# window path — bit-equal to the unfused vmap path (see module docstring)
+mesh2 = make_sweep_mesh(n_data=2)
+for algo in ("eflfg", "fedboost"):
+    cfg6 = SimConfig(budget=2.0, clients_per_round=6, use_fused=False)
+    v6 = run_sweep(algo, preds, y, costs, T=T,
+                   cfg=replace(cfg6, sweep_sharded=False), seeds=range(12))
+    s6 = run_sweep_sharded(algo, preds, y, costs, T=T, cfg=cfg6,
+                           seeds=range(12), mesh=mesh2)
+    rec["checks"][f"{algo}/mesh2d_gather"] = eq(v6, s6)
+
+# 2-D mesh, indivisible window (W=5 on data=2): replicated fallback keeps
+# the fused kernel, so it is bit-equal to the *default* vmap path
+s5 = run_sweep_sharded("eflfg", preds, y, costs, T=T, cfg=cfg,
+                       seeds=range(12), mesh=mesh2)
+v5 = run_sweep("eflfg", preds, y, costs, T=T, cfg=cfg_off, seeds=range(12))
+rec["checks"]["mesh2d_fallback_W5"] = eq(v5, s5)
+
+# paper's uplink-bandwidth mode: W = n_clients = 20, divisible by data=2
+cfgb = SimConfig(budget=2.0, uplink_bandwidth=12.0, loss_bandwidth=1.0,
+                 n_clients=20, use_fused=False)
+vb = run_sweep("eflfg", preds, y, costs, T=T,
+               cfg=replace(cfgb, sweep_sharded=False), seeds=range(6))
+sb = run_sweep_sharded("eflfg", preds, y, costs, T=T, cfg=cfgb,
+                       seeds=range(6), mesh=mesh2)
+rec["checks"]["mesh2d_bandwidth_mode"] = eq(vb, sb)
+
+print(json.dumps(rec))
+"""
+
+
+@pytest.fixture(scope="module")
+def sharded_record():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    p = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=540)
+    assert p.returncode == 0, p.stderr[-3000:]
+    return json.loads(p.stdout.strip().splitlines()[-1])
+
+
+def _assert_all(check: dict, name: str):
+    bad = [k for k, v in check.items() if not v]
+    assert not bad, f"{name}: failed fields {bad} in {check}"
+
+
+def test_subprocess_devices(sharded_record):
+    assert sharded_record["devices"] == 8
+
+
+@pytest.mark.parametrize("algo", ["eflfg", "fedboost"])
+def test_sharded_bit_equal_with_padding(sharded_record, algo):
+    """12 configs over 8 shards: padded, unpadded, bit-equal."""
+    _assert_all(sharded_record["checks"][f"{algo}/seeds12_pad"],
+                f"{algo}/seeds12_pad")
+    _assert_all(sharded_record["checks"][f"{algo}/seeds12_flags"],
+                f"{algo}/seeds12_flags")
+
+
+def test_auto_dispatch_sharded(sharded_record):
+    _assert_all(sharded_record["checks"]["auto_dispatch"], "auto_dispatch")
+
+
+def test_grid_bit_equal_with_padding(sharded_record):
+    _assert_all(sharded_record["checks"]["grid3x5_pad"], "grid3x5_pad")
+
+
+@pytest.mark.parametrize("algo", ["eflfg", "fedboost"])
+def test_mesh2d_gather_bit_equal(sharded_record, algo):
+    """(sweep=4, data=2): all-gather window path vs unfused vmap path."""
+    _assert_all(sharded_record["checks"][f"{algo}/mesh2d_gather"],
+                f"{algo}/mesh2d_gather")
+
+
+def test_mesh2d_indivisible_window_fallback(sharded_record):
+    """W=5 doesn't divide data=2: replicated fallback stays on the fused
+    kernel and matches the default vmap path bit-for-bit."""
+    _assert_all(sharded_record["checks"]["mesh2d_fallback_W5"],
+                "mesh2d_fallback_W5")
+
+
+def test_mesh2d_bandwidth_mode(sharded_record):
+    """The paper's N_t uplink formula (W = n_clients) through the 2-D
+    gather path."""
+    _assert_all(sharded_record["checks"]["mesh2d_bandwidth_mode"],
+                "mesh2d_bandwidth_mode")
