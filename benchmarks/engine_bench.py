@@ -27,6 +27,15 @@ robust estimator the CI regression gate compares against):
   ``fused_trajectories_identical`` bit-compares the two engines'
   selection masks.  ``t_sweep8_s`` vmaps the fused scan over 8 seeds.
 
+Each record also carries a ``serve`` section: request throughput of the
+``repro.serve`` dynamic batcher — N mixed-seed requests dispatched as
+bucketed batches vs the same N as serial direct engine calls — plus the
+serving determinism flags (batched results bit-equal to the ``run_sweep``
+vmap path, exact-mode results bit-equal to direct solo runs; see
+docs/serving.md#determinism).  The gate compares the batched/serial
+*ratio* (machine-normalized by construction, like the sharded cells) and
+hard-fails on either flag.
+
 Each record also carries a ``sharded_sweep`` section measured in a
 *subprocess* under ``--xla_force_host_platform_device_count=8`` (the
 parent has long since locked jax to the visible device count): the
@@ -45,6 +54,9 @@ fast-mode medians that ``benchmarks/check_regression.py`` gates on.
 
     PYTHONPATH=src python -m benchmarks.engine_bench        # full T=2000
     BENCH_FAST=1 ... python -m benchmarks.engine_bench      # CI smoke
+    BENCH_FAST=1 BENCH_BASELINE_RUNS=3 ...                  # committable
+                           # baseline: conservative merge over 3 runs
+                           # (see merge_conservative)
 """
 
 from __future__ import annotations
@@ -135,6 +147,111 @@ def _loop_baseline(algo, preds, y, costs, T, cfg):
             mse[t] = sq / (t + 1)
             _ = float(cost_j)
     return mse
+
+
+# ---------------------------------------------------------------------------
+# Serving cells: request throughput of the repro.serve dynamic batcher
+# (in-process; one device under CI).
+# ---------------------------------------------------------------------------
+
+def _serve_record(fast: bool) -> dict:
+    """Serving throughput: N requests served as dynamic batches vs the
+    same N as serial direct ``run_simulation_scan`` calls (the status-quo
+    loop the serving layer replaces), interleaved reps, plus the two
+    determinism flags of docs/serving.md#determinism:
+
+    * ``served_equals_sweep`` — batched-mode results bit-equal to the
+      ``run_sweep`` vmap path (the batched program family);
+    * ``exact_equals_direct`` — exact-mode results bit-equal to direct
+      solo engine runs.
+
+    Traffic is mixed-seed, uniform-budget, with the *unfused* client
+    evaluation — the batched-serving configuration: the unfused round
+    body vectorizes across batch lanes, while the interpret-mode Pallas
+    kernel executes per-lane under vmap on CPU (docs/serving.md#tuning).
+    EFL-FG's cell is expected near 1x on CPU — its round is dominated by
+    the graph builder's lockstep while_loop, which batching cannot speed
+    up (the open ROADMAP item) — while FedBoost shows the batching win.
+    """
+    import statistics as stats
+    from dataclasses import replace
+    from repro.federated import SimConfig, run_simulation_scan, run_sweep
+    from repro.serve import SimServer, SimClient
+
+    T = 300 if fast else 2000
+    K, n_clients, n_stream = 22, 100, 6000
+    n_req, max_batch, n_exact = 32, 16, 8
+    rng = np.random.default_rng(1)
+    preds = rng.normal(0, 1, (K, n_stream)).astype(np.float32)
+    y = rng.normal(0, 1, n_stream).astype(np.float32)
+    costs = rng.uniform(0.05, 1.0, K).astype(np.float32)
+    cfg = SimConfig(n_clients=n_clients, budget=3.0, use_fused=False)
+    cfg_v = replace(cfg, sweep_sharded=False)
+    seeds = list(range(n_req))
+
+    rec = {"n_requests": n_req, "max_batch": max_batch, "T": T,
+           "traffic": "mixed-seed uniform-budget, unfused client eval "
+           "(the batched-serving config; docs/serving.md#tuning)"}
+
+    def serve_wave(algo, specs):
+        server = SimServer(max_batch=max_batch, max_wait_ms=0.0)
+        server.register_stream("default", preds, y, costs)
+        futs = SimClient(server).submit_many(specs)
+        server.start()
+        results = [f.result(3600) for f in futs]
+        server.stop()
+        return results
+
+    for algo in ("eflfg", "fedboost"):
+        specs = [dict(algo=algo, seed=s, T=T, cfg=cfg) for s in seeds]
+
+        def serial_wave(a=algo):
+            return [run_simulation_scan(a, preds, y, costs, T,
+                                        replace(cfg, seed=s))
+                    for s in seeds]
+
+        serial_wave()                         # warm the solo program
+        served = serve_wave(algo, specs)      # warm the bucket executables
+        ts, tb = [], []
+        for _ in range(5):
+            t0 = time.time()
+            serial_wave()
+            ts.append(time.time() - t0)
+            t0 = time.time()
+            served = serve_wave(algo, specs)
+            tb.append(time.time() - t0)
+        # the gated statistic is the median of PAIRED per-rep ratios;
+        # report the timing pair from the rep closest to that median so
+        # the cell is self-consistent (independent medians of ts and tb
+        # can come from different reps and contradict rel)
+        ratios = [b / s for s, b in zip(ts, tb)]
+        rel = stats.median(ratios)
+        i_rep = min(range(len(ratios)), key=lambda i: abs(ratios[i] - rel))
+        t_serial, t_batched = ts[i_rep], tb[i_rep]
+
+        sw = run_sweep(algo, preds, y, costs, T, cfg_v, seeds=seeds)
+        served_eq = all(served[i].identical_to_sweep_lane(sw, i)
+                        for i in range(n_req))
+        exact = serve_wave(algo, [dict(algo=algo, seed=s, T=T, cfg=cfg,
+                                       exact=True)
+                                  for s in range(n_exact)])
+        exact_eq = all(
+            exact[s].identical_to(
+                run_simulation_scan(algo, preds, y, costs, T,
+                                    replace(cfg, seed=s)))
+            for s in range(n_exact))
+        rec[algo] = {
+            "t_serial_s": round(t_serial, 4),
+            "t_batched_s": round(t_batched, 4),
+            # median of per-rep batched/serial ratios: the gated statistic
+            "rel": round(rel, 4),
+            "batched_vs_serial": round(1.0 / rel, 2) if rel > 0 else None,
+            "req_per_s_serial": round(n_req / t_serial, 2),
+            "req_per_s_batched": round(n_req / t_batched, 2),
+            "served_equals_sweep": served_eq,
+            "exact_equals_direct": exact_eq,
+        }
+    return rec
 
 
 # ---------------------------------------------------------------------------
@@ -248,7 +365,7 @@ def _sharded_sweep_record(fast: bool) -> dict:
 
 
 def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False,
-                     skip_sharded: bool = False):
+                     skip_sharded: bool = False, skip_serve: bool = False):
     """Measure every engine path; returns ``(rows, rec)`` without touching
     the baseline file (``engine`` wraps this and writes the JSON).
 
@@ -258,7 +375,8 @@ def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False,
     ``skip_sharded`` likewise drops the forced-8-device subprocess (a
     cold process that recompiles everything): the gate's retries pass it
     when no *sharded* cell is the one failing, reusing the first run's
-    section instead.
+    section instead.  ``skip_serve`` does the same for the serving
+    throughput cells.
     """
     from dataclasses import replace
     from repro.federated import (SimConfig, run_simulation_reference,
@@ -356,6 +474,21 @@ def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False,
             rows.append((f"engine/{algo}/speedup", "-",
                          f"{t_base / t_scan:.2f}"))
 
+    if not skip_serve:
+        rec["serve"] = srv = _serve_record(fast)
+        for cell in ("eflfg", "fedboost"):
+            c = srv[cell]
+            rows.append((f"engine/serve/{cell}/req_per_s_serial",
+                         "-", f"{c['req_per_s_serial']:.2f}"))
+            rows.append((f"engine/serve/{cell}/req_per_s_batched",
+                         "-", f"{c['req_per_s_batched']:.2f}"))
+            rows.append((f"engine/serve/{cell}/batched_vs_serial",
+                         "-", f"{c['batched_vs_serial']:.2f}"))
+            rows.append((f"engine/serve/{cell}/served_equals_sweep",
+                         "-", str(c["served_equals_sweep"])))
+            rows.append((f"engine/serve/{cell}/exact_equals_direct",
+                         "-", str(c["exact_equals_direct"])))
+
     if not skip_sharded:
         rec["sharded_sweep"] = sharded = _sharded_sweep_record(fast)
         cells = [k for k, c in sharded.items()
@@ -390,9 +523,63 @@ def write_baseline(rec, out_path=OUT_PATH):
         f.write("\n")
 
 
-def engine(fast: bool = False):
+def merge_conservative(recs: list) -> dict:
+    """Merge repeated same-mode records into a noise-robust *baseline*.
+
+    The regression gate judges fresh runs by their best retry, so a
+    baseline committed from one lucky-or-unlucky run makes the gate
+    roulette on noisy 2-core hosts (the reference canary alone swings
+    tens of percent between runs).  This merge takes the machine's
+    envelope instead: minimum of every ``t_*`` timing — including the
+    canary, which *maximizes* the baseline's normalized ratios — with
+    derived speedups recomputed, the WORST (highest) ``rel`` cell for
+    the ratio-gated sharded/serve sections, and AND-ed correctness
+    flags.  Refresh with ``BENCH_BASELINE_RUNS=3`` for a committable
+    baseline.
+    """
+    out = json.loads(json.dumps(recs[0]))
+    for algo in ("eflfg", "fedboost"):
+        cells = [r[algo] for r in recs if algo in r]
+        if not cells:
+            continue
+        m = out[algo]
+        for key in list(m):
+            if key.startswith("t_"):
+                m[key] = min(c[key] for c in cells if key in c)
+            elif isinstance(m[key], bool):
+                m[key] = all(c.get(key, False) for c in cells)
+        m["speedup_vs_bitexact_reference"] = round(
+            m["t_reference_s"] / m["t_scan_s"], 2)
+        m["fused_round_speedup"] = round(
+            m["t_scan_unfused_s"] / m["t_scan_s"], 2)
+        m["sweep_per_seed_s"] = round(m["t_sweep8_s"] / 8, 4)
+        if "t_loop_baseline_s" in m:
+            m["speedup"] = round(m["t_loop_baseline_s"] / m["t_scan_s"], 2)
+    for section, cells in (("sharded_sweep", ("eflfg", "fedboost",
+                                              "mesh2d")),
+                           ("serve", ("eflfg", "fedboost"))):
+        secs = [r[section] for r in recs if section in r]
+        if not secs or section not in out:
+            continue
+        for cell in cells:
+            have = [s[cell] for s in secs if cell in s]
+            if not have:
+                continue
+            worst = max(have, key=lambda c: c.get("rel", 0.0))
+            merged = dict(worst)
+            for key in merged:
+                if isinstance(merged[key], bool):
+                    merged[key] = all(c.get(key, False) for c in have)
+            out[section][cell] = merged
+    return out
+
+
+def engine(fast: bool = False, baseline_runs: int = 1):
     rows, rec = run_engine_bench(fast=fast)
-    write_baseline(rec)
+    recs = [rec]
+    for _ in range(baseline_runs - 1):
+        recs.append(run_engine_bench(fast=fast)[1])
+    write_baseline(merge_conservative(recs) if len(recs) > 1 else rec)
     return rows
 
 
@@ -400,7 +587,8 @@ def main():
     import sys
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     fast = bool(int(os.environ.get("BENCH_FAST", "0")))
-    for name, us, derived in engine(fast=fast):
+    runs = int(os.environ.get("BENCH_BASELINE_RUNS", "1"))
+    for name, us, derived in engine(fast=fast, baseline_runs=runs):
         print(f"{name},{us if isinstance(us, str) else f'{us:.1f}'},{derived}")
     print(f"wrote {os.path.abspath(OUT_PATH)}")
 

@@ -10,14 +10,15 @@ oracles (see ``tests/test_engine_equivalence.py``).
 """
 
 from .simulation import SimConfig, SimResult, run_simulation_reference
-from .engine import (run_simulation_scan, run_sweep, run_sweep_sharded,
-                     SweepResult)
+from .engine import (run_simulation_scan, run_batch, run_sweep,
+                     run_sweep_sharded, SweepResult)
 from .sharded import (sharded_round_losses, sharded_window_eval,
                       make_client_eval)
 
 run_simulation = run_simulation_scan
 
 __all__ = ["SimConfig", "SimResult", "run_simulation",
-           "run_simulation_reference", "run_simulation_scan", "run_sweep",
-           "run_sweep_sharded", "SweepResult", "sharded_round_losses",
-           "sharded_window_eval", "make_client_eval"]
+           "run_simulation_reference", "run_simulation_scan", "run_batch",
+           "run_sweep", "run_sweep_sharded", "SweepResult",
+           "sharded_round_losses", "sharded_window_eval",
+           "make_client_eval"]

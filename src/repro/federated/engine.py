@@ -43,8 +43,8 @@ from repro.core import RegretTracker
 from . import sweep_sharding
 from .simulation import SimConfig, SimResult, make_round_body
 
-__all__ = ["run_simulation_scan", "run_sweep", "run_sweep_sharded",
-           "SweepResult"]
+__all__ = ["run_simulation_scan", "run_batch", "batch_dispatch_plan",
+           "run_sweep", "run_sweep_sharded", "SweepResult"]
 
 
 # Compiled scans are cached per configuration: the stream data, PRNG key
@@ -57,9 +57,7 @@ _SCAN_UNROLL = 1   # >1 lets XLA fuse across rounds: faster, but rounding
 
 
 def _cfg_key(cfg: SimConfig, T: int):
-    return (T, cfg.n_clients, cfg.clients_per_round, cfg.loss_scale,
-            cfg.uplink_bandwidth, cfg.loss_bandwidth, cfg.use_fused,
-            cfg.rates(T))
+    return (T,) + cfg.static_key(T)
 
 
 def _make_scan(algo: str, T: int, cfg: SimConfig, data_axis=None):
@@ -99,6 +97,13 @@ def _get_scan(algo: str, T: int, cfg: SimConfig, sweep: str = ""):
                     lambda k, b: _sweep_outs(scan(preds, y, costs, k, b)),
                     in_axes=(0, None))
                 return jax.vmap(per_seed, in_axes=(None, 0))(keys, budgets)
+        elif sweep == "flat":
+            # one independent (seed, budget) pair per lane, FULL per-round
+            # outputs (ml_norm/dom_size kept) so every lane reconstructs a
+            # complete SimResult — the serving layer's batch entry point
+            def fn(preds, y, costs, keys, budgets):
+                return jax.vmap(
+                    lambda k, b: scan(preds, y, costs, k, b))(keys, budgets)
         else:
             fn = scan
         fn = _SCAN_CACHE[key] = jax.jit(fn)
@@ -145,6 +150,142 @@ def run_simulation_scan(algo: str, preds, y, costs, T: int,
     return _to_result(outs, T, cfg.budget, algo)
 
 
+def _get_sharded_flat(algo: str, T: int, cfg: SimConfig, mesh):
+    """Cached shard_map'd FLAT batch (full per-lane outs) for serving."""
+    key = (algo, "flat", mesh) + _cfg_key(cfg, T)
+    fn = _SCAN_CACHE.get(key)
+    if fn is None:
+        scan = _make_scan(algo, T, cfg)
+        fn = _SCAN_CACHE[key] = sweep_sharding.sharded_sweep_fn(scan, mesh)
+    return fn
+
+
+def run_batch(algo: str, preds, y, costs, T: int, cfg: SimConfig,
+              seeds: Sequence[int],
+              budgets: Optional[Sequence[float]] = None,
+              mesh=None) -> list:
+    """Run a flat batch of independent (seed, budget) configurations as
+    ONE dispatch, returning one complete ``SimResult`` per configuration.
+
+    This is the serving layer's entry point (``repro.serve``): unlike
+    ``run_sweep``'s (budgets x seeds) grid, the batch axis is *flat* —
+    lane ``i`` runs ``(seeds[i], budgets[i])`` — so heterogeneous
+    requests coalesce into one program.  Unlike the sweep paths, every
+    lane keeps its full per-round outputs (``ml_norm``, ``dom_size``),
+    so each returned ``SimResult`` is as complete as a direct
+    ``run_simulation_scan`` result.
+
+    ``budgets`` is per-lane (same length as ``seeds``) or ``None`` for
+    ``cfg.budget`` everywhere.
+
+    Execution: a single vmap over the batch axis, or — when
+    ``cfg.sweep_sharded``/auto-dispatch says so AND every mesh shard
+    gets at least two lanes — the same flat axis shard_map-partitioned
+    over a pure-``sweep`` mesh (padded with copies of the last lane,
+    sliced after).  The per-shard-width >= 2 guard keeps every lane in
+    the *batched* program family so results are independent of the
+    dispatch choice (see the ``SweepResult`` determinism note); an
+    explicit ``mesh`` (or ``cfg.sweep_sharded=True``) forces sharding
+    but raises rather than produce width-1 shards.  Meshes with a
+    non-trivial ``data`` axis are rejected: a data axis changes the
+    client-evaluation program and batch lanes would no longer match
+    their vmapped bits.
+
+    Determinism: lane results are bit-equal to the same configuration
+    embedded in any other batch of width >= 2 (and to the ``run_sweep``
+    vmap path), and float32-close — NOT bit-equal — to a solo
+    ``run_simulation_scan``.  A single-lane batch (n=1) is the one
+    exception: a width-1 vmap compiles to the solo program, so it
+    matches direct runs instead (the serving layer therefore never
+    dispatches batched width 1 — it pads to 2).  Pinned by
+    tests/test_serve.py; the full equality map is
+    docs/serving.md#determinism.
+    """
+    preds = jnp.asarray(preds, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    costs = jnp.asarray(costs, jnp.float32)
+    seeds = list(seeds)
+    n = len(seeds)
+    if budgets is None:
+        budgets = [cfg.budget] * n
+    budgets = [float(b) for b in budgets]
+    if len(budgets) != n:
+        raise ValueError(f"run_batch: {n} seeds but {len(budgets)} budgets "
+                         "— the batch axis is flat (one pair per lane)")
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    budgets_j = jnp.asarray(budgets, jnp.float32)
+
+    sharded, mesh = batch_dispatch_plan(cfg, n, mesh)
+    if sharded:
+        n_sweep, _ = sweep_sharding.mesh_axes(mesh)
+        pk, pb = sweep_sharding.pad_configs(keys, budgets_j, n_sweep)
+        fn = _get_sharded_flat(algo, T, cfg, mesh)
+        outs = fn(preds, y, costs, pk, pb)
+        outs = jax.tree.map(lambda a: np.asarray(a)[:n], outs)
+    else:
+        fn = _get_scan(algo, T, cfg, sweep="flat")
+        outs = jax.tree.map(np.asarray,
+                            fn(preds, y, costs, keys, budgets_j))
+    return [_to_result(jax.tree.map(lambda a: a[i], outs), T, budgets[i],
+                       algo)
+            for i in range(n)]
+
+
+def batch_dispatch_plan(cfg: SimConfig, n: int, mesh=None):
+    """Resolve how a flat ``run_batch`` of ``n`` lanes will execute.
+
+    Returns ``(sharded, mesh)`` — ``(False, None)`` for the single-device
+    vmap, else ``(True, mesh)``.  Shared between ``run_batch`` and the
+    serving layer's execution metadata so the reported dispatch can
+    never drift from the actual one.  Rules (in order): an explicit
+    ``mesh`` forces sharding (conflicting with
+    ``cfg.sweep_sharded=False`` raises); ``cfg.sweep_sharded`` forces or
+    disables it; otherwise auto-shard only when more than one device is
+    visible AND every shard of the default sweep mesh gets at least two
+    lanes.  Width-1 shards would execute the solo program family and
+    make lane bits depend on the dispatch choice (see the
+    ``SweepResult`` determinism note), so *forced* sharding that would
+    produce them raises instead of complying.  Meshes with a non-trivial
+    ``data`` axis are rejected: a data axis changes the
+    client-evaluation program, so batch lanes would no longer match
+    their vmapped bits.
+    """
+    sharded = cfg.sweep_sharded
+    if mesh is not None:
+        if sharded is False:
+            raise ValueError("run_batch: mesh= requests the sharded path "
+                             "but cfg.sweep_sharded=False disables it — "
+                             "drop one")
+        sharded = True
+    if sharded is None:
+        if jax.device_count() > 1:
+            mesh = sweep_sharding.default_sweep_mesh()
+            sharded = n >= 2 * sweep_sharding.mesh_axes(mesh)[0]
+        else:
+            sharded = False
+    if not sharded:
+        return False, None
+    if mesh is None:
+        mesh = sweep_sharding.default_sweep_mesh()
+    n_sweep, n_data = sweep_sharding.mesh_axes(mesh)
+    if n_data > 1:
+        raise ValueError("run_batch: serving batches require a pure sweep "
+                         "mesh (a data axis changes the client-evaluation "
+                         f"program); got data axis size {n_data}")
+    if -(-n // n_sweep) < 2 and n_sweep > 1:
+        # forced sharding cannot be allowed to slip into width-1 shards:
+        # a width-1 vmap compiles the SOLO program family, so the lanes'
+        # bits would depend on the dispatch choice — the exact
+        # load-dependence the batched-family guarantee rules out.
+        raise ValueError(
+            f"run_batch: {n} lanes over a {n_sweep}-shard sweep mesh "
+            "gives width-1 shards, which execute the solo program family "
+            "and break batch determinism (docs/serving.md#determinism) — "
+            f"batch at least {2 * n_sweep} lanes, shrink the mesh, or "
+            "drop the forced sharding")
+    return True, mesh
+
+
 class SweepResult:
     """Stacked curves from a (possibly mesh-sharded) sweep.
 
@@ -168,10 +309,22 @@ class SweepResult:
 
     Determinism: a given (seed, budget) configuration's trajectory is a
     deterministic function of the inputs only — identical whichever
-    sweep it is embedded in, whichever device computed it, vmapped or
-    sharded.  The 1-D sweep mesh is bit-equal to the vmap path; a 2-D
-    data-axis mesh implies the *unfused* client evaluation and is
-    bit-equal to the unfused vmap path (see docs/sweeps.md).
+    *batched* sweep it is embedded in (any batch width >= 2, any
+    co-resident configurations, vmapped or mesh-sharded; pinned by
+    tests/test_sweep_sharding.py and tests/test_serve.py).  The 1-D
+    sweep mesh is bit-equal to the vmap path; a 2-D data-axis mesh
+    implies the *unfused* client evaluation and is bit-equal to the
+    unfused vmap path (see docs/sweeps.md).
+
+    Batched vs solo: the batched program is NOT bit-equal to a solo
+    ``run_simulation_scan`` of the same configuration — XLA compiles the
+    vmapped round body with different fusion boundaries than the
+    unbatched one, and the resulting float32 rounding differences feed
+    back through the exponential-weight updates.  Curves agree to
+    float32 tolerance; discrete trajectories (selections) can differ at
+    long horizons.  See docs/serving.md#determinism for the full
+    equality map (the serving layer's exact mode exists precisely to
+    recover solo bits under batched traffic).
     """
 
     # the per-config result arrays that define trajectory equality between

@@ -83,6 +83,18 @@ class SimConfig:
         xi = self.xi if self.xi is not None else 1.0 / np.sqrt(T)
         return float(eta), float(xi)
 
+    def static_key(self, T: int) -> tuple:
+        """Every field that shapes the compiled program for horizon ``T``
+        — excluding ``seed``/``budget``, which are jit arguments, and
+        ``sweep_sharded``, which is a dispatch knob.  The single source
+        for the engine's scan-cache keys AND the serving batcher's group
+        key: a new program-shaping field added here batches and caches
+        correctly everywhere at once (a field added to only one of the
+        mirrored tuples would silently batch incompatible requests)."""
+        return (self.n_clients, self.clients_per_round, self.loss_scale,
+                self.uplink_bandwidth, self.loss_bandwidth, self.use_fused,
+                self.rates(T))
+
 
 @dataclass
 class SimResult:
@@ -96,9 +108,46 @@ class SimResult:
     name: str = ""
     sel_masks: Optional[np.ndarray] = None  # (T, K) bool transmit sets
 
+    # the arrays that define trajectory equality between execution paths
+    # (mirrors SweepResult.FIELDS; regret is compared via its curve)
+    FIELDS = ("mse_curve", "sel_sizes", "dom_sizes", "round_costs",
+              "sel_masks")
+
     @property
     def final_mse(self) -> float:
         return float(self.mse_curve[-1])
+
+    def identical_fields(self, other: "SimResult") -> dict:
+        """Per-field exact-equality map vs another run's result."""
+        def eq(a, b):
+            if (a is None) != (b is None):
+                return False
+            return a is None or bool(np.array_equal(a, b))
+        out = {f: eq(getattr(self, f), getattr(other, f))
+               for f in self.FIELDS}
+        out["regret_curve"] = eq(self.regret.regret_curve(),
+                                 other.regret.regret_curve())
+        out["budget_violations"] = \
+            self.budget_violations == other.budget_violations
+        return out
+
+    def identical_to(self, other: "SimResult") -> bool:
+        """True iff every trajectory array matches ``other`` bit-for-bit."""
+        return all(self.identical_fields(other).values())
+
+    def identical_to_sweep_lane(self, sweep, lane) -> bool:
+        """Bit-equality vs one lane of a ``SweepResult``, on the fields
+        both carry (the served-equals-sweep contract of
+        docs/serving.md#determinism; shared by tests/test_serve.py and
+        the bench gate flags).  Regret is excluded: ``SweepResult``
+        keeps the on-device float32 accumulation while ``SimResult``
+        re-reduces in float64, so the two are not bitwise comparable by
+        construction."""
+        return (np.array_equal(self.mse_curve, sweep.mse_curves[lane])
+                and np.array_equal(self.round_costs,
+                                   sweep.round_costs[lane])
+                and np.array_equal(self.sel_sizes, sweep.sel_sizes[lane])
+                and self.budget_violations == int(sweep.violations[lane]))
 
 
 # ---------------------------------------------------------------------------

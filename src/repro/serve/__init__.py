@@ -1,0 +1,37 @@
+"""Multi-tenant simulation serving: dynamic batching over the engine.
+
+The paper's server solves the same select-transmit-refine round for
+every tenant; this package serves that loop as traffic.  Concurrent
+requests (algorithm + config + seed + budget) queue up
+(``repro.serve.queue``), a dynamic batcher coalesces compatible ones
+into bucketed, padded batch shapes (``repro.serve.batcher``), and the
+server dispatches each bucket as ONE engine call — a vmapped or
+mesh-sharded flat batch (``repro.federated.run_batch``), or per-lane
+solo programs in exact mode — behind a compiled-executable cache so
+steady-state traffic never retraces (``repro.serve.server``).
+
+Quick start::
+
+    from repro.serve import SimServer, SimClient
+
+    with SimServer(max_batch=16, max_wait_ms=2.0) as server:
+        server.register_stream("default", preds, y, costs)
+        client = SimClient(server)
+        results = client.map(
+            [dict(algo="fedboost", seed=s, T=2000) for s in range(32)])
+
+Docs: docs/serving.md (lifecycle, bucketing, determinism, tuning),
+docs/api.md (reference).  CLI driver: ``python -m repro.launch.serve
+simulate``.
+"""
+
+from .queue import SimRequest, SimFuture, RequestQueue, QueueClosed, ALGOS
+from .batcher import (Bucket, DynamicBatcher, bucket_size, bucket_sizes,
+                      group_key, plan_buckets)
+from .server import ExecutableCache, SimServer, Stream
+from .client import SimClient
+
+__all__ = ["ALGOS", "SimRequest", "SimFuture", "RequestQueue",
+           "QueueClosed", "Bucket", "DynamicBatcher", "bucket_size",
+           "bucket_sizes", "group_key", "plan_buckets", "ExecutableCache",
+           "SimServer", "Stream", "SimClient"]

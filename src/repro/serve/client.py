@@ -1,0 +1,57 @@
+"""Client-side conveniences over a ``SimServer``.
+
+The server's ``submit`` is already thread-safe; this module adds the
+ergonomic layer tenant code actually wants: blocking single runs,
+ordered bulk submission, and dict-based request specs for driver
+scripts (``repro.launch.serve simulate`` is built on it).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence
+
+__all__ = ["SimClient"]
+
+
+class SimClient:
+    """A tenant handle on an in-process ``SimServer``.
+
+    >>> from repro.serve.batcher import bucket_sizes
+    >>> bucket_sizes(8)     # the widths client batches land in
+    (2, 4, 8)
+
+    Typical use::
+
+        with SimServer(max_batch=16) as server:
+            server.register_stream("default", preds, y, costs)
+            client = SimClient(server)
+            futs = client.submit_many(
+                dict(algo="eflfg", seed=s, T=2000) for s in range(32))
+            results = [f.result() for f in futs]
+    """
+
+    def __init__(self, server):
+        self.server = server
+
+    def submit(self, algo: str, seed: int, *, T: int,
+               budget: Optional[float] = None, stream: str = "default",
+               cfg=None, exact: bool = False):
+        """Enqueue one request; returns its ``SimFuture``."""
+        return self.server.submit(algo, seed, T=T, budget=budget,
+                                  stream=stream, cfg=cfg, exact=exact)
+
+    def submit_many(self, specs: Iterable[dict]) -> list:
+        """Submit a burst of dict specs (``submit`` keyword sets); returns
+        futures in submission order.  Submitting the whole burst before
+        waiting is what lets the batcher coalesce it."""
+        return [self.submit(**spec) for spec in specs]
+
+    def run(self, algo: str, seed: int, *, T: int,
+            timeout: Optional[float] = None, **kw):
+        """Submit one request and block for its ``SimResult``."""
+        return self.submit(algo, seed, T=T, **kw).result(timeout)
+
+    def map(self, specs: Sequence[dict],
+            timeout: Optional[float] = None) -> list:
+        """Submit all ``specs``, block, return ``SimResult``s in order."""
+        return [f.result(timeout) for f in self.submit_many(specs)]

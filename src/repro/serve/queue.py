@@ -1,0 +1,180 @@
+"""Request queue and futures for the in-process serving stack.
+
+Pure stdlib (no jax): a ``SimRequest`` describes one simulation to run,
+``SimFuture`` is the caller's handle to its eventual ``SimResult``, and
+``RequestQueue`` is the thread-safe buffer between submitting clients
+and the server's dispatch thread.  The dynamic batcher
+(``repro.serve.batcher``) drains the queue and coalesces compatible
+requests; ``repro.serve.server.SimServer`` owns the dispatch loop.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+__all__ = ["ALGOS", "SimRequest", "SimFuture", "RequestQueue",
+           "QueueClosed"]
+
+ALGOS = ("eflfg", "fedboost")
+
+
+@dataclass
+class SimRequest:
+    """One tenant's simulation request.
+
+    ``seed`` and ``budget`` are the per-request knobs (the flat batch
+    axis); everything else must match for two requests to share a batch
+    (see ``repro.serve.batcher.group_key``).  ``budget=None`` means the
+    config's default.  ``cfg`` is a ``repro.federated.SimConfig`` (or
+    ``None`` for the defaults); its own ``seed``/``budget`` fields are
+    ignored in favor of the request's — the request IS the
+    configuration axis.
+
+    ``exact=True`` asks for the exact execution mode: the request is
+    still queued and coalesced, but executed with the solo cached
+    program, so its trajectories are bit-equal to a direct
+    ``run_simulation_scan`` call.  The default batched mode is the
+    throughput path: bit-equal to the engine's batched sweep family,
+    float32-close to solo runs (docs/serving.md#determinism).
+    """
+    algo: str
+    seed: int
+    T: int
+    budget: Optional[float] = None
+    stream: str = "default"
+    cfg: Any = None                   # SimConfig | None (server default)
+    exact: bool = False
+    submitted_at: float = field(default_factory=time.monotonic)
+
+    def __post_init__(self):
+        if self.algo not in ALGOS:
+            raise ValueError(f"unknown algo {self.algo!r}; expected one "
+                             f"of {ALGOS}")
+        if self.T <= 0:
+            raise ValueError(f"T must be positive, got {self.T}")
+
+
+class SimFuture:
+    """Write-once future for a served request.
+
+    The server thread fulfills it with ``set_result``/``set_exception``
+    (double fulfillment raises — write-once is enforced, not assumed);
+    callers block on ``result()``.  ``execution`` is filled at
+    fulfillment time with dispatch metadata (mode, bucket size, padded
+    lanes, sharded flag) — observability for tests and tuning.
+
+    Deliberately NOT a ``concurrent.futures.Future``: serving futures
+    have no cancellation story (an in-flight XLA dispatch cannot be
+    aborted) and no executor integration; this keeps exactly the
+    surface the serving contract defines.
+    """
+
+    def __init__(self, request: SimRequest):
+        self.request = request
+        self.execution: dict = {}
+        self._done = threading.Event()
+        self._result = None
+        self._exception: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def _claim(self) -> None:
+        # BEFORE any mutation: a rejected double fulfillment must leave
+        # the first result observable, not half-overwritten
+        if self._done.is_set():
+            raise RuntimeError("SimFuture is write-once and already "
+                               "fulfilled")
+
+    def set_result(self, result, execution: Optional[dict] = None) -> None:
+        self._claim()
+        self._result = result
+        if execution is not None:
+            self.execution = execution
+        self._done.set()
+
+    def set_exception(self, exc: BaseException,
+                      execution: Optional[dict] = None) -> None:
+        self._claim()
+        self._exception = exc
+        if execution is not None:
+            self.execution = execution
+        self._done.set()
+
+    def result(self, timeout: Optional[float] = None):
+        """Block until fulfilled; raises the server-side exception if the
+        dispatch failed, or ``TimeoutError`` on timeout."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request.algo}/seed={self.request.seed} not "
+                f"served within {timeout}s")
+        if self._exception is not None:
+            raise self._exception
+        return self._result
+
+
+class QueueClosed(RuntimeError):
+    """Raised by ``RequestQueue.put`` after ``close()``."""
+
+
+class RequestQueue:
+    """Thread-safe FIFO of ``(SimRequest, SimFuture)`` pairs.
+
+    ``drain`` implements the dynamic batcher's waiting discipline: block
+    up to ``wait_s`` for the first item, then *linger* ``linger_s`` so a
+    concurrent burst of submissions coalesces into one drain, then take
+    everything queued (up to ``max_n``).  A closed queue drains its
+    remainder and then returns empty lists forever.
+    """
+
+    def __init__(self):
+        self._items: list = []
+        self._cv = threading.Condition()
+        self._closed = False
+
+    def __len__(self) -> int:
+        with self._cv:
+            return len(self._items)
+
+    @property
+    def closed(self) -> bool:
+        with self._cv:
+            return self._closed
+
+    def put(self, request: SimRequest, future: SimFuture) -> None:
+        with self._cv:
+            if self._closed:
+                raise QueueClosed("queue is closed")
+            self._items.append((request, future))
+            self._cv.notify_all()
+
+    def drain(self, max_n: int, wait_s: float = 0.1,
+              linger_s: float = 0.0) -> list:
+        """Return up to ``max_n`` queued ``(request, future)`` pairs.
+
+        Empty list means: nothing arrived within ``wait_s`` (poll again,
+        or stop if ``closed``).
+        """
+        deadline = time.monotonic() + wait_s
+        with self._cv:
+            while not self._items and not self._closed:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not self._cv.wait(remaining):
+                    break
+            if not self._items:
+                return []
+        if linger_s > 0:
+            time.sleep(linger_s)
+        with self._cv:
+            taken, self._items = (self._items[:max_n],
+                                  self._items[max_n:])
+            return taken
+
+    def close(self) -> None:
+        """Stop accepting new requests; queued ones remain drainable."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()

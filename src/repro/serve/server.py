@@ -1,0 +1,369 @@
+"""The serving loop: streams registry, executable cache, dispatch thread.
+
+``SimServer`` accepts many concurrent simulation requests (EFL-FG /
+FedBoost config + seed + budget), coalesces them with the dynamic
+batcher into bucketed batch shapes, and dispatches each bucket as ONE
+engine call:
+
+* batched buckets go through ``repro.federated.run_batch`` — a single
+  vmapped (or, when the dispatch plan says so, mesh-sharded) flat batch
+  whose padded width is the bucket size;
+* exact buckets run each lane with the solo cached
+  ``run_simulation_scan`` program — bit-equal to a direct call, the
+  reproducibility mode.
+
+A compiled-executable cache keyed by (mode, stream name + registration
+version + shape, algorithm, T, W, static config, bucket size, sharded)
+makes steady-state traffic
+re-use a handful of compiled programs: every key is built (and its
+program compiled) exactly once, then hit forever — the engine's own
+scan cache plus the fixed bucket shapes guarantee no retracing
+underneath.  See docs/serving.md for the request lifecycle and the
+determinism contract.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, replace
+from typing import Callable, Optional
+
+import numpy as np
+
+__all__ = ["SimServer", "ExecutableCache", "Stream"]
+
+
+class ExecutableCache:
+    """Executable registry with hit/miss accounting.
+
+    Values are dispatch closures over compiled engine programs; a key's
+    builder runs once (the compile), after which every bucket with the
+    same shape is a hit.  ``info()`` is the observability surface the
+    tests and the bench assert on.
+    """
+
+    def __init__(self):
+        self._fns: dict = {}
+        self.hits = 0
+        self.misses = 0
+        self._lock = threading.Lock()
+
+    def get_or_build(self, key: tuple, builder: Callable) -> Callable:
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is not None:
+                self.hits += 1
+                return fn
+            self.misses += 1
+        fn = builder()            # compile outside the lock
+        with self._lock:
+            self._fns.setdefault(key, fn)
+            return self._fns[key]
+
+    def evict(self, predicate: Callable) -> int:
+        """Drop every entry whose key matches; returns the count.  Used
+        when a stream is re-registered — superseded closures would
+        otherwise pin the old device arrays for the server's lifetime."""
+        with self._lock:
+            dead = [k for k in self._fns if predicate(k)]
+            for k in dead:
+                del self._fns[k]
+            return len(dead)
+
+    def info(self) -> dict:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "size": len(self._fns)}
+
+
+@dataclass(frozen=True)
+class Stream:
+    """A registered tenant stream: the precomputed expert predictions the
+    simulations run against (see ``run_simulation_scan`` for shapes).
+    ``version`` counts registrations under this name — it rides in every
+    executable-cache key so re-registering a stream (even with identical
+    shapes) can never serve stale data from an old closure."""
+    name: str
+    preds: object          # (K, n_stream) jnp.float32
+    y: object              # (n_stream,)   jnp.float32
+    costs: object          # (K,)          jnp.float32
+    version: int = 1
+
+    @property
+    def K(self) -> int:
+        return self.preds.shape[0]
+
+    @property
+    def n_stream(self) -> int:
+        return self.preds.shape[1]
+
+
+class SimServer:
+    """In-process multi-tenant simulation server.
+
+    Lifecycle: ``register_stream`` the expert streams, ``start()`` the
+    dispatch thread (or use the context manager), ``submit`` requests
+    from any number of threads, read results from the returned
+    ``SimFuture``s, ``stop()`` to drain and shut down.  Submissions
+    before ``start()`` simply queue up — the first drain takes them all,
+    which is also the deterministic way to measure batching (see
+    ``benchmarks/engine_bench.py``).
+
+    ``max_batch`` bounds the flat batch width (buckets are the powers of
+    two up to it); ``max_wait_ms`` is the coalescing window — how long
+    the batcher lingers after the first queued request so a concurrent
+    burst lands in one drain.  Latency-sensitive deployments shrink it,
+    throughput-oriented ones grow it (docs/serving.md#tuning).
+
+    ``mesh`` pins a pure-``sweep`` mesh for batched buckets wide enough
+    to give every shard at least two lanes; narrower buckets fall back
+    to the default dispatch (same batched program family either way).
+    By default the engine's dispatch plan decides per bucket
+    (``repro.federated.engine.batch_dispatch_plan``).
+    """
+
+    def __init__(self, max_batch: int = 16, max_wait_ms: float = 2.0,
+                 mesh=None, poll_s: float = 0.05):
+        from .queue import RequestQueue
+        from .batcher import DynamicBatcher
+        if mesh is not None:
+            from repro.federated import sweep_sharding
+            _, n_data = sweep_sharding.mesh_axes(mesh)
+            if n_data > 1:
+                raise ValueError("SimServer: serving meshes must be pure "
+                                 "sweep partitions (got data axis size "
+                                 f"{n_data})")
+        self.mesh = mesh
+        self.cache = ExecutableCache()
+        self._queue = RequestQueue()
+        self._batcher = DynamicBatcher(self._queue, max_batch=max_batch,
+                                       max_wait_ms=max_wait_ms)
+        self._poll_s = poll_s
+        self._streams: dict = {}
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self._stats = {"submitted": 0, "served": 0, "failed": 0,
+                       "batches": 0, "batched_lanes": 0, "padded_lanes": 0,
+                       "exact_requests": 0, "sharded_batches": 0}
+
+    # -- tenant streams ---------------------------------------------------
+
+    def register_stream(self, name: str, preds, y, costs) -> Stream:
+        """Register (or replace) a tenant stream the server can simulate
+        against.  Arrays are converted to device-resident float32 once,
+        here — not per request."""
+        import jax.numpy as jnp
+        preds = jnp.asarray(preds, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        costs = jnp.asarray(costs, jnp.float32)
+        if preds.ndim != 2 or y.shape != (preds.shape[1],) \
+                or costs.shape != (preds.shape[0],):
+            raise ValueError(
+                f"stream {name!r}: expected preds (K, n_stream), y "
+                f"(n_stream,), costs (K,); got {preds.shape}, {y.shape}, "
+                f"{costs.shape}")
+        with self._lock:
+            prev = self._streams.get(name)
+            stream = Stream(name, preds, y, costs,
+                            version=(prev.version + 1) if prev else 1)
+            self._streams[name] = stream
+        if prev is not None:
+            # cache keys are (mode, stream-name, version, ...): drop the
+            # superseded versions so their closures stop pinning the old
+            # arrays (in-flight buckets already hold their own refs)
+            self.cache.evict(
+                lambda k: k[1] == name and k[2] != stream.version)
+        return stream
+
+    # -- submission -------------------------------------------------------
+
+    def submit(self, algo: str, seed: int, *, T: int,
+               budget: Optional[float] = None, stream: str = "default",
+               cfg=None, exact: bool = False):
+        """Enqueue one simulation request; returns its ``SimFuture``.
+
+        Thread-safe.  Client-side mistakes (unknown stream/algo, bad T)
+        raise here, synchronously; server-side dispatch failures surface
+        through ``SimFuture.result()``.
+        """
+        from .queue import SimRequest, SimFuture
+        from .batcher import group_key
+        with self._lock:
+            if stream not in self._streams:
+                raise ValueError(
+                    f"unknown stream {stream!r}; registered: "
+                    f"{sorted(self._streams)} (register_stream first)")
+        budget = None if budget is None else float(budget)
+        req = SimRequest(algo=algo, seed=int(seed), T=int(T), budget=budget,
+                         stream=stream, cfg=cfg, exact=exact)
+        try:
+            group_key(req)          # exercises cfg.static_key/cfg.rates
+        except Exception as exc:
+            raise ValueError(
+                f"cfg must be a SimConfig (or None), got {type(cfg)!r}: "
+                f"{exc}") from exc
+        fut = SimFuture(req)
+        self._queue.put(req, fut)
+        with self._lock:
+            self._stats["submitted"] += 1
+        return fut
+
+    # -- lifecycle --------------------------------------------------------
+
+    def start(self) -> "SimServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._thread = threading.Thread(target=self._serve_loop,
+                                        name="simserver", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Close the queue, serve everything already submitted, join."""
+        self._queue.close()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self) -> "SimServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- dispatch ---------------------------------------------------------
+
+    def _serve_loop(self) -> None:
+        while True:
+            try:
+                buckets = self._batcher.next_buckets(wait_s=self._poll_s)
+            except Exception:                     # noqa: BLE001
+                # planning must never kill the serve thread: a dead
+                # thread hangs every outstanding and future SimFuture.
+                # (The batcher quarantines malformed requests onto their
+                # own futures; this guard is the last line of defense.)
+                continue
+            if not buckets:
+                if self._queue.closed:
+                    return
+                continue
+            for bucket in buckets:
+                self._dispatch(bucket)
+
+    def _resolve(self, bucket):
+        """(stream, cfg, per-lane budgets incl. padding) for a bucket.
+
+        The bucket's group key guarantees every request shares the same
+        *static* config, so ``req0.cfg`` can shape the program — but
+        ``budget`` is a per-lane knob excluded from the key, so a
+        ``budget=None`` request must fall back to its OWN config's
+        default, never a co-tenant's.
+        """
+        from repro.federated import SimConfig
+        req0 = bucket.requests[0][0]
+        with self._lock:
+            stream = self._streams.get(req0.stream)
+        if stream is None:
+            raise ValueError(f"stream {req0.stream!r} was unregistered "
+                             "while queued")
+        cfg = req0.cfg if req0.cfg is not None else SimConfig()
+        default_budget = SimConfig.budget
+        budgets = [r.budget if r.budget is not None
+                   else (r.cfg.budget if r.cfg is not None
+                         else default_budget)
+                   for r, _ in bucket.requests]
+        budgets += [budgets[-1]] * bucket.n_padding
+        return stream, cfg, budgets
+
+    def _dispatch(self, bucket) -> None:
+        from repro.federated import run_simulation_scan, run_batch
+        from repro.federated.engine import batch_dispatch_plan
+        from repro.federated.simulation import eval_window
+        meta = {"mode": "exact" if bucket.exact else "batched",
+                "bucket": bucket.size, "n_requests": bucket.n,
+                "n_padding": bucket.n_padding, "sharded": False}
+        try:
+            stream, cfg, budgets = self._resolve(bucket)
+            req0 = bucket.requests[0][0]
+            W = eval_window(cfg)
+            base_key = (req0.stream, stream.version, stream.K,
+                        stream.n_stream, req0.algo, req0.T, W,
+                        bucket.key[4])
+            if bucket.exact:
+                key = ("exact", *base_key)
+                def build_exact():
+                    def run(seed, budget):
+                        return run_simulation_scan(
+                            req0.algo, stream.preds, stream.y, stream.costs,
+                            req0.T, replace(cfg, seed=int(seed),
+                                            budget=float(budget)))
+                    return run
+                run = self.cache.get_or_build(key, build_exact)
+                results = [run(r.seed, b) for (r, _), b
+                           in zip(bucket.requests, budgets)]
+            else:
+                mesh = self.mesh
+                if mesh is not None and cfg.sweep_sharded is None:
+                    from repro.federated import sweep_sharding
+                    n_sweep, _ = sweep_sharding.mesh_axes(mesh)
+                    if bucket.size < 2 * n_sweep:
+                        # a pinned mesh must not make quiet-period
+                        # traffic unservable: buckets too narrow for
+                        # >= 2 lanes per shard fall back to the default
+                        # dispatch (same batched program family, so the
+                        # lanes' bits don't change — only the placement)
+                        mesh = None
+                sharded, mesh = batch_dispatch_plan(cfg, bucket.size, mesh)
+                meta["sharded"] = sharded
+                key = ("batched", *base_key, bucket.size, sharded)
+                def build_batched():
+                    def run(seeds, budgets):
+                        return run_batch(
+                            req0.algo, stream.preds, stream.y, stream.costs,
+                            req0.T, cfg, seeds, budgets, mesh=mesh)
+                    return run
+                run = self.cache.get_or_build(key, build_batched)
+                results = run(bucket.seeds(), budgets)[:bucket.n]
+        except Exception as exc:                        # noqa: BLE001
+            with self._lock:
+                self._stats["failed"] += bucket.n
+            for _, fut in bucket.requests:
+                if not fut.done():
+                    fut.set_exception(exc, execution=dict(meta))
+            return
+        # register_stream may have replaced the stream between _resolve
+        # and get_or_build, in which case get_or_build re-inserted a key
+        # for the superseded version AFTER registration's eviction ran.
+        # The results (computed against the stream the requests were
+        # submitted under) are fine — but the stale entry would pin the
+        # old arrays forever, so drop it here, in the same thread that
+        # inserted it.
+        with self._lock:
+            current = self._streams.get(req0.stream)
+        if current is None or current.version != stream.version:
+            self.cache.evict(lambda k: k[1] == req0.stream
+                             and k[2] == stream.version)
+        with self._lock:
+            self._stats["served"] += bucket.n
+            self._stats["batches"] += 1
+            if bucket.exact:
+                self._stats["exact_requests"] += bucket.n
+            else:
+                self._stats["batched_lanes"] += bucket.size
+                self._stats["padded_lanes"] += bucket.n_padding
+                self._stats["sharded_batches"] += int(meta["sharded"])
+        for (_, fut), res in zip(bucket.requests, results):
+            fut.set_result(res, execution=dict(meta))
+
+    # -- observability ----------------------------------------------------
+
+    def stats(self) -> dict:
+        """Counters + cache info; ``mean_occupancy`` is real requests per
+        batched lane (1.0 = no padding waste)."""
+        with self._lock:
+            s = dict(self._stats)
+        lanes = s["batched_lanes"]
+        s["mean_occupancy"] = ((lanes - s["padded_lanes"]) / lanes
+                               if lanes else None)
+        s["cache"] = self.cache.info()
+        return s

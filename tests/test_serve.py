@@ -1,0 +1,426 @@
+"""The repro.serve serving stack: batcher planning, queue semantics,
+dynamic coalescing, executable-cache reuse, and the determinism
+contract (docs/serving.md#determinism):
+
+* exact mode  == direct ``run_simulation_scan`` calls, bit-for-bit (the
+  reproducibility guarantee, pinned on the paper configuration);
+* batched mode == the engine's batched sweep family: bit-equal to the
+  ``run_sweep`` vmap path and invariant to bucket width / co-resident
+  requests — but only float32-close to solo runs (the fusion-boundary
+  rounding documented in ``SweepResult``).
+
+The whole file also runs under CI's forced-8-host-device job, where
+big buckets take the mesh-sharded dispatch (the tests gated on
+``jax.device_count() > 1``).
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.federated import (SimConfig, SimResult, run_simulation_scan,
+                             run_sweep, run_batch)
+from repro.serve import (SimServer, SimClient, SimRequest, SimFuture,
+                         RequestQueue, QueueClosed, bucket_size,
+                         bucket_sizes, plan_buckets, group_key)
+
+
+def _stream(K=8, n_stream=400, seed=0):
+    rng = np.random.default_rng(seed)
+    preds = rng.normal(0, 1, (K, n_stream)).astype(np.float32)
+    y = rng.normal(0, 1, n_stream).astype(np.float32)
+    costs = rng.uniform(0.1, 1.0, K).astype(np.float32)
+    return preds, y, costs
+
+
+def _server(preds, y, costs, **kw):
+    server = SimServer(**kw)
+    server.register_stream("default", preds, y, costs)
+    return server
+
+
+# ---------------------------------------------------------------------------
+# Pure planning: buckets, padding, grouping
+# ---------------------------------------------------------------------------
+
+def test_bucket_sizes():
+    assert bucket_sizes(16) == (2, 4, 8, 16)
+    assert bucket_sizes(12) == (2, 4, 8, 12)
+    assert bucket_sizes(2) == (2,)
+    with pytest.raises(ValueError, match=">= 2"):
+        bucket_sizes(1)
+    assert bucket_size(1, (2, 4, 8)) == 2     # lone requests pad to 2
+    assert bucket_size(5, (2, 4, 8)) == 8
+    with pytest.raises(ValueError, match="chunk"):
+        bucket_size(9, (2, 4, 8))
+
+
+def _items(specs):
+    out = []
+    for spec in specs:
+        req = SimRequest(**spec)
+        out.append((req, SimFuture(req)))
+    return out
+
+
+def test_plan_buckets_grouping_and_padding():
+    cfg = SimConfig(budget=2.0)
+    items = _items(
+        [dict(algo="eflfg", seed=s, T=60, cfg=cfg) for s in range(5)]
+        + [dict(algo="fedboost", seed=s, T=60, cfg=cfg) for s in range(3)]
+        + [dict(algo="eflfg", seed=7, T=60, cfg=cfg, exact=True)])
+    buckets = plan_buckets(items, max_batch=16)
+    assert [(b.n, b.size, b.exact) for b in buckets] == \
+        [(5, 8, False), (3, 4, False), (1, 1, True)]
+    # padding repeats the last real lane
+    assert buckets[0].seeds() == [0, 1, 2, 3, 4, 4, 4, 4]
+    # arrival order is preserved within each bucket
+    assert [r.seed for r, _ in buckets[1].requests] == [0, 1, 2]
+
+
+def test_plan_buckets_chunks_to_max_batch():
+    cfg = SimConfig()
+    items = _items([dict(algo="eflfg", seed=s, T=60, cfg=cfg)
+                    for s in range(11)])
+    buckets = plan_buckets(items, max_batch=4)
+    assert [(b.n, b.size) for b in buckets] == [(4, 4), (4, 4), (3, 4)]
+
+
+def test_group_key_splits_incompatible_requests():
+    base = dict(algo="eflfg", seed=0, T=60)
+    k = group_key(SimRequest(**base))
+    assert group_key(SimRequest(**{**base, "seed": 9})) == k   # flat axis
+    assert group_key(SimRequest(**{**base, "budget": 9.0})) == k
+    for change in (dict(algo="fedboost"), dict(T=61), dict(exact=True),
+                   dict(stream="other"),
+                   dict(cfg=SimConfig(n_clients=7))):
+        assert group_key(SimRequest(**{**base, **change})) != k
+
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="unknown algo"):
+        SimRequest(algo="sgd", seed=0, T=10)
+    with pytest.raises(ValueError, match="T must be positive"):
+        SimRequest(algo="eflfg", seed=0, T=0)
+
+
+# ---------------------------------------------------------------------------
+# Queue semantics
+# ---------------------------------------------------------------------------
+
+def test_queue_drain_and_close():
+    q = RequestQueue()
+    assert q.drain(max_n=8, wait_s=0.01) == []
+    items = _items([dict(algo="eflfg", seed=s, T=10) for s in range(3)])
+    for req, fut in items:
+        q.put(req, fut)
+    got = q.drain(max_n=2, wait_s=0.01)
+    assert [r.seed for r, _ in got] == [0, 1] and len(q) == 1
+    q.close()
+    # the remainder stays drainable after close; then empty forever
+    assert [r.seed for r, _ in q.drain(max_n=8, wait_s=0.01)] == [2]
+    assert q.drain(max_n=8, wait_s=0.01) == []
+    with pytest.raises(QueueClosed):
+        q.put(*_items([dict(algo="eflfg", seed=9, T=10)])[0])
+
+
+def test_queue_drain_wakes_on_put():
+    q = RequestQueue()
+    req, fut = _items([dict(algo="eflfg", seed=0, T=10)])[0]
+    t = threading.Timer(0.05, q.put, args=(req, fut))
+    t.start()
+    got = q.drain(max_n=8, wait_s=5.0)
+    assert [r.seed for r, _ in got] == [0]
+    t.join()
+
+
+# ---------------------------------------------------------------------------
+# Server: validation, dispatch, determinism contract
+# ---------------------------------------------------------------------------
+
+def test_submit_validation():
+    preds, y, costs = _stream()
+    server = _server(preds, y, costs)
+    with pytest.raises(ValueError, match="unknown stream"):
+        server.submit("eflfg", 0, T=10, stream="ghost")
+    with pytest.raises(ValueError, match="unknown algo"):
+        server.submit("sgd", 0, T=10)
+    with pytest.raises(ValueError, match="max_batch"):
+        SimServer(max_batch=1)
+    with pytest.raises(ValueError, match="preds"):
+        server.register_stream("bad", preds, y[:-1], costs)
+    # client mistakes raise synchronously, never poison a bucket
+    with pytest.raises(ValueError, match="SimConfig"):
+        server.submit("eflfg", 0, T=10, cfg={"n_clients": 5})
+    with pytest.raises((TypeError, ValueError)):
+        server.submit("eflfg", 0, T=10, budget="high")
+
+
+def test_malformed_request_cannot_kill_dispatch_thread():
+    """A poison request that bypasses submit validation is quarantined
+    onto its own future; co-drained requests still serve and the thread
+    stays alive for later traffic."""
+    preds, y, costs = _stream()
+    T, cfg = 40, SimConfig(budget=2.0)
+    server = _server(preds, y, costs, max_batch=4, max_wait_ms=50.0)
+    poison = SimRequest(algo="eflfg", seed=0, T=T,
+                        cfg={"not": "a SimConfig"})
+    poison_fut = SimFuture(poison)
+    server._queue.put(poison, poison_fut)          # white-box bypass
+    good_fut = server.submit("eflfg", 1, T=T, cfg=cfg)
+    with server:
+        good = good_fut.result(120)
+        with pytest.raises(AttributeError):
+            poison_fut.result(120)
+        later = server.submit("eflfg", 2, T=T, cfg=cfg).result(120)
+    assert good.mse_curve.shape == (T,) and later.mse_curve.shape == (T,)
+
+
+def test_dispatch_error_surfaces_on_future():
+    # white-box: a bucket whose stream vanished must fail its futures,
+    # not kill the serve loop
+    preds, y, costs = _stream()
+    server = _server(preds, y, costs)
+    items = _items([dict(algo="eflfg", seed=0, T=10, stream="ghost")])
+    bucket = plan_buckets(items, max_batch=4)[0]
+    server._dispatch(bucket)
+    with pytest.raises(ValueError, match="ghost"):
+        items[0][1].result(timeout=1)
+    assert server.stats()["failed"] == 1
+
+
+def test_served_batched_equals_sweep_and_is_bucket_invariant():
+    preds, y, costs = _stream()
+    T, cfg = 60, SimConfig(budget=2.0)
+    cfg_v = SimConfig(budget=2.0, sweep_sharded=False)
+    with _server(preds, y, costs, max_batch=16, max_wait_ms=1.0) as server:
+        client = SimClient(server)
+        futs = client.submit_many(
+            [dict(algo="eflfg", seed=s, T=T, cfg=cfg) for s in range(5)]
+            + [dict(algo="fedboost", seed=s, T=T, cfg=cfg)
+               for s in range(3)])
+        results = [f.result(120) for f in futs]
+        # same request again, different co-tenants and bucket width
+        f2 = client.submit_many(
+            [dict(algo="eflfg", seed=3, T=T, cfg=cfg),
+             dict(algo="eflfg", seed=11, T=T, cfg=cfg)])
+        again = [f.result(120) for f in f2]
+    # bit-equal to the vmap sweep path, per algorithm (batched family)
+    sw_e = run_sweep("eflfg", preds, y, costs, T, cfg_v, seeds=range(5))
+    sw_f = run_sweep("fedboost", preds, y, costs, T, cfg_v, seeds=range(3))
+    for i in range(5):
+        assert results[i].identical_to_sweep_lane(sw_e, i), f"eflfg lane {i}"
+    for i in range(3):
+        assert results[5 + i].identical_to_sweep_lane(sw_f, i), \
+            f"fedboost lane {i}"
+    # a lane's bits do not depend on its bucket (8-padded vs 2) or on who
+    # else rode along
+    assert again[0].identical_to(results[3])
+    st = server.stats()
+    assert st["served"] == 10 and st["failed"] == 0
+    assert st["padded_lanes"] > 0            # 5 -> 8 and 3 -> 4 padded
+
+
+def test_exact_mode_bit_equal_to_direct_on_paper_config():
+    """The serving reproducibility guarantee, on the paper configuration
+    (K=22 experts, 100 clients, budget 3): a served batch of 8
+    mixed-seed (and mixed-budget) exact requests is bit-equal — every
+    trajectory field — to 8 direct ``run_simulation_scan`` calls."""
+    from dataclasses import replace
+    preds, y, costs = _stream(K=22, n_stream=6000, seed=1)
+    T = 2000
+    cfg = SimConfig(n_clients=100, budget=3.0)
+    seeds = list(range(8))
+    budgets = [3.0, 3.0, 1.0, 5.0, 3.0, 2.0, 3.0, 4.0]
+    with _server(preds, y, costs, max_batch=16, max_wait_ms=1.0) as server:
+        client = SimClient(server)
+        futs = client.submit_many(
+            [dict(algo="eflfg", seed=s, T=T, budget=b, cfg=cfg, exact=True)
+             for s, b in zip(seeds, budgets)])
+        served = [f.result(600) for f in futs]
+    assert all(f.execution["mode"] == "exact" for f in futs)
+    for s, b, res in zip(seeds, budgets, served):
+        direct = run_simulation_scan(
+            "eflfg", preds, y, costs, T, replace(cfg, seed=s, budget=b))
+        fields = res.identical_fields(direct)
+        assert all(fields.values()), f"seed {s}: non-identical {fields}"
+
+
+def test_budget_none_uses_own_cfg_default_not_cotenants():
+    """budget=None must resolve against the request's OWN config default:
+    budget is excluded from the group key, so a bucket can mix configs
+    that differ only in their defaults."""
+    preds, y, costs = _stream()
+    T = 60
+    cfg3 = SimConfig(budget=3.0)
+    cfg5 = SimConfig(budget=5.0)   # same static key, different default
+    from repro.serve import group_key
+    assert group_key(SimRequest(algo="eflfg", seed=0, T=T, cfg=cfg3)) == \
+        group_key(SimRequest(algo="eflfg", seed=0, T=T, cfg=cfg5))
+    with _server(preds, y, costs, max_batch=8, max_wait_ms=1.0) as server:
+        client = SimClient(server)
+        f3 = client.submit("eflfg", 0, T=T, cfg=cfg3)        # req0 of bucket
+        f5 = client.submit("eflfg", 1, T=T, cfg=cfg5)        # budget=None
+        r3, r5 = f3.result(120), f5.result(120)
+    direct = run_batch("eflfg", preds, y, costs, T, cfg3, seeds=[0, 1],
+                       budgets=[3.0, 5.0])
+    assert r3.identical_to(direct[0])
+    assert r5.identical_to(direct[1])
+    # violations are counted against the request's own budget
+    assert r5.budget_violations == direct[1].budget_violations
+
+
+def test_reregistered_stream_invalidates_executables():
+    """Replacing a stream (same name, same shapes) must never serve
+    results computed from the old arrays out of the executable cache."""
+    preds_a, y_a, costs_a = _stream(seed=0)
+    preds_b, y_b, costs_b = _stream(seed=99)
+    T, cfg = 60, SimConfig(budget=2.0)
+    with _server(preds_a, y_a, costs_a, max_batch=4,
+                 max_wait_ms=1.0) as server:
+        client = SimClient(server)
+        before = client.map([dict(algo="eflfg", seed=s, T=T, cfg=cfg)
+                             for s in range(2)], timeout=120)
+        size_before = server.cache.info()["size"]
+        server.register_stream("default", preds_b, y_b, costs_b)
+        # superseded-version executables are evicted, not leaked
+        assert server.cache.info()["size"] == 0 and size_before > 0
+        after = client.map([dict(algo="eflfg", seed=s, T=T, cfg=cfg)
+                            for s in range(2)], timeout=120)
+    fresh_a = run_batch("eflfg", preds_a, y_a, costs_a, T, cfg,
+                        seeds=range(2))
+    fresh_b = run_batch("eflfg", preds_b, y_b, costs_b, T, cfg,
+                        seeds=range(2))
+    for i in range(2):
+        assert before[i].identical_to(fresh_a[i])
+        assert after[i].identical_to(fresh_b[i]), \
+            f"lane {i} served from the stale stream"
+
+
+def test_cache_reuse_across_waves():
+    # the generous linger window keeps each 4-request wave in a single
+    # drain even on a loaded runner, so the exact counts are deterministic
+    preds, y, costs = _stream()
+    T, cfg = 60, SimConfig(budget=2.0)
+    with _server(preds, y, costs, max_batch=8,
+                 max_wait_ms=200.0) as server:
+        client = SimClient(server)
+        client.map([dict(algo="eflfg", seed=s, T=T, cfg=cfg)
+                    for s in range(4)], timeout=120)
+        info1 = server.cache.info()
+        # same shape class again: pure hits, nothing new compiled
+        client.map([dict(algo="eflfg", seed=s, T=T, cfg=cfg)
+                    for s in range(10, 14)], timeout=120)
+        info2 = server.cache.info()
+        # different bucket shape: one new executable
+        client.map([dict(algo="eflfg", seed=20, T=T, cfg=cfg)], timeout=120)
+        info3 = server.cache.info()
+    assert info1 == {"hits": 0, "misses": 1, "size": 1}
+    assert info2 == {"hits": 1, "misses": 1, "size": 1}
+    assert info3["misses"] == 2 and info3["size"] == 2
+
+
+def test_coalescing_under_concurrent_submission():
+    preds, y, costs = _stream()
+    T, cfg = 40, SimConfig(budget=2.0)
+    n_threads, per_thread = 4, 3
+    with _server(preds, y, costs, max_batch=16,
+                 max_wait_ms=150.0) as server:
+        client = SimClient(server)
+        futs, lock = [], threading.Lock()
+
+        def burst():
+            mine = client.submit_many(
+                [dict(algo="eflfg", seed=s, T=T, cfg=cfg)
+                 for s in range(per_thread)])
+            with lock:
+                futs.extend(mine)
+
+        threads = [threading.Thread(target=burst) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        results = [f.result(120) for f in futs]
+    st = server.stats()
+    n = n_threads * per_thread
+    assert len(results) == n and st["served"] == n and st["failed"] == 0
+    # the 150 ms coalescing window must have merged the concurrent bursts
+    # into far fewer dispatches than requests
+    assert st["batches"] < n / 2, st
+    # identical (seed, T, cfg) requests from different threads got
+    # identical bits — batched-mode determinism under concurrency
+    by_seed = {}
+    for f, r in zip(futs, results):
+        by_seed.setdefault(f.request.seed, []).append(r)
+    for seed, group in by_seed.items():
+        for other in group[1:]:
+            assert other.identical_to(group[0]), f"seed {seed}"
+
+
+def test_run_batch_validation():
+    preds, y, costs = _stream()
+    with pytest.raises(ValueError, match="budgets"):
+        run_batch("eflfg", preds, y, costs, 20, SimConfig(),
+                  seeds=range(3), budgets=[1.0, 2.0])
+    from repro.federated.sweep_sharding import default_sweep_mesh
+    with pytest.raises(ValueError, match="sweep_sharded=False"):
+        run_batch("eflfg", preds, y, costs, 20,
+                  SimConfig(sweep_sharded=False), seeds=range(2),
+                  mesh=default_sweep_mesh())
+
+
+# ---------------------------------------------------------------------------
+# Multi-device dispatch (runs under CI's forced-8-host-device job)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >1 device (forced-8 CI job)")
+def test_sharded_bucket_dispatch_multi_device():
+    """Buckets wide enough for >= 2 lanes per shard take the mesh-sharded
+    path and stay bit-equal to an equally-dispatched run_batch; narrow
+    buckets stay on the vmap to avoid width-1 shards."""
+    from repro.federated.engine import batch_dispatch_plan
+    n_dev = jax.device_count()
+    cfg = SimConfig(budget=2.0)
+    assert batch_dispatch_plan(cfg, 2 * n_dev)[0] is True
+    assert batch_dispatch_plan(cfg, n_dev)[0] is False
+    # forced sharding refuses width-1 shards rather than silently
+    # executing the solo program family
+    with pytest.raises(ValueError, match="width-1"):
+        batch_dispatch_plan(SimConfig(sweep_sharded=True), n_dev)
+
+    preds, y, costs = _stream()
+    T, n_req = 60, 2 * n_dev
+    with _server(preds, y, costs, max_batch=n_req,
+                 max_wait_ms=1.0) as server:
+        client = SimClient(server)
+        futs = client.submit_many([dict(algo="eflfg", seed=s, T=T, cfg=cfg)
+                                   for s in range(n_req)])
+        served = [f.result(300) for f in futs]
+    assert all(f.execution["sharded"] for f in futs)
+    assert server.stats()["sharded_batches"] == 1
+    direct = run_batch("eflfg", preds, y, costs, T, cfg, seeds=range(n_req))
+    for i in range(n_req):
+        assert served[i].identical_to(direct[i]), f"lane {i}"
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >1 device (forced-8 CI job)")
+def test_mesh_pinned_server_serves_narrow_buckets():
+    """A server pinned to a mesh must still serve quiet-period traffic:
+    buckets too narrow for >= 2 lanes per shard fall back to the default
+    dispatch instead of tripping the forced-sharding width guard."""
+    from repro.federated.sweep_sharding import default_sweep_mesh
+    preds, y, costs = _stream()
+    T, cfg = 40, SimConfig(budget=2.0)
+    with _server(preds, y, costs, max_batch=16, max_wait_ms=1.0,
+                 mesh=default_sweep_mesh()) as server:
+        fut = SimClient(server).submit("eflfg", 0, T=T, cfg=cfg)
+        res = fut.result(120)
+    assert res.mse_curve.shape == (T,)
+    assert fut.execution["mode"] == "batched" and fut.execution["bucket"] == 2
+    assert not fut.execution["sharded"]

@@ -1,0 +1,198 @@
+"""Docs checker: internal links, anchors, file paths, runnable fences.
+
+Validates the repo's markdown documentation (``docs/*.md`` +
+``README.md``) without network access or extra dependencies:
+
+* **relative links** ``[..](path)`` must point at files that exist
+  (queries/fragments stripped; ``http(s):``/``mailto:`` skipped);
+* **anchor links** ``path#fragment`` (and in-page ``#fragment``) must
+  resolve against the target's headings (GitHub slugging) or explicit
+  ``<a name=...>`` anchors;
+* **inline code paths** that look like repo paths (``src/...``,
+  ``docs/...``, ``tests/...``, ``benchmarks/...``, ``experiments/...``,
+  ``tools/...``) must exist — docs rot starts with renamed files;
+* **runnable code fences** — fenced blocks whose info string contains
+  ``doctest`` (e.g. ```` ```python doctest ````) plus every ``>>>``
+  example in module docstrings named by ``DOCTEST_MODULES`` — are
+  executed with ``doctest`` (``python -m doctest`` semantics).
+
+    PYTHONPATH=src python tools/check_docs.py [--docs DIR]
+
+Exit codes: 0 ok, 1 problems found (each printed with file:line).
+CI runs this as the ``docs`` job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import doctest
+import os
+import re
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+CODEPATH_RE = re.compile(
+    r"`((?:src|docs|tests|benchmarks|experiments|tools)/[A-Za-z0-9_./-]+)`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+ANCHOR_RE = re.compile(r'<a\s+name="([^"]+)"')
+FENCE_RE = re.compile(r"^```")
+
+# module docstrings whose >>> examples must stay runnable
+DOCTEST_MODULES = ("repro.serve.batcher", "repro.serve.client")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading -> anchor slug (enough of it for our docs).
+    Underscores survive slugging; backtick/asterisk markup does not."""
+    text = re.sub(r"[`*]", "", heading.strip().lower())
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)   # link text only
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def md_files(docs_dir: str) -> list:
+    files = [os.path.join(REPO, "README.md")]
+    for name in sorted(os.listdir(docs_dir)):
+        if name.endswith(".md"):
+            files.append(os.path.join(docs_dir, name))
+    return files
+
+
+def collect_anchors(path: str) -> set:
+    anchors = set()
+    in_fence = False
+    with open(path) as f:
+        for line in f:
+            if FENCE_RE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue   # '#'-comments in fences are not headings
+            m = HEADING_RE.match(line)
+            if m:
+                anchors.add(github_slug(m.group(1)))
+            for a in ANCHOR_RE.findall(line):
+                anchors.add(a)
+    return anchors
+
+
+def check_file(path: str, anchors_of, problems: list) -> None:
+    base = os.path.dirname(path)
+    rel = os.path.relpath(path, REPO)
+    in_fence = False
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            if FENCE_RE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                file_part, _, frag = target.partition("#")
+                if file_part:
+                    tpath = os.path.normpath(os.path.join(base, file_part))
+                    if not tpath.startswith(REPO + os.sep):
+                        continue   # escapes the repo (GitHub web URLs
+                                   # like the CI badge) — not checkable
+                    if not os.path.exists(tpath):
+                        problems.append(
+                            f"{rel}:{lineno}: broken link {target!r} "
+                            f"(no such file {file_part!r})")
+                        continue
+                else:
+                    tpath = path
+                if frag and tpath.endswith(".md"):
+                    if frag not in anchors_of(tpath):
+                        problems.append(
+                            f"{rel}:{lineno}: broken anchor {target!r} "
+                            f"(no heading/anchor {frag!r} in "
+                            f"{os.path.relpath(tpath, REPO)})")
+            for code_path in CODEPATH_RE.findall(line):
+                if not os.path.exists(os.path.join(REPO, code_path)):
+                    problems.append(
+                        f"{rel}:{lineno}: stale path `{code_path}` "
+                        "(no such file in the repo)")
+
+
+def runnable_fences(path: str) -> list:
+    """(start_line, text) for fences whose info string says ``doctest``."""
+    out, lines = [], open(path).read().splitlines()
+    i = 0
+    while i < len(lines):
+        stripped = lines[i].strip()
+        if stripped.startswith("```") and "doctest" in stripped[3:]:
+            start, body = i + 1, []
+            i += 1
+            while i < len(lines) and not lines[i].strip().startswith("```"):
+                body.append(lines[i])
+                i += 1
+            out.append((start + 1, "\n".join(body) + "\n"))
+        i += 1
+    return out
+
+
+def run_doctests(files: list, problems: list) -> int:
+    n = 0
+    runner = doctest.DocTestRunner(verbose=False,
+                                   optionflags=doctest.ELLIPSIS)
+    parser = doctest.DocTestParser()
+    for path in files:
+        rel = os.path.relpath(path, REPO)
+        for lineno, text in runnable_fences(path):
+            test = parser.get_doctest(text, {}, f"{rel}:{lineno}", rel,
+                                      lineno)
+            if not test.examples:
+                problems.append(f"{rel}:{lineno}: doctest fence has no "
+                                ">>> examples")
+                continue
+            n += len(test.examples)
+            out = []
+            runner.run(test, out=out.append)
+            if runner.failures:
+                problems.append(f"{rel}:{lineno}: doctest fence failed:\n"
+                                + "".join(out))
+                runner = doctest.DocTestRunner(
+                    verbose=False, optionflags=doctest.ELLIPSIS)
+    for modname in DOCTEST_MODULES:
+        mod = __import__(modname, fromlist=["_"])
+        results = doctest.testmod(mod, verbose=False,
+                                  optionflags=doctest.ELLIPSIS)
+        n += results.attempted
+        if results.failed:
+            problems.append(f"{modname}: {results.failed} docstring "
+                            "doctest(s) failed (run python -m doctest -v)")
+    return n
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--docs", default=os.path.join(REPO, "docs"))
+    a = ap.parse_args()
+    sys.path.insert(0, os.path.join(REPO, "src"))
+
+    files = md_files(a.docs)
+    anchors_cache: dict = {}
+
+    def anchors_of(path):
+        if path not in anchors_cache:
+            anchors_cache[path] = collect_anchors(path)
+        return anchors_cache[path]
+
+    problems: list = []
+    for path in files:
+        check_file(path, anchors_of, problems)
+    n_examples = run_doctests(files, problems)
+
+    for p in problems:
+        print("PROBLEM " + p, file=sys.stderr)
+    print(f"checked {len(files)} markdown files, ran {n_examples} doctest "
+          f"examples: {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
