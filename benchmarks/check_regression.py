@@ -39,6 +39,13 @@ batched results bit-equal to the ``run_sweep`` vmap path, exact-mode
 results bit-equal to direct solo engine runs
 (docs/serving.md#determinism).
 
+The ``scenario`` cells (schedule-threaded vs stationary scan,
+``repro.scenarios``) are gated on their paired overhead ratio against
+the ABSOLUTE documented target (``rel <= 1.10`` — the scenario
+subsystem's <= 10% round-body overhead contract, so no baseline section
+is needed), plus a hard flag that the all-neutral ``constant`` scenario
+stays bit-equal to the scenario-free engine.
+
     PYTHONPATH=src python -m benchmarks.check_regression [baseline.json]
 
 Exit codes: 0 ok, 1 regression, 2 missing/invalid baseline.  Baselines
@@ -73,6 +80,12 @@ SHARDED_GATE_FLOOR_S = 0.05
 # above the same floor (on the serial side).
 SERVE_CELLS = ("eflfg", "fedboost")
 SERVE_FLAGS = ("served_equals_sweep", "exact_equals_direct")
+# Scenario cells (repro.scenarios schedule-threaded scan vs stationary
+# scan, in-process paired ratios): the constant-scenario bit-equality
+# flag is a hard failure; `rel` is gated against the ABSOLUTE documented
+# overhead target (not the baseline) above the same timing floor.
+SCENARIO_CELLS = ("eflfg", "fedboost")
+SCENARIO_REL_TARGET = 1.10
 
 
 def _fail(msg: str, code: int = 1):
@@ -252,6 +265,53 @@ def check_serve(base: dict, fresh: dict, threshold: float):
     return failures, warnings
 
 
+def check_scenario(base: dict, fresh: dict):
+    """Gate the ``scenario`` section: the constant-equals-plain flag is a
+    hard failure; each cell's scenario/plain overhead ratio must stay at
+    or under the documented <= 10% target (``SCENARIO_REL_TARGET`` — an
+    ABSOLUTE contract, deliberately not ``BENCH_REGRESSION_THRESHOLD``-
+    relative and needing no baseline section; cells whose plain scan is
+    below the timing floor are reported only)."""
+    failures, warnings = [], []
+    fsec = fresh.get("scenario")
+    if fsec is None:
+        failures.append(("hard", "scenario: section missing from fresh "
+                         "run"))
+        return failures, warnings
+    for cell in SCENARIO_CELLS:
+        f = fsec.get(cell)
+        if f is None:
+            failures.append(("hard", f"scenario/{cell}: missing from "
+                             "fresh run"))
+            continue
+        if not f.get("constant_equals_plain", False):
+            failures.append(("hard", f"scenario/{cell}: constant scenario "
+                             "no longer bit-equal to the scenario-free "
+                             "engine (neutral fast-path regression; "
+                             "docs/scenarios.md)"))
+        rel = f.get("rel")
+        if rel is None:
+            warnings.append(f"scenario/{cell}: no rel ratio — timing gate "
+                            "skipped")
+            continue
+        b = (base.get("scenario") or {}).get(cell, {})
+        base_rel = b.get("rel")
+        line = (f"scenario/{cell}: scheduled/plain rel "
+                + (f"{base_rel:.3f} -> " if base_rel is not None else "")
+                + f"{rel:.3f}; raw {f['t_scan_s']:.4f}s -> "
+                f"{f['t_scan_scenario_s']:.4f}s")
+        if f.get("t_scan_s", 0.0) < SHARDED_GATE_FLOOR_S:
+            print("  rep  " + line + "  [below gating floor "
+                  f"{SHARDED_GATE_FLOOR_S}s plain scan — not timing-gated]")
+        elif rel > SCENARIO_REL_TARGET:
+            failures.append(("timing", line + f"  [> the documented "
+                             f"x{SCENARIO_REL_TARGET:.2f} overhead "
+                             "target]"))
+        else:
+            print("  ok   " + line)
+    return failures, warnings
+
+
 def _merge_best(fresh_runs: list) -> dict:
     """Per-metric best (min) across repeated fresh runs: transient CI
     load only ever inflates a timing, so the min over retries is the
@@ -311,6 +371,22 @@ def _merge_best(fresh_runs: list) -> dict:
             if g_rel is not None and m_rel is not None and g_rel < m_rel:
                 best_sec[cell] = dict(g)
             best_sec[cell].update(flags)
+    # scenario cells: best (lowest) overhead ratio, flag AND-ed.
+    for run in fresh_runs[1:]:
+        got_sec = run.get("scenario")
+        best_sec = best.get("scenario")
+        if not got_sec or not best_sec:
+            continue
+        for cell in SCENARIO_CELLS:
+            g, m = got_sec.get(cell), best_sec.get(cell)
+            if not g or not m:
+                continue
+            flag = (m.get("constant_equals_plain", False)
+                    and g.get("constant_equals_plain", False))
+            g_rel, m_rel = g.get("rel"), m.get("rel")
+            if g_rel is not None and m_rel is not None and g_rel < m_rel:
+                best_sec[cell] = dict(g)
+            best_sec[cell]["constant_equals_plain"] = flag
     return best
 
 
@@ -347,7 +423,8 @@ def main():
         failures, warnings = check(base_rec, fresh_rec, threshold)
         f2, w2 = check_sharded(base_rec, fresh_rec, threshold)
         f3, w3 = check_serve(base_rec, fresh_rec, threshold)
-        return failures + f2 + f3, warnings + w2 + w3
+        f4, w4 = check_scenario(base_rec, fresh_rec)
+        return failures + f2 + f3 + f4, warnings + w2 + w3 + w4
 
     failures, warnings = check_all(base, fresh)
     # A loaded runner inflates timings transiently; retry (compiles are
@@ -368,9 +445,12 @@ def main():
         sharded_failing = any("sharded_sweep" in msg
                               for _, msg in failures)
         serve_failing = any(msg.startswith("serve/") for _, msg in failures)
+        scenario_failing = any(msg.startswith("scenario/")
+                               for _, msg in failures)
         _, rerun = run_engine_bench(fast=True, skip_loop_baseline=True,
                                     skip_sharded=not sharded_failing,
-                                    skip_serve=not serve_failing)
+                                    skip_serve=not serve_failing,
+                                    skip_scenario=not scenario_failing)
         fresh_runs.append(rerun)
         failures, warnings = check_all(base, _merge_best(fresh_runs))
 

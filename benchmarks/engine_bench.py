@@ -36,6 +36,14 @@ docs/serving.md#determinism).  The gate compares the batched/serial
 *ratio* (machine-normalized by construction, like the sharded cells) and
 hard-fails on either flag.
 
+Each record also carries a ``scenario`` section: the schedule-threaded
+round body (``repro.scenarios`` — per-round budget factors,
+participation masks, label drift riding the scan's ``xs``) vs the
+stationary scan, as the per-rep median ratio ``rel`` (target <= 1.10,
+gated), plus a hard flag that the all-neutral ``constant`` scenario
+stays bit-equal to the scenario-free engine (the neutral fast-path
+dispatches the identical program; docs/scenarios.md#determinism).
+
 Each record also carries a ``sharded_sweep`` section measured in a
 *subprocess* under ``--xla_force_host_platform_device_count=8`` (the
 parent has long since locked jax to the visible device count): the
@@ -255,6 +263,66 @@ def _serve_record(fast: bool) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Scenario cells: schedule-threaded round-body overhead vs the stationary
+# scan (repro.scenarios; target <= 10% — the gated `rel`).
+# ---------------------------------------------------------------------------
+
+def _scenario_record(fast: bool) -> dict:
+    """Scenario-vs-stationary scan wall-clock on the paper config.
+
+    The scheduled program threads per-round schedule arrays (budget
+    factor, participation mask, label shift) through the scan as ``xs``
+    and folds the mask/shift into the client evaluation — this cell
+    measures that round-body overhead as the per-rep median ratio
+    ``rel = t_scenario / t_plain`` against the ``concept_drift`` preset
+    (a non-neutral schedule exercising the full xs plumbing), target
+    <= 10% (gated by check_regression).  The hard flag pins the neutral
+    fast-path: ``constant`` must stay bit-equal to the scenario-free
+    engine (it dispatches the identical program;
+    docs/scenarios.md#determinism).
+    """
+    import statistics as stats
+    from repro.federated import SimConfig, run_simulation_scan
+
+    T = 300 if fast else 2000
+    K, n_clients, n_stream = 22, 100, 6000
+    rng = np.random.default_rng(1)
+    preds = rng.normal(0, 1, (K, n_stream)).astype(np.float32)
+    y = rng.normal(0, 1, n_stream).astype(np.float32)
+    costs = rng.uniform(0.05, 1.0, K).astype(np.float32)
+    cfg = SimConfig(n_clients=n_clients, budget=3.0)
+    rec = {"T": T, "scenario": "concept_drift",
+           "note": "rel = per-rep median t_scenario/t_plain of the "
+           "schedule-threaded scan vs the stationary scan; target <= 1.10"}
+    for algo in ("eflfg", "fedboost"):
+        plain = run_simulation_scan(algo, preds, y, costs, T, cfg)  # warm
+        run_simulation_scan(algo, preds, y, costs, T, cfg,
+                            scenario="concept_drift")               # warm
+        tp, ts = [], []
+        for _ in range(5):
+            t0 = time.time()
+            plain = run_simulation_scan(algo, preds, y, costs, T, cfg)
+            tp.append(time.time() - t0)
+            t0 = time.time()
+            run_simulation_scan(algo, preds, y, costs, T, cfg,
+                                scenario="concept_drift")
+            ts.append(time.time() - t0)
+        ratios = [s / p for p, s in zip(tp, ts)]
+        rel = stats.median(ratios)
+        i_rep = min(range(len(ratios)), key=lambda i: abs(ratios[i] - rel))
+        const = run_simulation_scan(algo, preds, y, costs, T, cfg,
+                                    scenario="constant")
+        rec[algo] = {
+            "t_scan_s": round(tp[i_rep], 4),
+            "t_scan_scenario_s": round(ts[i_rep], 4),
+            "rel": round(rel, 4),
+            "overhead_pct": round(100.0 * (rel - 1.0), 2),
+            "constant_equals_plain": plain.identical_to(const),
+        }
+    return rec
+
+
+# ---------------------------------------------------------------------------
 # Sharded-sweep cells: forced-8-host-device subprocess (the parent process
 # already initialized jax, which locks the device count).
 # ---------------------------------------------------------------------------
@@ -365,7 +433,8 @@ def _sharded_sweep_record(fast: bool) -> dict:
 
 
 def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False,
-                     skip_sharded: bool = False, skip_serve: bool = False):
+                     skip_sharded: bool = False, skip_serve: bool = False,
+                     skip_scenario: bool = False):
     """Measure every engine path; returns ``(rows, rec)`` without touching
     the baseline file (``engine`` wraps this and writes the JSON).
 
@@ -375,8 +444,8 @@ def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False,
     ``skip_sharded`` likewise drops the forced-8-device subprocess (a
     cold process that recompiles everything): the gate's retries pass it
     when no *sharded* cell is the one failing, reusing the first run's
-    section instead.  ``skip_serve`` does the same for the serving
-    throughput cells.
+    section instead.  ``skip_serve`` and ``skip_scenario`` do the same
+    for the serving-throughput and scenario-overhead cells.
     """
     from dataclasses import replace
     from repro.federated import (SimConfig, run_simulation_reference,
@@ -474,6 +543,15 @@ def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False,
             rows.append((f"engine/{algo}/speedup", "-",
                          f"{t_base / t_scan:.2f}"))
 
+    if not skip_scenario:
+        rec["scenario"] = scen = _scenario_record(fast)
+        for cell in ("eflfg", "fedboost"):
+            c = scen[cell]
+            rows.append((f"engine/scenario/{cell}/overhead_pct",
+                         "-", f"{c['overhead_pct']:.2f}"))
+            rows.append((f"engine/scenario/{cell}/constant_equals_plain",
+                         "-", str(c["constant_equals_plain"])))
+
     if not skip_serve:
         rec["serve"] = srv = _serve_record(fast)
         for cell in ("eflfg", "fedboost"):
@@ -557,7 +635,8 @@ def merge_conservative(recs: list) -> dict:
             m["speedup"] = round(m["t_loop_baseline_s"] / m["t_scan_s"], 2)
     for section, cells in (("sharded_sweep", ("eflfg", "fedboost",
                                               "mesh2d")),
-                           ("serve", ("eflfg", "fedboost"))):
+                           ("serve", ("eflfg", "fedboost")),
+                           ("scenario", ("eflfg", "fedboost"))):
         secs = [r[section] for r in recs if section in r]
         if not secs or section not in out:
             continue

@@ -46,6 +46,9 @@ class EFLFGRoundOut(NamedTuple):
     log_w: jnp.ndarray          # (K,) log-weights the mixture derives from
                                 # (lets fused client eval redo eq. (5)
                                 # in-kernel; see repro.kernels.client_eval)
+    graph_iters: jnp.ndarray    # scalar int32: the graph builder's OWN
+                                # productive append-step count this round
+                                # (feeds SweepResult.lockstep_waste)
 
 
 def init_state(K: int) -> EFLFGState:
@@ -64,7 +67,8 @@ def plan_round(state: EFLFGState, key: jax.Array, costs: jnp.ndarray,
 
     This is the part that must run *before* any model is sent to clients.
     """
-    adj = feedback_graph(state.log_w, costs, budget, state.log_w_prev_sums)
+    adj, iters = feedback_graph(state.log_w, costs, budget,
+                                state.log_w_prev_sums, with_iters=True)
     dom = dominating_set(adj)
     p = policy.pmf(state.log_u, dom, xi)
     drawn = policy.draw_node(key, p)
@@ -72,7 +76,7 @@ def plan_round(state: EFLFGState, key: jax.Array, costs: jnp.ndarray,
     mix = policy.ensemble_mix_weights(state.log_w, sel)
     round_cost = jnp.sum(jnp.where(sel, costs, 0.0))
     return EFLFGRoundOut(adj, dom, p, drawn, sel, mix, round_cost,
-                         state.log_w)
+                         state.log_w, iters)
 
 
 def update_state(state: EFLFGState, plan: EFLFGRoundOut,
@@ -95,23 +99,36 @@ def make_eflfg_scan_body(loss_fn, costs: jnp.ndarray, budget: jnp.ndarray,
                          eta: jnp.ndarray, xi: jnp.ndarray):
     """Build a ``lax.scan`` body running one full Algorithm-2 round.
 
-    ``loss_fn(plan, loss_carry) -> (model_losses, ens_loss, new_loss_carry,
-    out)`` supplies the client-side evaluation: who the clients are, how
-    many of them uplink, what their losses look like.  Everything it
-    returns must be fixed-shape so the composed body stays traceable; the
-    per-round ``out`` pytree is stacked by ``lax.scan`` into the engine's
-    metric arrays.
+    ``loss_fn(plan, loss_carry, sched) -> (model_losses, ens_loss,
+    new_loss_carry, out)`` supplies the client-side evaluation: who the
+    clients are, how many of them uplink, what their losses look like.
+    Everything it returns must be fixed-shape so the composed body stays
+    traceable; the per-round ``out`` pytree is stacked by ``lax.scan``
+    into the engine's metric arrays.
+
+    The scan ``xs`` slice ``x`` is either ``None`` — the stationary
+    path: every round plans against ``budget`` and ``loss_fn`` receives
+    ``sched=None``, tracing exactly the pre-scenario program — or a
+    per-round schedule slice (``repro.scenarios.ScheduleArrays``): the
+    round's budget becomes ``budget * x.budget_scale`` and ``loss_fn``
+    receives ``sched = (x.active, x.label_shift)``.
 
     The scan carry is ``(EFLFGState, prng_key, loss_carry)`` — the same
     key-splitting discipline as the reference Python loop, so a scan over
     rounds reproduces the loop draw-for-draw.
     """
 
-    def body(carry, _):
+    def body(carry, x):
         state, key, loss_carry = carry
         key, kdraw = jax.random.split(key)
-        plan = plan_round(state, kdraw, costs, budget, xi)
-        model_losses, ens_loss, loss_carry, out = loss_fn(plan, loss_carry)
+        if x is None:
+            budget_t, sched = budget, None
+        else:
+            budget_t = budget * x.budget_scale
+            sched = (x.active, x.label_shift)
+        plan = plan_round(state, kdraw, costs, budget_t, xi)
+        model_losses, ens_loss, loss_carry, out = loss_fn(plan, loss_carry,
+                                                          sched)
         state = update_state(state, plan, model_losses, ens_loss, eta)
         return (state, key, loss_carry), out
 

@@ -82,18 +82,29 @@ def make_fedboost_scan_body(grad_fn, costs: jnp.ndarray, budget: jnp.ndarray,
                             lr: jnp.ndarray):
     """Build a ``lax.scan`` body for one streaming FedBoost round.
 
-    ``grad_fn((sel, pi, mix, cost), loss_carry) -> (grad_alpha,
+    ``grad_fn((sel, pi, mix, cost), loss_carry, sched) -> (grad_alpha,
     new_loss_carry, out)`` supplies the clients' SGD gradient of the
     ensemble loss w.r.t. the mixture weights (fixed-shape, traceable).
+    The scan ``xs`` slice ``x`` is ``None`` (stationary — the
+    pre-scenario program, round budget = ``budget``, ``sched=None``) or
+    a ``repro.scenarios.ScheduleArrays`` slice (round budget scaled by
+    ``x.budget_scale``, ``sched = (x.active, x.label_shift)``) — the
+    same contract as ``make_eflfg_scan_body``.
     The scan carry is ``(FedBoostState, prng_key, loss_carry)`` with the
     same key-splitting discipline as the reference loop.
     """
 
-    def body(carry, _):
+    def body(carry, x):
         state, key, loss_carry = carry
         key, ksub = jax.random.split(key)
-        sel, pi, mix, cost = fedboost_plan(state, ksub, costs, budget)
-        grad, loss_carry, out = grad_fn((sel, pi, mix, cost), loss_carry)
+        if x is None:
+            budget_t, sched = budget, None
+        else:
+            budget_t = budget * x.budget_scale
+            sched = (x.active, x.label_shift)
+        sel, pi, mix, cost = fedboost_plan(state, ksub, costs, budget_t)
+        grad, loss_carry, out = grad_fn((sel, pi, mix, cost), loss_carry,
+                                        sched)
         state = fedboost_update(state, sel, pi, grad, lr)
         return (state, key, loss_carry), out
 

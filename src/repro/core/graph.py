@@ -29,6 +29,8 @@ log-weights stay exact.  All comparisons in eq. (2)/(3) are performed with
 
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 
 import jax
@@ -44,16 +46,28 @@ __all__ = [
 _NEG_INF = -1e30
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("with_iters",))
 def feedback_graph(log_w: jnp.ndarray, costs: jnp.ndarray, budget: jnp.ndarray,
-                   log_w_prev_sums: jnp.ndarray) -> jnp.ndarray:
+                   log_w_prev_sums: jnp.ndarray, *,
+                   with_iters: bool = False):
     """Algorithm 1.  Returns the boolean adjacency ``A`` with
-    ``A[k, i] = True`` iff ``v_i`` is an out-neighbor of ``v_k``.
+    ``A[k, i] = True`` iff ``v_i`` is an out-neighbor of ``v_k`` — or
+    ``(A, n_iters)`` with ``with_iters``, where ``n_iters`` is the number
+    of *productive* append steps this instance needed to converge.
 
     All K out-neighborhoods grow in lockstep: each ``while_loop`` step
     appends every still-eligible row's eq.-(3) argmax; rows whose eligible
     set is empty stop changing, and the loop exits once a full step
     appends nothing (at most K-1 productive steps + 1 no-op step).
+
+    ``with_iters`` exists for the lockstep-waste diagnostic: under
+    ``vmap`` (every sweep/batch path) the while_loop's trip count is the
+    *maximum* over the batched instances, so co-resident lanes idle
+    through ``max - own`` iterations each round.  ``n_iters`` is each
+    instance's OWN productive count — the engine records it per round
+    and ``SweepResult.lockstep_waste`` aggregates the idle iterations
+    (the documented graph-builder-batching limitation, now measurable;
+    docs/architecture.md#known-limitations).
 
     Precision note: the exp-space form trades the log-space form's
     unbounded dynamic range for speed.  Models trailing the leading
@@ -93,8 +107,7 @@ def feedback_graph(log_w: jnp.ndarray, costs: jnp.ndarray, budget: jnp.ndarray,
     thresh = log_w_prev_sums + 1e-6                        # fp tolerance
     E = jnp.exp(log_w[None, :] - thresh[:, None])
 
-    def body(carry):
-        mask, cost_sum, s, _ = carry
+    def step(mask, cost_sum, s):
         den = cost_sum[:, None] + costs[None, :]
         # ineligibility folded into one sentinel chain: eligible ratios are
         # >= 0 (w_lin, den > 0), so -1 marks members/over-budget/over-weight
@@ -113,6 +126,20 @@ def feedback_graph(log_w: jnp.ndarray, costs: jnp.ndarray, budget: jnp.ndarray,
 
     carry0 = (jnp.eye(K, dtype=bool),                      # self loops
               costs, jnp.exp(log_w - thresh), jnp.bool_(True))
+    if with_iters:
+        def body(carry):
+            mask, cost_sum, s, _, iters = carry
+            mask, cost_sum, s, any_active = step(mask, cost_sum, s)
+            return (mask, cost_sum, s, any_active,
+                    iters + any_active.astype(jnp.int32))
+        mask, _, _, _, iters = jax.lax.while_loop(
+            lambda c: c[3], body, carry0 + (jnp.int32(0),))
+        return mask, iters
+
+    def body(carry):
+        mask, cost_sum, s, _ = carry
+        return step(mask, cost_sum, s)
+
     mask, _, _, _ = jax.lax.while_loop(lambda c: c[-1], body, carry0)
     return mask
 

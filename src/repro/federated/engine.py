@@ -24,6 +24,13 @@ experiment is a single jit-compiled ``jax.lax.scan`` over rounds:
   — grids of hundreds of configurations use the whole pod, and callers
   are unchanged (same ``SweepResult``, auto-dispatch overridable via
   ``SimConfig.sweep_sharded``).  See docs/sweeps.md.
+* every entry point accepts a ``scenario`` (``repro.scenarios``): a
+  declarative non-stationary schedule — per-round budget factors,
+  client-participation masks, label drift — compiled into device arrays
+  and threaded through the scan as ``xs``, so shapes stay static and
+  one scheduled program serves every scenario of a shape.  All-neutral
+  schedules (the ``constant`` preset) dispatch the scenario-free
+  program, bit-equal by construction.  See docs/scenarios.md.
 
 ``run_simulation_scan`` runs one (algo, seed, budget) configuration and
 returns the same ``SimResult`` as the reference.  It is exported from
@@ -41,7 +48,7 @@ import jax.numpy as jnp
 
 from repro.core import RegretTracker
 from . import sweep_sharding
-from .simulation import SimConfig, SimResult, make_round_body
+from .simulation import SimConfig, SimResult, eval_window, make_round_body
 
 __all__ = ["run_simulation_scan", "run_batch", "batch_dispatch_plan",
            "run_sweep", "run_sweep_sharded", "SweepResult"]
@@ -49,43 +56,97 @@ __all__ = ["run_simulation_scan", "run_batch", "batch_dispatch_plan",
 
 # Compiled scans are cached per configuration: the stream data, PRNG key
 # and budget are jit *arguments*, so re-running (other seeds, other
-# datasets of the same shape, budget grids) never recompiles.
+# datasets of the same shape, budget grids) never recompiles.  The
+# ``scheduled`` key bit selects the schedule-threaded program
+# (repro.scenarios): the schedule ARRAYS are jit arguments too, so one
+# scheduled program serves every scenario of the same (T, W) shape.
 _SCAN_CACHE: dict = {}
 _SCAN_UNROLL = 1   # >1 lets XLA fuse across rounds: faster, but rounding
                    # then differs from the per-round reference dispatch,
                    # breaking bit-exact trajectory equivalence
+
+# Compiled scenario schedules, keyed (Scenario, T, window): the device
+# arrays persist across requests/sweeps so serving traffic re-uploads
+# nothing (Scenario is frozen/hashable by design).
+_SCENARIO_CACHE: dict = {}
+
+
+def _compile_scenario(scenario, T: int, cfg: SimConfig):
+    """Normalize a ``scenario=`` argument into a ``CompiledScenario``.
+
+    ``None`` passes through (stationary path); an already-compiled
+    scenario is shape-validated (tests use this to force the scheduled
+    program under neutral schedules); names/``Scenario`` specs compile
+    through the module-level cache.
+    """
+    if scenario is None:
+        return None
+    from repro import scenarios as _scenarios
+    if isinstance(scenario, _scenarios.CompiledScenario):
+        comp = scenario
+    else:
+        scen = _scenarios.resolve(scenario)
+        key = (scen, T, eval_window(cfg))
+        comp = _SCENARIO_CACHE.get(key)
+        if comp is None:
+            comp = _SCENARIO_CACHE[key] = scen.compile(T, cfg)
+    if comp.T != T or comp.window != eval_window(cfg):
+        raise ValueError(
+            f"scenario compiled for (T={comp.T}, window={comp.window}) "
+            f"used with (T={T}, window={eval_window(cfg)}) — compile "
+            "against the same horizon and config")
+    return comp
 
 
 def _cfg_key(cfg: SimConfig, T: int):
     return (T,) + cfg.static_key(T)
 
 
-def _make_scan(algo: str, T: int, cfg: SimConfig, data_axis=None):
-    """Build ``scan(preds, y, costs, key, budget) -> per-round outputs``.
+def _make_scan(algo: str, T: int, cfg: SimConfig, data_axis=None,
+               scheduled: bool = False):
+    """Build ``scan(preds, y, costs, key, budget[, sched]) -> per-round
+    outputs``.
 
     ``data_axis = (mesh_axis_name, size)`` marks the scan as traced inside
     a shard_map with a client/data axis (the 2-D sharded sweep) — see
-    ``make_round_body``.
+    ``make_round_body``.  ``scheduled`` threads a
+    ``repro.scenarios.ScheduleArrays`` pytree through the scan as its
+    ``xs`` (per-round budget scale, participation mask, label shift);
+    without it the scan body receives ``x=None`` and traces exactly the
+    pre-scenario program.
     """
     eta, xi = cfg.rates(T)
     eta, xi = jnp.float32(eta), jnp.float32(xi)
 
-    def scan(preds, y, costs, key, budget):
-        body, init_carry = make_round_body(
+    def build_body(preds, y, costs, budget):
+        return make_round_body(
             algo, preds, y, costs, cfg, jnp.asarray(budget, jnp.float32),
             eta, xi, data_axis=data_axis)
-        _, outs = jax.lax.scan(body, init_carry(key), None, length=T,
-                               unroll=_SCAN_UNROLL)
-        return outs
+
+    if scheduled:
+        def scan(preds, y, costs, key, budget, sched):
+            body, init_carry = build_body(preds, y, costs, budget)
+            _, outs = jax.lax.scan(body, init_carry(key), sched, length=T,
+                                   unroll=_SCAN_UNROLL)
+            return outs
+    else:
+        def scan(preds, y, costs, key, budget):
+            body, init_carry = build_body(preds, y, costs, budget)
+            _, outs = jax.lax.scan(body, init_carry(key), None, length=T,
+                                   unroll=_SCAN_UNROLL)
+            return outs
 
     return scan
 
 
-def _get_scan(algo: str, T: int, cfg: SimConfig, sweep: str = ""):
-    key = (algo, sweep) + _cfg_key(cfg, T)
+def _get_scan(algo: str, T: int, cfg: SimConfig, sweep: str = "",
+              scheduled: bool = False):
+    key = (algo, sweep, scheduled) + _cfg_key(cfg, T)
     fn = _SCAN_CACHE.get(key)
-    if fn is None:
-        scan = _make_scan(algo, T, cfg)
+    if fn is not None:
+        return fn
+    scan = _make_scan(algo, T, cfg, scheduled=scheduled)
+    if not scheduled:
         if sweep == "seeds":
             def fn(preds, y, costs, keys, budget):
                 return jax.vmap(
@@ -106,7 +167,30 @@ def _get_scan(algo: str, T: int, cfg: SimConfig, sweep: str = ""):
                     lambda k, b: scan(preds, y, costs, k, b))(keys, budgets)
         else:
             fn = scan
-        fn = _SCAN_CACHE[key] = jax.jit(fn)
+    else:
+        # scheduled variants close over the broadcast schedule pytree —
+        # every lane of a sweep/batch runs the SAME scenario (the serving
+        # batcher group-keys by scenario, so buckets are homogeneous)
+        if sweep == "seeds":
+            def fn(preds, y, costs, keys, budget, sched):
+                return jax.vmap(
+                    lambda k: _sweep_outs(
+                        scan(preds, y, costs, k, budget, sched)))(keys)
+        elif sweep == "grid":
+            def fn(preds, y, costs, keys, budgets, sched):
+                per_seed = jax.vmap(
+                    lambda k, b: _sweep_outs(
+                        scan(preds, y, costs, k, b, sched)),
+                    in_axes=(0, None))
+                return jax.vmap(per_seed, in_axes=(None, 0))(keys, budgets)
+        elif sweep == "flat":
+            def fn(preds, y, costs, keys, budgets, sched):
+                return jax.vmap(
+                    lambda k, b: scan(preds, y, costs, k, b, sched)
+                )(keys, budgets)
+        else:
+            fn = scan
+    fn = _SCAN_CACHE[key] = jax.jit(fn)
     return fn
 
 
@@ -117,13 +201,16 @@ def _sweep_outs(outs):
     return outs
 
 
-def _to_result(outs, T: int, budget: float, name: str) -> SimResult:
+def _to_result(outs, T: int, budget, name: str) -> SimResult:
     """Host-side float64 metric reduction (identical to the reference's
-    ``_Metrics``) over the scan's per-round outputs."""
+    ``_Metrics``) over the scan's per-round outputs.  ``budget`` is a
+    scalar or a (T,) *realized* budget schedule (base x scenario scale) —
+    violations compare each round's cost against its round's budget."""
     ens_sq = np.asarray(outs["ens_sq_mean"], dtype=float)
     mse_curve = np.cumsum(ens_sq) / np.arange(1, T + 1)
     round_costs = np.asarray(outs["cost"], dtype=float)
-    violations = int((round_costs > budget + 1e-6).sum())
+    violations = int((round_costs > np.asarray(budget, dtype=float)
+                      + 1e-6).sum())
     sel_masks = np.asarray(outs["sel"])
     tracker = RegretTracker.from_rounds(np.asarray(outs["ens_norm"]),
                                         np.asarray(outs["ml_norm"]))
@@ -133,37 +220,57 @@ def _to_result(outs, T: int, budget: float, name: str) -> SimResult:
 
 
 def run_simulation_scan(algo: str, preds, y, costs, T: int,
-                        cfg: SimConfig) -> SimResult:
+                        cfg: SimConfig, scenario=None) -> SimResult:
     """Run ``T`` rounds of ``algo`` as one jitted ``lax.scan`` dispatch.
 
     Same arguments and result as ``run_simulation_reference`` — the
     trajectories (selection masks, costs, loss curves) are identical; only
     the wall-clock differs.
+
+    ``scenario`` (a registered name, a ``repro.scenarios.Scenario``, or
+    an already-``CompiledScenario``) runs the configuration under a
+    non-stationary schedule: per-round budget factors, participation
+    masks and label drift threaded through the scan as ``xs``.
+    All-neutral schedules (the ``constant`` preset) dispatch the
+    scenario-free program with identical arguments — bit-equal by
+    construction; non-neutral schedules run the scheduled program family
+    (see docs/scenarios.md#determinism).  ``budget_violations`` count
+    against the *realized* per-round budget ``cfg.budget * scale[t]``.
     """
     preds = jnp.asarray(preds, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     costs = jnp.asarray(costs, jnp.float32)
-    scan = _get_scan(algo, T, cfg)
-    outs = scan(preds, y, costs, jax.random.PRNGKey(cfg.seed),
-                jnp.float32(cfg.budget))
+    comp = _compile_scenario(scenario, T, cfg)
+    if comp is None or comp.neutral:
+        scan = _get_scan(algo, T, cfg)
+        outs = scan(preds, y, costs, jax.random.PRNGKey(cfg.seed),
+                    jnp.float32(cfg.budget))
+        thresh = cfg.budget
+    else:
+        scan = _get_scan(algo, T, cfg, scheduled=True)
+        outs = scan(preds, y, costs, jax.random.PRNGKey(cfg.seed),
+                    jnp.float32(cfg.budget), comp.arrays)
+        thresh = cfg.budget * comp.scale
     outs = jax.tree.map(np.asarray, outs)
-    return _to_result(outs, T, cfg.budget, algo)
+    return _to_result(outs, T, thresh, algo)
 
 
-def _get_sharded_flat(algo: str, T: int, cfg: SimConfig, mesh):
+def _get_sharded_flat(algo: str, T: int, cfg: SimConfig, mesh,
+                      scheduled: bool = False):
     """Cached shard_map'd FLAT batch (full per-lane outs) for serving."""
-    key = (algo, "flat", mesh) + _cfg_key(cfg, T)
+    key = (algo, "flat", mesh, scheduled) + _cfg_key(cfg, T)
     fn = _SCAN_CACHE.get(key)
     if fn is None:
-        scan = _make_scan(algo, T, cfg)
-        fn = _SCAN_CACHE[key] = sweep_sharding.sharded_sweep_fn(scan, mesh)
+        scan = _make_scan(algo, T, cfg, scheduled=scheduled)
+        fn = _SCAN_CACHE[key] = sweep_sharding.sharded_sweep_fn(
+            scan, mesh, scheduled=scheduled)
     return fn
 
 
 def run_batch(algo: str, preds, y, costs, T: int, cfg: SimConfig,
               seeds: Sequence[int],
               budgets: Optional[Sequence[float]] = None,
-              mesh=None) -> list:
+              mesh=None, scenario=None) -> list:
     """Run a flat batch of independent (seed, budget) configurations as
     ONE dispatch, returning one complete ``SimResult`` per configuration.
 
@@ -176,7 +283,10 @@ def run_batch(algo: str, preds, y, costs, T: int, cfg: SimConfig,
     ``run_simulation_scan`` result.
 
     ``budgets`` is per-lane (same length as ``seeds``) or ``None`` for
-    ``cfg.budget`` everywhere.
+    ``cfg.budget`` everywhere.  ``scenario`` applies ONE non-stationary
+    schedule to every lane (the serving batcher group-keys by scenario,
+    so buckets are scenario-homogeneous); per-lane violations count
+    against ``budgets[i] * scale[t]``.
 
     Execution: a single vmap over the batch axis, or — when
     ``cfg.sweep_sharded``/auto-dispatch says so AND every mesh shard
@@ -214,20 +324,26 @@ def run_batch(algo: str, preds, y, costs, T: int, cfg: SimConfig,
                          "— the batch axis is flat (one pair per lane)")
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
     budgets_j = jnp.asarray(budgets, jnp.float32)
+    comp = _compile_scenario(scenario, T, cfg)
+    scheduled = comp is not None and not comp.neutral
 
     sharded, mesh = batch_dispatch_plan(cfg, n, mesh)
     if sharded:
         n_sweep, _ = sweep_sharding.mesh_axes(mesh)
         pk, pb = sweep_sharding.pad_configs(keys, budgets_j, n_sweep)
-        fn = _get_sharded_flat(algo, T, cfg, mesh)
-        outs = fn(preds, y, costs, pk, pb)
+        fn = _get_sharded_flat(algo, T, cfg, mesh, scheduled=scheduled)
+        outs = (fn(preds, y, costs, pk, pb, comp.arrays) if scheduled
+                else fn(preds, y, costs, pk, pb))
         outs = jax.tree.map(lambda a: np.asarray(a)[:n], outs)
     else:
-        fn = _get_scan(algo, T, cfg, sweep="flat")
+        fn = _get_scan(algo, T, cfg, sweep="flat", scheduled=scheduled)
         outs = jax.tree.map(np.asarray,
-                            fn(preds, y, costs, keys, budgets_j))
-    return [_to_result(jax.tree.map(lambda a: a[i], outs), T, budgets[i],
-                       algo)
+                            fn(preds, y, costs, keys, budgets_j,
+                               comp.arrays) if scheduled
+                            else fn(preds, y, costs, keys, budgets_j))
+    scale = comp.scale if scheduled else 1.0
+    return [_to_result(jax.tree.map(lambda a: a[i], outs), T,
+                       budgets[i] * scale, algo)
             for i in range(n)]
 
 
@@ -303,8 +419,15 @@ class SweepResult:
                      ``RegretCarry`` accumulation.
       sel_sizes:     (..., T) int — |S_t| per round.
       round_costs:   (..., T) float64 transmit cost per round.
-      violations:    (...,) int — rounds with cost > budget + 1e-6.
+      violations:    (...,) int — rounds with cost > the round's realized
+                     budget + 1e-6 (``budget * budget_scale[t]`` when a
+                     scenario schedule was applied, see ``budget_scale``).
+      graph_iters:   (..., T) int32 — the graph builder's OWN productive
+                     append-iteration count per round (zeros for
+                     FedBoost); feeds ``lockstep_waste``.
       seeds:         (n_seeds,) as given; budgets: scalar or (n_budgets,).
+      budget_scale:  (T,) float64 scenario budget factors, or None for a
+                     stationary sweep.
       sharded:       True when produced by ``run_sweep_sharded``.
 
     Determinism: a given (seed, budget) configuration's trajectory is a
@@ -331,24 +454,49 @@ class SweepResult:
     # execution paths — the contract identical_fields (and through it the
     # sweep-sharding tests and bench bit-equality gates) compares
     FIELDS = ("mse_curves", "regret_curves", "sel_sizes", "round_costs",
-              "violations")
+              "violations", "graph_iters")
 
-    def __init__(self, outs, seeds, budgets, T: int, sharded: bool = False):
+    def __init__(self, outs, seeds, budgets, T: int, sharded: bool = False,
+                 budget_scale=None):
         ens_sq = np.asarray(outs["ens_sq_mean"], dtype=float)
         self.mse_curves = np.cumsum(ens_sq, -1) / np.arange(1, T + 1)
         self.regret_curves = np.asarray(outs["regret"], dtype=float)
         self.sel_sizes = np.asarray(outs["sel"]).sum(-1)
         self.round_costs = np.asarray(outs["cost"], dtype=float)
+        self.graph_iters = np.asarray(outs["graph_iters"])
         b = np.asarray(budgets, dtype=float)
         bcast = b[:, None, None] if b.ndim else b
-        self.violations = (self.round_costs > bcast + 1e-6).sum(-1)
+        thresh = bcast if budget_scale is None \
+            else bcast * np.asarray(budget_scale, dtype=float)
+        self.violations = (self.round_costs > thresh + 1e-6).sum(-1)
         self.seeds = np.asarray(seeds)
         self.budgets = b
+        self.budget_scale = (None if budget_scale is None
+                             else np.asarray(budget_scale, dtype=float))
         self.sharded = sharded
 
     @property
     def final_mse(self) -> np.ndarray:
         return self.mse_curves[..., -1]
+
+    @property
+    def lockstep_waste(self) -> int:
+        """Graph-builder append-iterations co-resident lanes idled through
+        after their own convergence: ``sum over rounds and lanes of
+        (max-over-lanes iters - own iters)``.
+
+        Under ``vmap`` the builder's ``while_loop`` trip count is the
+        maximum over the batched lanes each round, so every lane pays for
+        the slowest one — the documented lockstep-batching limitation
+        (docs/architecture.md#known-limitations), now measurable.  Exact
+        for the vmapped sweep (one lockstep program over all lanes); for
+        a mesh-sharded sweep it reports the would-be waste of the
+        equivalent vmap dispatch (lockstep is per shard there).  Zero for
+        FedBoost sweeps (no graph) and single-lane sweeps.
+        """
+        it = self.graph_iters.reshape(-1, self.graph_iters.shape[-1])
+        return int((it.max(axis=0, keepdims=True)
+                    - it).astype(np.int64).sum())
 
     def identical_fields(self, other: "SweepResult") -> dict:
         """Per-field exact-equality map vs another sweep's results."""
@@ -376,31 +524,39 @@ def _flatten_configs(keys, budgets, default_budget):
     return flat_keys, flat_budgets, (n_b, n_seeds), np.asarray(budgets_j)
 
 
-def _get_sharded_sweep(algo: str, T: int, cfg: SimConfig, mesh):
+def _get_sharded_sweep(algo: str, T: int, cfg: SimConfig, mesh,
+                       scheduled: bool = False):
     """Cached shard_map'd flat sweep for (algo, cfg, T, mesh)."""
-    key = (algo, mesh) + _cfg_key(cfg, T)
+    key = (algo, mesh, scheduled) + _cfg_key(cfg, T)
     fn = _SCAN_CACHE.get(key)
     if fn is None:
         _, n_data = sweep_sharding.mesh_axes(mesh)
         data_axis = ((sweep_sharding.DATA_AXIS, n_data)
                      if n_data > 1 else None)
-        scan = _make_scan(algo, T, cfg, data_axis=data_axis)
-        per_config = lambda p, y, c, k, b: _sweep_outs(scan(p, y, c, k, b))
+        scan = _make_scan(algo, T, cfg, data_axis=data_axis,
+                          scheduled=scheduled)
+        if scheduled:
+            per_config = lambda p, y, c, k, b, s: _sweep_outs(
+                scan(p, y, c, k, b, s))
+        else:
+            per_config = lambda p, y, c, k, b: _sweep_outs(
+                scan(p, y, c, k, b))
         fn = _SCAN_CACHE[key] = sweep_sharding.sharded_sweep_fn(
-            per_config, mesh)
+            per_config, mesh, scheduled=scheduled)
     return fn
 
 
 def run_sweep_sharded(algo: str, preds, y, costs, T: int, cfg: SimConfig,
                       seeds: Sequence[int],
                       budgets: Optional[Sequence[float]] = None,
-                      mesh=None) -> SweepResult:
+                      mesh=None, scenario=None) -> SweepResult:
     """Run a sweep with the flat (seeds x budgets) axis sharded over a
     device mesh.
 
-    Same arguments and ``SweepResult`` as ``run_sweep`` plus an optional
-    ``mesh`` (default: every visible device as a pure ``("sweep",)``
-    partition via ``launch.mesh.make_sweep_mesh``).  Each device vmaps
+    Same arguments and ``SweepResult`` as ``run_sweep`` (including the
+    optional ``scenario`` schedule, replicated across every lane) plus an
+    optional ``mesh`` (default: every visible device as a pure
+    ``("sweep",)`` partition via ``launch.mesh.make_sweep_mesh``).  Each device vmaps
     the identical per-config scan over its shard of the flat axis; sweeps
     that don't divide the mesh are padded with copies of the last config
     and unpadded after the gather (``sweep_sharding.pad_configs``), so
@@ -420,6 +576,8 @@ def run_sweep_sharded(algo: str, preds, y, costs, T: int, cfg: SimConfig,
     costs = jnp.asarray(costs, jnp.float32)
     seeds = list(seeds)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    comp = _compile_scenario(scenario, T, cfg)
+    scheduled = comp is not None and not comp.neutral
     if mesh is None:
         mesh = sweep_sharding.default_sweep_mesh()
     n_sweep, _ = sweep_sharding.mesh_axes(mesh)
@@ -428,13 +586,15 @@ def run_sweep_sharded(algo: str, preds, y, costs, T: int, cfg: SimConfig,
     n_cfg = flat_keys.shape[0]
     flat_keys, flat_budgets = sweep_sharding.pad_configs(
         flat_keys, flat_budgets, n_sweep)
-    fn = _get_sharded_sweep(algo, T, cfg, mesh)
-    outs = fn(preds, y, costs, flat_keys, flat_budgets)
+    fn = _get_sharded_sweep(algo, T, cfg, mesh, scheduled=scheduled)
+    outs = (fn(preds, y, costs, flat_keys, flat_budgets, comp.arrays)
+            if scheduled else fn(preds, y, costs, flat_keys, flat_budgets))
     outs = jax.tree.map(lambda a: np.asarray(a)[:n_cfg], outs)
     if grid_shape is not None:
         outs = jax.tree.map(
             lambda a: a.reshape(grid_shape + a.shape[1:]), outs)
-    return SweepResult(outs, seeds, budgets_arr, T, sharded=True)
+    return SweepResult(outs, seeds, budgets_arr, T, sharded=True,
+                       budget_scale=comp.scale if scheduled else None)
 
 
 def _dispatch_sharded(cfg: SimConfig, n_cfg: int) -> bool:
@@ -448,7 +608,7 @@ def _dispatch_sharded(cfg: SimConfig, n_cfg: int) -> bool:
 def run_sweep(algo: str, preds, y, costs, T: int, cfg: SimConfig,
               seeds: Sequence[int],
               budgets: Optional[Sequence[float]] = None,
-              mesh=None) -> SweepResult:
+              mesh=None, scenario=None) -> SweepResult:
     """Run every (budget, seed) configuration as one compiled program.
 
     ``preds`` (K, n_stream) / ``y`` (n_stream,) / ``costs`` (K,) are the
@@ -457,6 +617,14 @@ def run_sweep(algo: str, preds, y, costs, T: int, cfg: SimConfig,
     ``(n_seeds,)`` or ``(n_budgets, n_seeds)`` — see its docstring for
     field shapes.  Per-round (T, K) loss matrices are never materialized
     per configuration; regret accumulates on device via ``RegretCarry``.
+
+    ``scenario`` applies ONE non-stationary schedule
+    (``repro.scenarios``) to every grid point: the per-round budget
+    factor multiplies each lane's base budget, so a budget grid under
+    ``step_decay`` sweeps the *starting* provision.  All-neutral
+    schedules dispatch the scenario-free program (bit-equal by
+    construction); ``violations`` always count against the realized
+    per-round budgets.
 
     Execution: on a single device the scan is vmapped over the grid; with
     more than one visible device the flat configuration axis is sharded
@@ -474,19 +642,23 @@ def run_sweep(algo: str, preds, y, costs, T: int, cfg: SimConfig,
                          "cfg.sweep_sharded=False disables it — drop one")
     if mesh is not None or _dispatch_sharded(cfg, n_cfg):
         return run_sweep_sharded(algo, preds, y, costs, T, cfg, seeds,
-                                 budgets, mesh=mesh)
+                                 budgets, mesh=mesh, scenario=scenario)
     preds = jnp.asarray(preds, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     costs = jnp.asarray(costs, jnp.float32)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    comp = _compile_scenario(scenario, T, cfg)
+    scheduled = comp is not None and not comp.neutral
     if budgets is None:
-        fn = _get_scan(algo, T, cfg, sweep="seeds")
-        outs = fn(preds, y, costs, keys, jnp.float32(cfg.budget))
+        fn = _get_scan(algo, T, cfg, sweep="seeds", scheduled=scheduled)
+        args = (preds, y, costs, keys, jnp.float32(cfg.budget))
         budgets_arr = np.float64(cfg.budget)
     else:
         budgets_j = jnp.asarray(list(budgets), jnp.float32)
-        fn = _get_scan(algo, T, cfg, sweep="grid")
-        outs = fn(preds, y, costs, keys, budgets_j)
+        fn = _get_scan(algo, T, cfg, sweep="grid", scheduled=scheduled)
+        args = (preds, y, costs, keys, budgets_j)
         budgets_arr = np.asarray(budgets_j)
+    outs = fn(*args, comp.arrays) if scheduled else fn(*args)
     outs = jax.tree.map(np.asarray, outs)
-    return SweepResult(outs, seeds, budgets_arr, T)
+    return SweepResult(outs, seeds, budgets_arr, T,
+                       budget_scale=comp.scale if scheduled else None)

@@ -78,7 +78,7 @@ def sharded_window_eval(preds: jnp.ndarray, y: jnp.ndarray,
                         cursor: jnp.ndarray, n_t: jnp.ndarray,
                         mix: jnp.ndarray, loss_scale: float, window: int,
                         *, axis: str, axis_size: int,
-                        with_grad: bool = False):
+                        with_grad: bool = False, active=None, shift=None):
     """Data-parallel ``simulation.client_window_losses`` (+ FedBoost grad).
 
     The engine's round body evaluates a fixed ``window``-wide slice of the
@@ -110,6 +110,13 @@ def sharded_window_eval(preds: jnp.ndarray, y: jnp.ndarray,
     sequential stream gather wraps modulo ``n_stream`` and may cross any
     shard boundary).
 
+    ``active``/``shift`` are the optional per-round schedule operands
+    (``repro.scenarios``), both replicated over ``axis``: the (window,)
+    availability mask is chunk-sliced and ANDed into the client mask
+    (the surviving count is all-gathered so every device divides by the
+    same global denominator), the scalar label shift is added to the
+    observed targets.  ``None`` traces the stationary program.
+
     Returns ``(ens_sq_mean, ens_loss_norm, model_losses_norm, grad)`` with
     the same semantics/shapes as ``client_window_losses`` (+ the (K,)
     mixture gradient, or ``None`` without ``with_grad``), replicated over
@@ -121,8 +128,13 @@ def sharded_window_eval(preds: jnp.ndarray, y: jnp.ndarray,
     offs = dev * w_local + jnp.arange(w_local)
     idx = (cursor + offs) % n_stream
     cmask = offs < n_t
+    if active is not None:
+        cmask = cmask & jax.lax.dynamic_slice(active, (dev * w_local,),
+                                              (w_local,))
     p_cl = preds[:, idx]                           # (K, w_local) chunk
     y_cl = y[idx]
+    if shift is not None:
+        y_cl = y_cl + shift
     sq = (p_cl - y_cl[None, :]) ** 2
     ml_chunk = jnp.where(cmask[None, :],
                          jnp.minimum(sq / loss_scale, 1.0), 0.0)
@@ -132,7 +144,12 @@ def sharded_window_eval(preds: jnp.ndarray, y: jnp.ndarray,
     ml = jax.lax.all_gather(ml_chunk, axis, axis=1, tiled=True)  # (K, W)
     ens_sq = jax.lax.all_gather(ens_sq_chunk, axis, axis=0, tiled=True)
     model_losses = ml.sum(1)
-    ens_sq_mean = ens_sq.sum() / n_t.astype(ens_sq.dtype)
+    if active is None:
+        n_eff = n_t
+    else:
+        cm = jax.lax.all_gather(cmask, axis, axis=0, tiled=True)  # (W,)
+        n_eff = jnp.maximum(jnp.sum(cm), 1)
+    ens_sq_mean = ens_sq.sum() / n_eff.astype(ens_sq.dtype)
     ens_loss = jnp.minimum(ens_sq / loss_scale, 1.0).sum()
     grad = None
     if with_grad:
@@ -142,7 +159,8 @@ def sharded_window_eval(preds: jnp.ndarray, y: jnp.ndarray,
         # local lookup — no collective needed, and the values (hence the
         # matmul) are bit-identical to gathering the chunks.
         idx_full = (cursor + jnp.arange(window)) % n_stream
-        grad = (2.0 / n_t.astype(resid.dtype)) * (preds[:, idx_full] @ resid)
+        grad = (2.0 / n_eff.astype(resid.dtype)) \
+            * (preds[:, idx_full] @ resid)
     return ens_sq_mean, ens_loss, model_losses, grad
 
 

@@ -180,12 +180,20 @@ def n_clients_traceable(cfg: SimConfig, sel_size: jnp.ndarray) -> jnp.ndarray:
 @partial(jax.jit, static_argnames=("window",))
 def client_window_losses(preds: jnp.ndarray, y: jnp.ndarray,
                          cursor: jnp.ndarray, n_t: jnp.ndarray,
-                         mix: jnp.ndarray, loss_scale: float, window: int):
+                         mix: jnp.ndarray, loss_scale: float, window: int,
+                         active=None, shift=None):
     """One round of client-side evaluation on a fixed-size stream window.
 
     The round's ``n_t`` active clients are the first ``n_t`` positions of
     the ``window``-wide slice starting at ``cursor`` (wrapping); the rest
     are masked out.
+
+    ``active``/``shift`` are the optional per-round schedule operands
+    (``repro.scenarios``): a (window,) bool availability mask ANDed into
+    the client mask — per-client means then divide by the surviving
+    count, clamped to >= 1 — and a scalar additive label shift (concept
+    drift).  ``None`` (the default) traces exactly the stationary
+    program, so pre-scenario callers and cached programs are untouched.
 
     Returns ``(ens_sq_mean, ens_loss_norm, model_losses_norm)``.
     """
@@ -193,14 +201,20 @@ def client_window_losses(preds: jnp.ndarray, y: jnp.ndarray,
     offs = jnp.arange(window)
     idx = (cursor + offs) % n_stream
     cmask = offs < n_t
+    if active is not None:
+        cmask = cmask & active
     p_cl = preds[:, idx]                           # (K, window)
     y_cl = y[idx]
+    if shift is not None:
+        y_cl = y_cl + shift
     sq = (p_cl - y_cl[None, :]) ** 2               # per-model sq errors
     model_losses = jnp.where(cmask[None, :],
                              jnp.minimum(sq / loss_scale, 1.0), 0.0).sum(1)
     yhat = mix @ p_cl                              # true ensemble prediction
     ens_sq = jnp.where(cmask, (yhat - y_cl) ** 2, 0.0)
-    ens_sq_mean = ens_sq.sum() / n_t.astype(ens_sq.dtype)
+    n_eff = (n_t if active is None
+             else jnp.maximum(jnp.sum(cmask), 1))
+    ens_sq_mean = ens_sq.sum() / n_eff.astype(ens_sq.dtype)
     ens_loss = jnp.minimum(ens_sq / loss_scale, 1.0).sum()
     return ens_sq_mean, ens_loss, model_losses
 
@@ -208,17 +222,26 @@ def client_window_losses(preds: jnp.ndarray, y: jnp.ndarray,
 @partial(jax.jit, static_argnames=("window",))
 def fedboost_window_grad(preds: jnp.ndarray, y: jnp.ndarray,
                          cursor: jnp.ndarray, n_t: jnp.ndarray,
-                         mix: jnp.ndarray, window: int) -> jnp.ndarray:
+                         mix: jnp.ndarray, window: int,
+                         active=None, shift=None) -> jnp.ndarray:
     """Streaming clients' SGD gradient of the ensemble loss wrt the mixture
-    weights over the round's window: g_k = 2/n sum_i (yhat - y) f_k(x_i)."""
+    weights over the round's window: g_k = 2/n sum_i (yhat - y) f_k(x_i).
+    ``active``/``shift`` as in ``client_window_losses`` (masked clients
+    contribute no gradient; ``n`` becomes the surviving count)."""
     n_stream = preds.shape[1]
     offs = jnp.arange(window)
     idx = (cursor + offs) % n_stream
     cmask = offs < n_t
+    if active is not None:
+        cmask = cmask & active
     p_cl = preds[:, idx]
     y_cl = y[idx]
+    if shift is not None:
+        y_cl = y_cl + shift
     resid = jnp.where(cmask, mix @ p_cl - y_cl, 0.0)
-    return (2.0 / n_t.astype(resid.dtype)) * (p_cl @ resid)
+    n_eff = (n_t if active is None
+             else jnp.maximum(jnp.sum(cmask), 1))
+    return (2.0 / n_eff.astype(resid.dtype)) * (p_cl @ resid)
 
 
 def _eflfg_loss_fn(evaluate, cfg, n_stream):
@@ -226,22 +249,26 @@ def _eflfg_loss_fn(evaluate, cfg, n_stream):
 
     ``loss_carry = (stream cursor, RegretCarry)``; the per-round ``out``
     pytree carries everything the metric layers need.  ``evaluate(plan,
-    cursor, n_t) -> (ens_sq_mean, ens_norm, model_losses, grad)`` is the
-    fused-or-unfused evaluation (see ``make_round_body``); everything
+    cursor, n_t, sched) -> (ens_sq_mean, ens_norm, model_losses, grad)``
+    is the fused-or-unfused evaluation (see ``make_round_body``);
+    ``sched`` is ``None`` (stationary) or the round's ``(active,
+    label_shift)`` schedule slice (``repro.scenarios``).  Everything
     around it — client counting, regret accounting, the out dict, the
-    cursor advance — is shared, so the two execution strategies cannot
-    drift apart structurally.
+    cursor advance — is shared, so the execution strategies cannot drift
+    apart structurally.  The cursor always advances by ``n_t``: stream
+    time passes whether or not a masked client reports.
     """
-    def loss_fn(plan, loss_carry):
+    def loss_fn(plan, loss_carry, sched=None):
         cursor, racc = loss_carry
         sel_size = jnp.sum(plan.sel).astype(jnp.int32)
         n_t = n_clients_traceable(cfg, sel_size)
-        ens_sq, ens_norm, ml_norm, _ = evaluate(plan, cursor, n_t)
+        ens_sq, ens_norm, ml_norm, _ = evaluate(plan, cursor, n_t, sched)
         racc = regret_update(racc, ens_norm, ml_norm)
         out = dict(sel=plan.sel, dom_size=jnp.sum(plan.dom),
                    cost=plan.round_cost, ens_sq_mean=ens_sq,
                    ens_norm=ens_norm, ml_norm=ml_norm,
-                   regret=regret_value(racc))
+                   regret=regret_value(racc),
+                   graph_iters=plan.graph_iters)
         cursor = (cursor + n_t) % n_stream
         return ml_norm, ens_norm, (cursor, racc), out
     return loss_fn
@@ -250,18 +277,19 @@ def _eflfg_loss_fn(evaluate, cfg, n_stream):
 def _fedboost_grad_fn(evaluate, cfg, n_stream):
     """Client-side gradient closure for the FedBoost round body (same
     ``evaluate`` contract as ``_eflfg_loss_fn``, with the gradient slot
-    populated)."""
-    def grad_fn(plan, loss_carry):
+    populated; ``graph_iters`` is zero — FedBoost builds no graph)."""
+    def grad_fn(plan, loss_carry, sched=None):
         sel, _pi, _mix, cost = plan
         cursor, racc = loss_carry
         sel_size = jnp.sum(sel).astype(jnp.int32)
         n_t = n_clients_traceable(cfg, sel_size)
-        ens_sq, ens_norm, ml_norm, grad = evaluate(plan, cursor, n_t)
+        ens_sq, ens_norm, ml_norm, grad = evaluate(plan, cursor, n_t, sched)
         racc = regret_update(racc, ens_norm, ml_norm)
         out = dict(sel=sel, dom_size=jnp.zeros((), jnp.int32),
                    cost=cost, ens_sq_mean=ens_sq,
                    ens_norm=ens_norm, ml_norm=ml_norm,
-                   regret=regret_value(racc))
+                   regret=regret_value(racc),
+                   graph_iters=jnp.zeros((), jnp.int32))
         cursor = (cursor + n_t) % n_stream
         return grad, (cursor, racc), out
     return grad_fn
@@ -287,32 +315,38 @@ def _make_evaluate(algo: str, fused: bool, preds, y, cfg: SimConfig,
                             if ext is None else ext)
     if algo == "eflfg":
         if fused:
-            def evaluate(plan, cursor, n_t):
+            def evaluate(plan, cursor, n_t, sched=None):
+                active, shift = sched if sched is not None else (None, None)
                 ev = client_eval_ops.client_eval(
                     preds_ext, y_ext, cursor, n_t, plan.log_w, plan.sel,
                     loss_scale=cfg.loss_scale, window=W, weighting="log",
-                    with_grad=False)
+                    with_grad=False, active=active, shift=shift)
                 return ev.ens_sq_mean, ev.ens_norm, ev.model_losses, None
         else:
-            def evaluate(plan, cursor, n_t):
+            def evaluate(plan, cursor, n_t, sched=None):
+                active, shift = sched if sched is not None else (None, None)
                 return client_window_losses(
-                    preds, y, cursor, n_t, plan.mix, cfg.loss_scale, W
-                ) + (None,)
+                    preds, y, cursor, n_t, plan.mix, cfg.loss_scale, W,
+                    active, shift) + (None,)
     elif algo == "fedboost":
         if fused:
-            def evaluate(plan, cursor, n_t):
+            def evaluate(plan, cursor, n_t, sched=None):
+                active, shift = sched if sched is not None else (None, None)
                 sel, _pi, mix, _cost = plan
                 ev = client_eval_ops.client_eval(
                     preds_ext, y_ext, cursor, n_t, mix, sel,
                     loss_scale=cfg.loss_scale, window=W, weighting="none",
-                    with_grad=True)
+                    with_grad=True, active=active, shift=shift)
                 return ev.ens_sq_mean, ev.ens_norm, ev.model_losses, ev.grad
         else:
-            def evaluate(plan, cursor, n_t):
+            def evaluate(plan, cursor, n_t, sched=None):
+                active, shift = sched if sched is not None else (None, None)
                 _sel, _pi, mix, _cost = plan
                 losses = client_window_losses(
-                    preds, y, cursor, n_t, mix, cfg.loss_scale, W)
-                grad = fedboost_window_grad(preds, y, cursor, n_t, mix, W)
+                    preds, y, cursor, n_t, mix, cfg.loss_scale, W,
+                    active, shift)
+                grad = fedboost_window_grad(preds, y, cursor, n_t, mix, W,
+                                            active, shift)
                 return losses + (grad,)
     else:
         raise ValueError(f"unknown algo {algo!r}")
@@ -332,16 +366,20 @@ def _make_evaluate_sharded(algo: str, preds, y, cfg: SimConfig, W: int,
     from .sharded import sharded_window_eval
     axis, size = data_axis
     if algo == "eflfg":
-        def evaluate(plan, cursor, n_t):
+        def evaluate(plan, cursor, n_t, sched=None):
+            active, shift = sched if sched is not None else (None, None)
             return sharded_window_eval(
                 preds, y, cursor, n_t, plan.mix, cfg.loss_scale, W,
-                axis=axis, axis_size=size, with_grad=False)
+                axis=axis, axis_size=size, with_grad=False,
+                active=active, shift=shift)
     elif algo == "fedboost":
-        def evaluate(plan, cursor, n_t):
+        def evaluate(plan, cursor, n_t, sched=None):
+            active, shift = sched if sched is not None else (None, None)
             _sel, _pi, mix, _cost = plan
             return sharded_window_eval(
                 preds, y, cursor, n_t, mix, cfg.loss_scale, W,
-                axis=axis, axis_size=size, with_grad=True)
+                axis=axis, axis_size=size, with_grad=True,
+                active=active, shift=shift)
     else:
         raise ValueError(f"unknown algo {algo!r}")
     return evaluate
@@ -351,11 +389,19 @@ def make_round_body(algo: str, preds, y, costs, cfg: SimConfig, budget,
                     eta, xi, ext=None, data_axis=None):
     """Build the one-round scan body and its initial-carry constructor.
 
-    Returns ``(body, init_carry)`` where ``body(carry, _) -> (carry, out)``
+    Returns ``(body, init_carry)`` where ``body(carry, x) -> (carry, out)``
     is a pure traceable function (the ``lax.scan`` body) and
     ``init_carry(key)`` builds the round-0 carry.  The reference loop runs
     ``body`` once per Python iteration; the engine scans it — the round
     computation itself is the same traced function either way.
+
+    ``x`` is the scan's per-round ``xs`` slice: ``None`` on the
+    stationary path (which then traces exactly the pre-scenario
+    program), or a ``repro.scenarios.ScheduleArrays`` slice — the round
+    budget is scaled by ``x.budget_scale`` and the client evaluation
+    folds in ``x.active`` (participation mask) and ``x.label_shift``
+    (concept drift).  The schedule arrays are jit *arguments*: one
+    scheduled program serves every scenario of the same shape.
 
     With ``cfg.use_fused`` the client-side evaluation goes through the
     Pallas-fused ``repro.kernels.client_eval`` op (one launch per round)
@@ -401,9 +447,12 @@ def make_round_body(algo: str, preds, y, costs, cfg: SimConfig, budget,
 # ---------------------------------------------------------------------------
 
 class _Metrics:
-    def __init__(self, K: int, T: int, budget: float):
+    def __init__(self, K: int, T: int, budget):
+        # ``budget`` may be a scalar or a (T,) realized-budget schedule
+        # (base * scenario scale) — violations compare per round.
         self.regret = RegretTracker(K, capacity=T)
-        self.T, self.budget = T, budget
+        self.T = T
+        self._thresh = np.broadcast_to(np.asarray(budget, float), (T,))
         self.mse_curve = np.empty(T)
         self.sel_sizes = np.zeros(T, dtype=int)
         self.dom_sizes = np.zeros(T, dtype=int)
@@ -419,7 +468,7 @@ class _Metrics:
         self.sel_sizes[t] = int(sel.sum())
         self.dom_sizes[t] = int(out["dom_size"])
         self.round_costs[t] = cost
-        if cost > self.budget + 1e-6:
+        if cost > self._thresh[t] + 1e-6:
             self.violations += 1
         self._sq += float(out["ens_sq_mean"])
         self.mse_curve[t] = self._sq / (t + 1)
@@ -450,16 +499,16 @@ def _get_step(algo: str, cfg: SimConfig, eta: float, xi: float):
     if fn is None:
         eta_j, xi_j = jnp.float32(eta), jnp.float32(xi)
 
-        def step(preds, y, costs, budget, carry, ext):
+        def step(preds, y, costs, budget, carry, ext, x):
             body, _ = make_round_body(algo, preds, y, costs, cfg, budget,
                                       eta_j, xi_j, ext=ext)
-            return body(carry, None)
+            return body(carry, x)
         fn = _STEP_CACHE[key] = jax.jit(step)
     return fn
 
 
 def run_simulation_reference(algo: str, preds, y, costs, T: int,
-                             cfg: SimConfig) -> SimResult:
+                             cfg: SimConfig, scenario=None) -> SimResult:
     """Run ``T`` rounds of ``algo`` in {"eflfg", "fedboost"}, one Python
     iteration and one device dispatch per round (the execution oracle the
     scan engine is tested against; see module docstring).
@@ -468,12 +517,25 @@ def run_simulation_reference(algo: str, preds, y, costs, T: int,
     stream (identical numbers to per-round client evaluation — clients are
     deterministic functions of the transmitted models, so precomputation is
     a pure speed optimization, not a semantic change).
+
+    ``scenario`` (a registered name, ``repro.scenarios.Scenario``, or an
+    already-``CompiledScenario``) threads the same per-round schedule
+    slices through the per-round dispatch that the engine scans over —
+    the oracle for the scheduled program family.  All-neutral schedules
+    dispatch the stationary step, mirroring the engine's neutral
+    fast-path (docs/scenarios.md#determinism).
     """
     preds = jnp.asarray(preds, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     costs = jnp.asarray(costs, jnp.float32)
     eta, xi = cfg.rates(T)
     budget_j = jnp.float32(cfg.budget)
+    comp = None
+    if scenario is not None:
+        from repro import scenarios as _scenarios
+        comp = (scenario if isinstance(scenario, _scenarios.CompiledScenario)
+                else _scenarios.resolve(scenario).compile(T, cfg))
+    use_sched = comp is not None and not comp.neutral
     step = _get_step(algo, cfg, eta, xi)
     # The fused path's W-extended stream is loop-invariant: build it once
     # per run here and feed it through the per-round jitted step, instead
@@ -484,9 +546,12 @@ def run_simulation_reference(algo: str, preds, y, costs, T: int,
     _, init_carry = make_round_body(algo, preds, y, costs, cfg, budget_j,
                                     jnp.float32(eta), jnp.float32(xi),
                                     ext=ext)
-    metrics = _Metrics(preds.shape[0], T, cfg.budget)
+    thresh = (cfg.budget if comp is None else cfg.budget * comp.scale)
+    metrics = _Metrics(preds.shape[0], T, thresh)
     carry = init_carry(jax.random.PRNGKey(cfg.seed))
     for t in range(T):
-        carry, out = step(preds, y, costs, budget_j, carry, ext)
+        x = (jax.tree.map(lambda a: a[t], comp.arrays) if use_sched
+             else None)
+        carry, out = step(preds, y, costs, budget_j, carry, ext, x)
         metrics.record(t, out)
     return metrics.result(algo)

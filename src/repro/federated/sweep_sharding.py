@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.launch.mesh import make_sweep_mesh
 from repro.launch.sharding import sweep_specs
@@ -77,7 +77,7 @@ def pad_configs(keys: jnp.ndarray, budgets: jnp.ndarray, n_shards: int):
     return keys, budgets
 
 
-def sharded_sweep_fn(scan_config_fn, mesh: Mesh):
+def sharded_sweep_fn(scan_config_fn, mesh: Mesh, scheduled: bool = False):
     """shard_map + jit a per-config scan into a mesh-sharded flat sweep.
 
     ``scan_config_fn(preds, y, costs, key, budget) -> out pytree`` runs
@@ -88,12 +88,24 @@ def sharded_sweep_fn(scan_config_fn, mesh: Mesh):
     returns the out pytree with a leading (n,) config axis, assembled in
     config order.  Stream arrays are replicated on every device; only the
     config axis is partitioned.
+
+    ``scheduled=True`` adds a trailing schedule-arrays argument
+    (``repro.scenarios.ScheduleArrays``, replicated like the stream —
+    every lane of a scheduled sweep runs the SAME scenario) and expects
+    ``scan_config_fn(..., sched)``.
     """
     in_specs, out_spec = sweep_specs(mesh, axis=SWEEP_AXIS)
 
-    def per_shard(preds, y, costs, keys, budgets):
-        run = lambda k, b: scan_config_fn(preds, y, costs, k, b)
-        return jax.vmap(run)(keys, budgets)
+    if scheduled:
+        in_specs = in_specs + (P(),)     # schedule pytree: replicated
+
+        def per_shard(preds, y, costs, keys, budgets, sched):
+            run = lambda k, b: scan_config_fn(preds, y, costs, k, b, sched)
+            return jax.vmap(run)(keys, budgets)
+    else:
+        def per_shard(preds, y, costs, keys, budgets):
+            run = lambda k, b: scan_config_fn(preds, y, costs, k, b)
+            return jax.vmap(run)(keys, budgets)
 
     # out_spec leaves the data axis unmentioned: with a non-trivial data
     # axis every output is gather-replicated over it (sharded_window_eval),
@@ -109,8 +121,10 @@ def sharded_sweep_fn(scan_config_fn, mesh: Mesh):
                            out_specs=out_spec, check_vma=False)
     fn = jax.jit(mapped)
 
-    def call(preds, y, costs, keys, budgets):
+    def call(preds, y, costs, keys, budgets, sched=None):
         sweep_specs(mesh, n_configs=keys.shape[0], axis=SWEEP_AXIS)
+        if scheduled:
+            return fn(preds, y, costs, keys, budgets, sched)
         return fn(preds, y, costs, keys, budgets)
 
     return call

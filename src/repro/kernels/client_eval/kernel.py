@@ -44,17 +44,25 @@ __all__ = ["client_eval_pallas"]
 
 
 def _client_eval_kernel(preds_ref, y_ref, cursor_ref, nt_ref, w_ref,
-                        sel_ref, mix_ref, scal_ref, ml_ref, grad_ref,
+                        sel_ref, active_ref, shift_ref, mix_ref, scal_ref,
+                        ml_ref, grad_ref,
                         *, loss_scale: float, window: int, weighting: str,
                         with_grad: bool, interpret: bool):
     # preds_ref: (K, S+W); y_ref: (1, S+W); cursor/nt: (1, 1) int32;
     # w_ref/sel_ref: (1, K); outputs: mix/ml/grad (1, K), scal (1, 2).
+    # active_ref (1, W) int32 / shift_ref (1, 1) f32 are the optional
+    # per-round schedule operands (repro.scenarios) — ``None`` on the
+    # stationary path, which then traces exactly the pre-scenario ops.
     cursor = cursor_ref[0, 0]
     n_t = nt_ref[0, 0]
     pw = preds_ref[:, pl.ds(cursor, window)]            # (K, W) gather
     yw = y_ref[:, pl.ds(cursor, window)]                # (1, W)
+    if shift_ref is not None:
+        yw = yw + shift_ref[0, 0]                       # concept drift
     offs = jax.lax.broadcasted_iota(jnp.int32, (1, window), 1)
     cmask = offs < n_t                                  # (1, W)
+    if active_ref is not None:
+        cmask = cmask & (active_ref[...] != 0)          # participation
 
     w = w_ref[...]                                      # (1, K)
     sel = sel_ref[...] != 0
@@ -71,7 +79,13 @@ def _client_eval_kernel(preds_ref, y_ref, cursor_ref, nt_ref, w_ref,
 
     yhat = jnp.dot(mix, pw, preferred_element_type=jnp.float32)  # (1, W)
     ens_sq = jnp.where(cmask, (yhat - yw) ** 2, 0.0)
-    nf = n_t.astype(ens_sq.dtype)
+    if active_ref is None:
+        nf = n_t.astype(ens_sq.dtype)
+    else:
+        # means divide by the SURVIVING client count (clamped >= 1 —
+        # slot 0 is always compiled active, see Participation.mask)
+        nf = jnp.maximum(jnp.sum(cmask.astype(jnp.int32)), 1).astype(
+            ens_sq.dtype)
     ens_sq_mean = ens_sq.sum() / nf
     ens_norm = jnp.minimum(ens_sq / loss_scale, 1.0).sum()
     scal_ref[...] = jnp.stack([ens_sq_mean, ens_norm]).reshape(1, 2).astype(
@@ -102,7 +116,7 @@ def client_eval_pallas(preds_ext: jnp.ndarray, y_ext: jnp.ndarray,
                        w: jnp.ndarray, sel: jnp.ndarray, *,
                        loss_scale: float, window: int,
                        weighting: str = "log", with_grad: bool = True,
-                       interpret: bool = True):
+                       interpret: bool = True, active=None, shift=None):
     """Fused client-eval launch.
 
     ``preds_ext``: (K, n_stream + window) f32; ``y_ext``:
@@ -110,13 +124,24 @@ def client_eval_pallas(preds_ext: jnp.ndarray, y_ext: jnp.ndarray,
     ``w``/``sel``: (K,).  Returns ``(mix, ens_sq_mean, ens_norm,
     model_losses, grad)`` with ``grad = None`` when ``with_grad`` is off
     (the EFL-FG path needs no mixture gradient).
+
+    ``active`` ((window,) bool) and ``shift`` (scalar f32) are the
+    optional schedule operands of the scenario path
+    (``repro.scenarios``); both-or-neither.  When absent the launch has
+    exactly the pre-scenario operand list, so stationary programs are
+    untouched.
     """
     if weighting not in WEIGHTINGS:
         raise ValueError(f"unknown weighting {weighting!r}")
+    if (active is None) != (shift is None):
+        raise ValueError("schedule operands come together: pass both "
+                         "active and shift, or neither")
+    scheduled = active is not None
     K, SW = preds_ext.shape
     kern = functools.partial(_client_eval_kernel, loss_scale=loss_scale,
                              window=window, weighting=weighting,
                              with_grad=with_grad, interpret=interpret)
+    kern = _adapt_refs(kern, with_grad=with_grad, scheduled=scheduled)
     full = lambda *_: (0, 0)
     out_shape = [
         jax.ShapeDtypeStruct((1, K), jnp.float32),   # mix
@@ -128,37 +153,51 @@ def client_eval_pallas(preds_ext: jnp.ndarray, y_ext: jnp.ndarray,
                  pl.BlockSpec((1, K), full), pl.BlockSpec((1, K), full)]
     if not with_grad:
         out_shape, out_specs = out_shape[:3], out_specs[:3]
-        kern = _drop_grad_ref(kern)
+    in_specs = [
+        pl.BlockSpec((K, SW), full),
+        pl.BlockSpec((1, SW), full),
+        pl.BlockSpec((1, 1), full),
+        pl.BlockSpec((1, 1), full),
+        pl.BlockSpec((1, K), full),
+        pl.BlockSpec((1, K), full),
+    ]
+    operands = [preds_ext.astype(jnp.float32),
+                y_ext.astype(jnp.float32).reshape(1, SW),
+                jnp.asarray(cursor, jnp.int32).reshape(1, 1),
+                jnp.asarray(n_t, jnp.int32).reshape(1, 1),
+                jnp.asarray(w, jnp.float32).reshape(1, K),
+                jnp.asarray(sel, jnp.int32).reshape(1, K)]
+    if scheduled:
+        in_specs += [pl.BlockSpec((1, window), full),
+                     pl.BlockSpec((1, 1), full)]
+        operands += [jnp.asarray(active, jnp.int32).reshape(1, window),
+                     jnp.asarray(shift, jnp.float32).reshape(1, 1)]
     outs = pl.pallas_call(
         kern,
         grid=(1,),
-        in_specs=[
-            pl.BlockSpec((K, SW), full),
-            pl.BlockSpec((1, SW), full),
-            pl.BlockSpec((1, 1), full),
-            pl.BlockSpec((1, 1), full),
-            pl.BlockSpec((1, K), full),
-            pl.BlockSpec((1, K), full),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(preds_ext.astype(jnp.float32),
-      y_ext.astype(jnp.float32).reshape(1, SW),
-      jnp.asarray(cursor, jnp.int32).reshape(1, 1),
-      jnp.asarray(n_t, jnp.int32).reshape(1, 1),
-      jnp.asarray(w, jnp.float32).reshape(1, K),
-      jnp.asarray(sel, jnp.int32).reshape(1, K))
+    )(*operands)
     mix, scal, ml = outs[0][0], outs[1], outs[2]
     grad = outs[3][0] if with_grad else None
     return mix, scal[0, 0], scal[0, 1], ml[0], grad
 
 
-def _drop_grad_ref(kern):
-    """Adapt the 10-ref kernel body to the gradless 9-ref launch."""
-    def wrapped(preds_ref, y_ref, cursor_ref, nt_ref, w_ref, sel_ref,
-                mix_ref, scal_ref, ml_ref):
-        kern(preds_ref, y_ref, cursor_ref, nt_ref, w_ref, sel_ref,
-             mix_ref, scal_ref, ml_ref, None)
+def _adapt_refs(kern, with_grad: bool, scheduled: bool):
+    """Adapt the full 12-ref kernel body to the launch's actual ref list
+    (the schedule operands and the grad output are both optional)."""
+    def wrapped(*refs):
+        refs = list(refs)
+        ins, i = refs[:6], 6
+        active_ref = shift_ref = None
+        if scheduled:
+            active_ref, shift_ref = refs[6], refs[7]
+            i = 8
+        mix_ref, scal_ref, ml_ref = refs[i:i + 3]
+        grad_ref = refs[i + 3] if with_grad else None
+        kern(*ins, active_ref, shift_ref, mix_ref, scal_ref, ml_ref,
+             grad_ref)
         return
     return wrapped

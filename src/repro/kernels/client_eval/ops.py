@@ -28,16 +28,20 @@ def client_eval(preds_ext: jnp.ndarray, y_ext: jnp.ndarray,
                 cursor: jnp.ndarray, n_t: jnp.ndarray,
                 w: jnp.ndarray, sel: jnp.ndarray, *,
                 loss_scale: float, window: int, weighting: str = "log",
-                with_grad: bool = True,
-                interpret: bool | None = None) -> ClientEvalOut:
+                with_grad: bool = True, interpret: bool | None = None,
+                active=None, shift=None) -> ClientEvalOut:
     """One fused round of client-side evaluation (see ``ref.client_eval_ref``
     for exact semantics).  ``grad`` is zeros-shaped ``None``-free only when
     ``with_grad`` is set; the EFL-FG path skips it.
+
+    ``active``/``shift`` are the optional per-round schedule operands
+    (participation mask + label drift, ``repro.scenarios``) — absent on
+    the stationary path, which keeps its pre-scenario launch signature.
     """
     if interpret is None:
         interpret = not _on_tpu()
     mix, ens_sq_mean, ens_norm, model_losses, grad = client_eval_pallas(
         preds_ext, y_ext, cursor, n_t, w, sel, loss_scale=loss_scale,
         window=window, weighting=weighting, with_grad=with_grad,
-        interpret=interpret)
+        interpret=interpret, active=active, shift=shift)
     return ClientEvalOut(mix, ens_sq_mean, ens_norm, model_losses, grad)

@@ -90,26 +90,40 @@ def client_eval_ref(preds_ext: jnp.ndarray, y_ext: jnp.ndarray,
                     cursor: jnp.ndarray, n_t: jnp.ndarray,
                     w: jnp.ndarray, sel: jnp.ndarray,
                     loss_scale: float, window: int,
-                    weighting: str = "log") -> ClientEvalOut:
+                    weighting: str = "log", active=None,
+                    shift=None) -> ClientEvalOut:
     """Single-pass jnp reference of the fused round evaluation.
 
     ``preds_ext``: (K, n_stream + window) extended predictions;
     ``y_ext``: (n_stream + window,) extended targets (see
     ``extend_stream``); ``cursor``/``n_t``: int32 scalars; ``w``/``sel``:
     (K,) weights + transmit mask.  Returns ``ClientEvalOut``.
+
+    ``active``/``shift`` are the optional per-round schedule operands
+    (``repro.scenarios``): a (window,) availability mask ANDed into the
+    client mask — per-client means then divide by the surviving count,
+    clamped to >= 1 — and a scalar additive label shift.  ``None``
+    (the default) traces exactly the stationary program.
     """
     K = preds_ext.shape[0]
     offs = jnp.arange(window)
     cmask = offs < n_t
+    if active is not None:
+        cmask = cmask & active
     p_cl = lax.dynamic_slice(preds_ext, (jnp.int32(0), cursor), (K, window))
     y_cl = lax.dynamic_slice(y_ext, (cursor,), (window,))
+    if shift is not None:
+        y_cl = y_cl + shift
     mix = mix_weights_ref(w, sel, weighting).astype(p_cl.dtype)
     sq = (p_cl - y_cl[None, :]) ** 2
     model_losses = jnp.where(cmask[None, :],
                              jnp.minimum(sq / loss_scale, 1.0), 0.0).sum(1)
     yhat = mix @ p_cl
     ens_sq = jnp.where(cmask, (yhat - y_cl) ** 2, 0.0)
-    nf = n_t.astype(ens_sq.dtype)
+    if active is None:
+        nf = n_t.astype(ens_sq.dtype)
+    else:
+        nf = jnp.maximum(jnp.sum(cmask), 1).astype(ens_sq.dtype)
     ens_sq_mean = ens_sq.sum() / nf
     ens_norm = jnp.minimum(ens_sq / loss_scale, 1.0).sum()
     resid = jnp.where(cmask, yhat - y_cl, 0.0)

@@ -29,6 +29,9 @@ def main():
                     default=PAPER_EFL.clients_per_round)
     ap.add_argument("--anchors", type=int, default=800)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", default=None,
+                    help="run under a registered non-stationary scenario "
+                         "(see python -m repro.launch.scenario_run --list)")
     args = ap.parse_args()
 
     T = args.T or PAPER_EFL.rounds[args.dataset]
@@ -44,9 +47,11 @@ def main():
         res = run_simulation(
             algo, preds, ys, pool.costs, T=T,
             cfg=SimConfig(budget=args.budget, clients_per_round=args.clients,
-                          seed=args.seed))
+                          seed=args.seed),
+            scenario=args.scenario)
         print(json.dumps({
             "algo": algo, "dataset": args.dataset, "T": T,
+            "scenario": args.scenario,
             "MSE_T": res.final_mse,
             "budget_violence_pct": 100 * res.violation_frac,
             "mean_sel": float(res.sel_sizes.mean()),

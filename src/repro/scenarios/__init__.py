@@ -1,0 +1,35 @@
+"""Declarative non-stationary federated scenarios.
+
+A ``Scenario`` describes *how conditions change* over a simulated run —
+time-varying budget, partial client participation, concept drift — and
+compiles into device-resident per-round schedule arrays that every
+engine execution path (solo scan, vmapped/mesh-sharded sweeps, flat
+serving batches) threads through its ``lax.scan`` as ``xs``.  Shapes
+stay static, compiled programs are shared across scenarios, and the
+all-neutral ``constant`` scenario dispatches the scenario-free program
+bit-equal by construction.
+
+Quick start::
+
+    from repro.federated import SimConfig, run_simulation
+    from repro import scenarios
+
+    res = run_simulation("eflfg", preds, y, costs, T=2000,
+                         cfg=SimConfig(), scenario="bursty_outage")
+    res.budget_violations       # outage rounds where even the mandatory
+                                # transmit exceeded the collapsed budget
+
+    scenarios.names()           # the registered presets
+    scenarios.get("concept_drift").description
+
+Docs: docs/scenarios.md (spec fields, registry, determinism);
+CLI: ``python -m repro.launch.scenario_run``.
+"""
+
+from .spec import (BudgetSchedule, CompiledScenario, Drift, Participation,
+                   Scenario, ScheduleArrays)
+from .registry import get, names, register, resolve
+
+__all__ = ["BudgetSchedule", "Participation", "Drift", "Scenario",
+           "ScheduleArrays", "CompiledScenario", "register", "get",
+           "names", "resolve"]

@@ -1,0 +1,117 @@
+"""Named-scenario registry and the built-in presets.
+
+``get("bursty_outage")`` anywhere a ``scenario=`` parameter is accepted
+(``run_simulation_scan`` / ``run_sweep`` / ``run_batch`` /
+``SimServer.submit`` / the ``repro.launch.scenario_run`` CLI) — string
+names resolve through this registry.  Every preset is a frozen
+``Scenario`` (hashable, deterministic compile), and each one is pinned
+by a regression test in ``tests/test_scenarios.py``.
+"""
+
+from __future__ import annotations
+
+from .spec import BudgetSchedule, Drift, Participation, Scenario
+
+__all__ = ["register", "get", "names", "resolve"]
+
+_REGISTRY: dict = {}
+
+
+def register(scenario: Scenario, *, replace: bool = False) -> Scenario:
+    """Register a scenario under its ``name``; returns it.  Re-using a
+    name raises unless ``replace=True`` — silent preset shadowing would
+    change what every caller of ``get(name)`` runs."""
+    if not isinstance(scenario, Scenario):
+        raise TypeError(f"expected a Scenario, got {type(scenario)!r}")
+    if scenario.name in _REGISTRY and not replace:
+        raise ValueError(f"scenario {scenario.name!r} already registered "
+                         "(pass replace=True to override)")
+    _REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def get(name: str) -> Scenario:
+    """Look up a registered scenario by name."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r}; registered: "
+                         f"{names()}") from None
+
+
+def names() -> tuple:
+    """Registered scenario names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve(scenario) -> Scenario:
+    """Normalize a ``scenario=`` argument: a name string resolves through
+    the registry, a ``Scenario`` passes through."""
+    if isinstance(scenario, str):
+        return get(scenario)
+    if isinstance(scenario, Scenario):
+        return scenario
+    raise TypeError("scenario must be a registered name or a Scenario, "
+                    f"got {type(scenario)!r}")
+
+
+# ---------------------------------------------------------------------------
+# Built-in presets (each pinned by tests/test_scenarios.py)
+# ---------------------------------------------------------------------------
+
+register(Scenario(
+    "constant",
+    description="The paper's stationary setup: fixed budget, full "
+                "participation, no drift.  Compiles to an all-neutral "
+                "schedule, so the engine dispatches the scenario-free "
+                "program — bit-equal by construction."))
+
+register(Scenario(
+    "step_decay",
+    budget=BudgetSchedule(kind="step_decay", decay_factor=0.5, n_steps=2),
+    description="Provisioned bandwidth shrinking over the run: the "
+                "budget halves at T/3 and again at 2T/3."))
+
+register(Scenario(
+    "bursty_outage",
+    budget=BudgetSchedule(kind="outage", outage_period=200, outage_len=20,
+                          outage_factor=0.05),
+    description="Periodic link outages: every 200 rounds the budget "
+                "collapses to 5% for 20 rounds — low enough that the "
+                "mandatory self-loop transmit violates it, exercising "
+                "the budget_violations metric."))
+
+register(Scenario(
+    "partial_participation",
+    participation=Participation(kind="bernoulli", prob=0.6, seed=0),
+    description="Stragglers: each sampled client reports with "
+                "probability 0.6 per round (Bernoulli availability)."))
+
+register(Scenario(
+    "cohort_dropout",
+    participation=Participation(kind="cohort_dropout", cohort_frac=0.4,
+                                start_frac=1.0 / 3.0, stop_frac=2.0 / 3.0),
+    description="A 40% client cohort goes dark for the middle third of "
+                "the horizon, then rejoins."))
+
+register(Scenario(
+    "concept_drift",
+    drift=Drift(kind="step", n_segments=4, magnitude=1.0),
+    description="Segment-wise concept shift: the labels ramp away from "
+                "the pre-training distribution in 4 steps while the "
+                "expert pool stands still."))
+
+register(Scenario(
+    "regime_cycle",
+    drift=Drift(kind="cyclic", n_segments=6, magnitude=0.5),
+    description="Cyclic regimes: the label shift follows a 6-segment "
+                "sine, leaving and returning to the pre-training "
+                "concept."))
+
+register(Scenario(
+    "degraded_uplink",
+    budget=BudgetSchedule(kind="step_decay", decay_factor=0.5, n_steps=2),
+    participation=Participation(kind="bernoulli", prob=0.8, seed=1),
+    description="Compound stress: step-decaying budget AND 80% Bernoulli "
+                "participation — the regime where the graph's adaptive "
+                "confidence has to work hardest."))

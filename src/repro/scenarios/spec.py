@@ -1,0 +1,283 @@
+"""Declarative non-stationary scenario specs and their compiled form.
+
+The paper fixes one communication budget ``B`` and assumes every sampled
+client reports each round; the regimes that actually stress a budgeted
+ensemble method — time-varying bandwidth, partial participation, concept
+drift (the FL-communication survey arXiv:2405.20431, Konecny et al.
+arXiv:1610.05492) — are not expressible there.  A ``Scenario`` makes
+them declarative: three orthogonal axes of non-stationarity
+
+* ``BudgetSchedule`` — a per-round *multiplicative factor* on the base
+  budget (constant / step decay / bursty outages).  Factors, not
+  absolute budgets, so the base budget stays a jit argument and budget
+  grids/sweeps never recompile.
+* ``Participation`` — a per-round boolean availability mask over the
+  client window (Bernoulli stragglers, cohort dropout).  Unavailable
+  clients still *observe* their sample (the stream cursor advances by
+  ``n_t`` as always) but never uplink: their losses and gradients drop
+  out of the round, and per-client means divide by the surviving count.
+* ``Drift`` — a per-round additive label shift (segment-wise concept
+  shift): the stream's targets move while the pre-trained experts stand
+  still, so their predictions go stale mid-run.
+
+``Scenario.compile(T, cfg)`` lowers the spec into device-resident
+per-round **schedule arrays** (``ScheduleArrays``) threaded through the
+engine's ``lax.scan`` as ``xs`` — every shape is static, so one compiled
+scheduled program serves *every* scenario of the same ``(T, window)``
+shape (the arrays are jit arguments, like seeds and budgets).
+
+Schedules that turn out to be all-neutral (factor 1, mask all-true,
+shift 0) are flagged ``neutral``: the engine then dispatches the
+*scenario-free* program with identical arguments, which is what makes
+the ``constant`` scenario bit-equal to the scenario-free path **by
+construction** rather than by hoping XLA fuses two different programs
+identically (it does not — see docs/serving.md#determinism).
+
+Specs are frozen (hashable) dataclasses: a ``Scenario`` is usable
+directly as a cache / batching key — the engine's compile cache and the
+serving batcher's group key both rely on that.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import numpy as np
+
+__all__ = ["BudgetSchedule", "Participation", "Drift", "Scenario",
+           "ScheduleArrays", "CompiledScenario"]
+
+
+class ScheduleArrays(NamedTuple):
+    """Device-resident per-round schedules, the scan's ``xs`` pytree.
+
+    Each round's scan slice is ``(budget_scale[t], active[t],
+    label_shift[t])`` — the round body multiplies the base budget by the
+    scale, ANDs the availability mask into the client-window mask, and
+    adds the shift to the observed labels.
+    """
+    budget_scale: Any   # (T,)   float32 multiplicative factor on budget
+    active: Any         # (T, W) bool   client-window availability mask
+    label_shift: Any    # (T,)   float32 additive concept shift on labels
+
+
+class CompiledScenario(NamedTuple):
+    """A scenario lowered for one ``(T, window)`` shape.
+
+    ``arrays`` are device arrays (jit arguments, never compile-time
+    constants); ``neutral`` marks an all-identity schedule set — the
+    engine then runs the scenario-free program, bit-equal by
+    construction; ``scale`` keeps the budget factors host-side so
+    violation accounting compares each round's cost against the
+    *realized* budget ``base * scale[t]``.
+    """
+    arrays: ScheduleArrays
+    neutral: bool
+    T: int
+    window: int
+    scale: np.ndarray   # (T,) float64 host copy of budget_scale
+
+
+_BUDGET_KINDS = ("constant", "step_decay", "outage")
+_PART_KINDS = ("full", "bernoulli", "cohort_dropout")
+_DRIFT_KINDS = ("none", "step", "cyclic")
+
+
+@dataclass(frozen=True)
+class BudgetSchedule:
+    """Per-round multiplicative budget factors.
+
+    ``constant``: factor 1 everywhere.
+    ``step_decay``: the horizon splits into ``n_steps + 1`` equal
+      segments; segment ``s`` gets factor ``decay_factor ** s``
+      (bandwidth provisioning shrinking over the run).
+    ``outage``: factor 1 except during bursty outages — every
+      ``outage_period`` rounds (first at ``t = outage_period``) the
+      budget collapses to ``outage_factor`` for ``outage_len`` rounds.
+      A factor below the cheapest model's relative cost forces
+      violations: the server must transmit *something* (the drawn node's
+      self-loop survives any budget), which is exactly the regime the
+      ``budget_violations`` metric exists for.
+    """
+    kind: str = "constant"
+    decay_factor: float = 0.5
+    n_steps: int = 2
+    outage_period: int = 200
+    outage_len: int = 20
+    outage_factor: float = 0.25
+
+    def __post_init__(self):
+        if self.kind not in _BUDGET_KINDS:
+            raise ValueError(f"unknown budget schedule kind {self.kind!r}; "
+                             f"expected one of {_BUDGET_KINDS}")
+        if self.kind == "step_decay" and not (0 < self.decay_factor <= 1
+                                              and self.n_steps >= 1):
+            raise ValueError("step_decay needs 0 < decay_factor <= 1 and "
+                             "n_steps >= 1")
+        if self.kind == "outage" and not (self.outage_period > 0
+                                          and self.outage_len > 0
+                                          and 0 <= self.outage_factor <= 1):
+            raise ValueError("outage needs outage_period/len > 0 and "
+                             "0 <= outage_factor <= 1")
+
+    def scale(self, T: int) -> np.ndarray:
+        """(T,) float32 multiplicative factors on the base budget."""
+        t = np.arange(T)
+        if self.kind == "constant":
+            return np.ones(T, np.float32)
+        if self.kind == "step_decay":
+            seg = np.minimum(t * (self.n_steps + 1) // max(T, 1),
+                             self.n_steps)
+            return (self.decay_factor ** seg).astype(np.float32)
+        # outage: bursts starting at outage_period, 2*outage_period, ...
+        phase = t % self.outage_period
+        in_outage = (t >= self.outage_period) & (phase < self.outage_len)
+        return np.where(in_outage, self.outage_factor, 1.0).astype(
+            np.float32)
+
+
+@dataclass(frozen=True)
+class Participation:
+    """Per-round client-window availability masks.
+
+    ``full``: every window slot reports.
+    ``bernoulli``: each slot of each round is independently available
+      with probability ``prob`` (straggler / flaky-uplink traffic).
+    ``cohort_dropout``: the last ``round(cohort_frac * W)`` window slots
+      go dark for the ``[start_frac, stop_frac)`` fraction of the
+      horizon (a cohort — a region, a device class — leaving and
+      rejoining).
+
+    Slot 0 is forced available in every round: an empty round is
+    meaningless, mirroring ``n_clients_traceable``'s clamp to >= 1.
+    The mask is a deterministic function of the spec (the Bernoulli
+    draws come from a ``seed``-keyed NumPy generator at *compile* time),
+    so a scenario's schedule never depends on process state.
+    """
+    kind: str = "full"
+    prob: float = 1.0
+    seed: int = 0
+    cohort_frac: float = 0.4
+    start_frac: float = 1.0 / 3.0
+    stop_frac: float = 2.0 / 3.0
+
+    def __post_init__(self):
+        if self.kind not in _PART_KINDS:
+            raise ValueError(f"unknown participation kind {self.kind!r}; "
+                             f"expected one of {_PART_KINDS}")
+        if self.kind == "bernoulli" and not 0.0 < self.prob <= 1.0:
+            raise ValueError("bernoulli participation needs 0 < prob <= 1")
+        if self.kind == "cohort_dropout" and not (
+                0.0 <= self.cohort_frac < 1.0
+                and 0.0 <= self.start_frac < self.stop_frac <= 1.0):
+            raise ValueError("cohort_dropout needs 0 <= cohort_frac < 1 "
+                             "and 0 <= start_frac < stop_frac <= 1")
+
+    def mask(self, T: int, W: int) -> np.ndarray:
+        """(T, W) bool availability; slot 0 always True."""
+        if self.kind == "full":
+            return np.ones((T, W), bool)
+        if self.kind == "bernoulli":
+            rng = np.random.default_rng(self.seed)
+            m = rng.random((T, W)) < self.prob
+        else:   # cohort_dropout
+            m = np.ones((T, W), bool)
+            n_drop = min(int(round(self.cohort_frac * W)), W - 1)
+            t0, t1 = int(self.start_frac * T), int(self.stop_frac * T)
+            if n_drop > 0:
+                m[t0:t1, W - n_drop:] = False
+        m[:, 0] = True
+        return m
+
+
+@dataclass(frozen=True)
+class Drift:
+    """Segment-wise concept shift: an additive label drift over the
+    registered stream.
+
+    ``none``: zero shift.
+    ``step``: the horizon splits into ``n_segments`` equal segments;
+      segment ``s`` shifts labels by ``magnitude * s / (n_segments - 1)``
+      — a staircase ramp from 0 to ``magnitude``.
+    ``cyclic``: piecewise-constant ``magnitude * sin(2 pi s /
+      n_segments)`` per segment — regimes that leave and return.
+
+    The shift is applied to the labels the *clients observe* (losses,
+    gradients, reported MSE): the concept moved, the pre-trained experts
+    did not.
+    """
+    kind: str = "none"
+    n_segments: int = 4
+    magnitude: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in _DRIFT_KINDS:
+            raise ValueError(f"unknown drift kind {self.kind!r}; expected "
+                             f"one of {_DRIFT_KINDS}")
+        if self.kind != "none" and self.n_segments < 2:
+            raise ValueError("drift needs n_segments >= 2")
+
+    def shifts(self, T: int) -> np.ndarray:
+        """(T,) float32 additive label shifts."""
+        if self.kind == "none":
+            return np.zeros(T, np.float32)
+        t = np.arange(T)
+        seg = np.minimum(t * self.n_segments // max(T, 1),
+                         self.n_segments - 1)
+        if self.kind == "step":
+            return (self.magnitude * seg / (self.n_segments - 1)).astype(
+                np.float32)
+        return (self.magnitude
+                * np.sin(2.0 * np.pi * seg / self.n_segments)).astype(
+                    np.float32)
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One declarative non-stationary federated scenario.
+
+    Frozen and hashable: usable directly as the engine's compile-cache
+    key and the serving batcher's group-key component.  Build variants
+    with ``dataclasses.replace``; register named presets with
+    ``repro.scenarios.register``.
+    """
+    name: str
+    budget: BudgetSchedule = BudgetSchedule()
+    participation: Participation = Participation()
+    drift: Drift = Drift()
+    description: str = ""
+
+    def compile(self, T: int, cfg) -> CompiledScenario:
+        """Lower into device-resident per-round schedules for ``cfg``'s
+        client window (``repro.federated.simulation.eval_window``) and
+        horizon ``T``.  Deterministic: same spec, same ``(T, W)`` ->
+        identical arrays, whatever process builds them."""
+        from repro.federated.simulation import eval_window
+        import jax.numpy as jnp
+        if T <= 0:
+            raise ValueError(f"T must be positive, got {T}")
+        W = eval_window(cfg)
+        scale = self.budget.scale(T)
+        active = self.participation.mask(T, W)
+        shift = self.drift.shifts(T)
+        neutral = bool((scale == 1.0).all() and active.all()
+                       and (shift == 0.0).all())
+        arrays = ScheduleArrays(jnp.asarray(scale, jnp.float32),
+                                jnp.asarray(active, bool),
+                                jnp.asarray(shift, jnp.float32))
+        return CompiledScenario(arrays, neutral, T, W,
+                                np.asarray(scale, np.float64))
+
+    def summary(self, T: int) -> dict:
+        """Host-side schedule summary (for artifacts and drivers)."""
+        scale = self.budget.scale(T)
+        shift = self.drift.shifts(T)
+        return {
+            "budget_kind": self.budget.kind,
+            "participation_kind": self.participation.kind,
+            "drift_kind": self.drift.kind,
+            "budget_scale_min": float(scale.min()),
+            "budget_scale_mean": float(scale.mean()),
+            "label_shift_max_abs": float(np.abs(shift).max()),
+        }

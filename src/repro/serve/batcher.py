@@ -2,10 +2,12 @@
 
 Pure planning logic (no jax, no threads — the server composes this with
 ``RequestQueue``): requests are grouped by their *static* configuration
-(everything that shapes the compiled program), chunked to the server's
-``max_batch``, and padded up to a small set of bucket sizes so
+(everything that shapes the compiled program, plus the scenario — a
+batch runs ONE schedule — and the priority class), chunked to the
+server's ``max_batch``, and padded up to a small set of bucket sizes so
 steady-state traffic re-uses a handful of compiled executables instead
-of tracing one per batch occupancy.
+of tracing one per batch occupancy.  Planned buckets come back in
+dispatch order: higher-priority buckets first, FIFO within a bucket.
 
 Bucketing rules (docs/serving.md#bucketing):
 
@@ -75,10 +77,17 @@ def _cfg_static_key(cfg, T: int) -> tuple:
 def group_key(req: SimRequest) -> tuple:
     """Requests sharing this key can ride in one batch: same stream
     (= same (K, n_stream) arrays), same algorithm, same horizon, same
-    static config, same execution mode.  Seed and budget — the flat
-    batch axis — are deliberately absent."""
+    static config, same execution mode, same **scenario** (a batch runs
+    ONE schedule — `run_batch`'s contract), and same priority (a bucket
+    dispatches as a unit, so a low-priority co-tenant would otherwise
+    ride ahead of its class).  Seed and budget — the flat batch axis —
+    are deliberately absent.
+
+    ``req.scenario`` is a frozen ``repro.scenarios.Scenario`` (or
+    ``None``) — hashable by design, so it keys directly; ``submit``
+    resolves name strings before enqueueing."""
     return (req.stream, req.algo, req.T, req.exact,
-            _cfg_static_key(req.cfg, req.T))
+            _cfg_static_key(req.cfg, req.T), req.scenario, req.priority)
 
 
 @dataclass
@@ -101,6 +110,14 @@ class Bucket:
     def exact(self) -> bool:
         return self.key[3]
 
+    @property
+    def scenario(self):
+        return self.key[5]
+
+    @property
+    def priority(self) -> int:
+        return self.key[6]
+
     def seeds(self) -> list:
         """Per-lane seeds, padding included (repeat of the last lane)."""
         seeds = [r.seed for r, _ in self.requests]
@@ -110,10 +127,13 @@ class Bucket:
 def plan_buckets(items: Sequence, max_batch: int = 16) -> list:
     """Coalesce drained ``(request, future)`` pairs into ``Bucket``s.
 
-    Arrival order is preserved within and across groups (first-come
-    first-batched); each group is chunked to ``max_batch`` and each
-    chunk padded to its bucket size.  This is pure planning — no
-    waiting, no dispatch.
+    Buckets come back in dispatch order: **higher-priority buckets
+    first** (``SimRequest.priority``; the stable sort preserves arrival
+    order between equal priorities), FIFO within each bucket.  Within a
+    priority class, arrival order is preserved within and across groups
+    (first-come first-batched); each group is chunked to ``max_batch``
+    and each chunk padded to its bucket size.  This is pure planning —
+    no waiting, no dispatch.
     """
     sizes = bucket_sizes(max_batch)
     groups: dict = {}
@@ -132,6 +152,7 @@ def plan_buckets(items: Sequence, max_batch: int = 16) -> list:
             size = (len(chunk) if key[3]          # exact: no padding
                     else bucket_size(len(chunk), sizes))
             buckets.append(Bucket(key=key, requests=chunk, size=size))
+    buckets.sort(key=lambda b: -b.priority)       # stable: FIFO per class
     return buckets
 
 

@@ -2,8 +2,10 @@
 
 The server's ``submit`` is already thread-safe; this module adds the
 ergonomic layer tenant code actually wants: blocking single runs,
-ordered bulk submission, and dict-based request specs for driver
-scripts (``repro.launch.serve simulate`` is built on it).
+ordered bulk submission, dict-based request specs for driver scripts
+(``repro.launch.serve simulate`` is built on it), and an async/await
+facade (``aio_submit``) that bridges ``SimFuture`` fulfillment into the
+caller's event loop without parking a waiter thread per request.
 """
 
 from __future__ import annotations
@@ -35,10 +37,54 @@ class SimClient:
 
     def submit(self, algo: str, seed: int, *, T: int,
                budget: Optional[float] = None, stream: str = "default",
-               cfg=None, exact: bool = False):
+               cfg=None, exact: bool = False, scenario=None,
+               priority: int = 0):
         """Enqueue one request; returns its ``SimFuture``."""
         return self.server.submit(algo, seed, T=T, budget=budget,
-                                  stream=stream, cfg=cfg, exact=exact)
+                                  stream=stream, cfg=cfg, exact=exact,
+                                  scenario=scenario, priority=priority)
+
+    async def aio_submit(self, algo: str, seed: int, *, T: int, **kw):
+        """Submit one request and ``await`` its ``SimResult`` — the
+        async/await facade over ``SimFuture``.
+
+        No thread is parked per request: the server thread's fulfillment
+        fires the future's done-callback, which hands the result to the
+        caller's event loop via ``call_soon_threadsafe``.  Must be
+        awaited from a running loop; submission itself happens eagerly
+        (before the first await), so ``asyncio.gather`` over many
+        ``aio_submit`` coroutines coalesces exactly like a
+        ``submit_many`` burst::
+
+            async with-less quick start:
+                results = await asyncio.gather(
+                    *(client.aio_submit("eflfg", s, T=2000)
+                      for s in range(32)))
+
+        Server-side failures re-raise here, like ``SimFuture.result``.
+        """
+        import asyncio
+        loop = asyncio.get_running_loop()
+        fut = self.submit(algo, seed, T=T, **kw)
+        afut = loop.create_future()
+
+        def bridge(done):
+            def transfer():
+                if afut.cancelled():
+                    return
+                try:
+                    # the future is fulfilled when the callback fires, so
+                    # result(0) never times out — it returns or re-raises
+                    afut.set_result(done.result(timeout=0))
+                except BaseException as exc:    # noqa: BLE001
+                    afut.set_exception(exc)
+            try:
+                loop.call_soon_threadsafe(transfer)
+            except RuntimeError:
+                pass    # loop already closed — nobody is awaiting
+
+        fut.add_done_callback(bridge)
+        return await afut
 
     def submit_many(self, specs: Iterable[dict]) -> list:
         """Submit a burst of dict specs (``submit`` keyword sets); returns

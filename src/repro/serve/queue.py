@@ -33,6 +33,16 @@ class SimRequest:
     ignored in favor of the request's — the request IS the
     configuration axis.
 
+    ``scenario`` is ``None`` (stationary) or a
+    ``repro.scenarios.Scenario`` — ``SimServer.submit`` resolves
+    registered names before enqueueing, so by the time a request reaches
+    the batcher the field is hashable and group-keyable: requests only
+    share a batch when they run the SAME schedule.
+
+    ``priority`` (int, default 0, higher = sooner) orders *buckets* at
+    dispatch time: the batcher plans higher-priority buckets first, FIFO
+    within a bucket.  It never changes results — only who waits.
+
     ``exact=True`` asks for the exact execution mode: the request is
     still queued and coalesced, but executed with the solo cached
     program, so its trajectories are bit-equal to a direct
@@ -47,6 +57,8 @@ class SimRequest:
     stream: str = "default"
     cfg: Any = None                   # SimConfig | None (server default)
     exact: bool = False
+    scenario: Any = None              # Scenario | None (stationary)
+    priority: int = 0                 # bucket dispatch order; higher first
     submitted_at: float = field(default_factory=time.monotonic)
 
     def __post_init__(self):
@@ -55,6 +67,7 @@ class SimRequest:
                              f"of {ALGOS}")
         if self.T <= 0:
             raise ValueError(f"T must be positive, got {self.T}")
+        self.priority = int(self.priority)
 
 
 class SimFuture:
@@ -64,7 +77,16 @@ class SimFuture:
     (double fulfillment raises — write-once is enforced, not assumed);
     callers block on ``result()``.  ``execution`` is filled at
     fulfillment time with dispatch metadata (mode, bucket size, padded
-    lanes, sharded flag) — observability for tests and tuning.
+    lanes, sharded flag, dispatch ``seq``) — observability for tests and
+    tuning.
+
+    ``add_done_callback`` is the thread-free notification hook: each
+    callback fires exactly once with the future, in the fulfilling
+    thread (immediately, in the calling thread, if already done).
+    Callback exceptions are swallowed — a subscriber must never be able
+    to break fulfillment or kill the dispatch thread.  This is what the
+    asyncio facade (``SimClient.aio_submit``) bridges from, instead of
+    parking a waiter thread per request.
 
     Deliberately NOT a ``concurrent.futures.Future``: serving futures
     have no cancellation story (an in-flight XLA dispatch cannot be
@@ -78,9 +100,32 @@ class SimFuture:
         self._done = threading.Event()
         self._result = None
         self._exception: Optional[BaseException] = None
+        self._cb_lock = threading.Lock()
+        self._callbacks: list = []
 
     def done(self) -> bool:
         return self._done.is_set()
+
+    def add_done_callback(self, fn) -> None:
+        """Call ``fn(self)`` when the future fulfills (immediately if it
+        already has).  Exceptions from ``fn`` are swallowed."""
+        with self._cb_lock:
+            if not self._done.is_set():
+                self._callbacks.append(fn)
+                return
+        self._run_callback(fn)
+
+    def _run_callback(self, fn) -> None:
+        try:
+            fn(self)
+        except Exception:                       # noqa: BLE001
+            pass    # subscribers must not break fulfillment
+
+    def _fire_callbacks(self) -> None:
+        with self._cb_lock:
+            callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            self._run_callback(fn)
 
     def _claim(self) -> None:
         # BEFORE any mutation: a rejected double fulfillment must leave
@@ -95,6 +140,7 @@ class SimFuture:
         if execution is not None:
             self.execution = execution
         self._done.set()
+        self._fire_callbacks()
 
     def set_exception(self, exc: BaseException,
                       execution: Optional[dict] = None) -> None:
@@ -103,6 +149,7 @@ class SimFuture:
         if execution is not None:
             self.execution = execution
         self._done.set()
+        self._fire_callbacks()
 
     def result(self, timeout: Optional[float] = None):
         """Block until fulfilled; raises the server-side exception if the

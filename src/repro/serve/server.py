@@ -13,8 +13,8 @@ engine call:
   reproducibility mode.
 
 A compiled-executable cache keyed by (mode, stream name + registration
-version + shape, algorithm, T, W, static config, bucket size, sharded)
-makes steady-state traffic
+version + shape, algorithm, T, W, static config, scenario, bucket size,
+sharded) makes steady-state traffic
 re-use a handful of compiled programs: every key is built (and its
 program compiled) exactly once, then hit forever — the engine's own
 scan cache plus the fixed bucket shapes guarantee no retracing
@@ -144,7 +144,8 @@ class SimServer:
         self._lock = threading.Lock()
         self._stats = {"submitted": 0, "served": 0, "failed": 0,
                        "batches": 0, "batched_lanes": 0, "padded_lanes": 0,
-                       "exact_requests": 0, "sharded_batches": 0}
+                       "exact_requests": 0, "sharded_batches": 0,
+                       "dispatch_seq": 0}
 
     # -- tenant streams ---------------------------------------------------
 
@@ -179,12 +180,20 @@ class SimServer:
 
     def submit(self, algo: str, seed: int, *, T: int,
                budget: Optional[float] = None, stream: str = "default",
-               cfg=None, exact: bool = False):
+               cfg=None, exact: bool = False, scenario=None,
+               priority: int = 0):
         """Enqueue one simulation request; returns its ``SimFuture``.
 
-        Thread-safe.  Client-side mistakes (unknown stream/algo, bad T)
-        raise here, synchronously; server-side dispatch failures surface
-        through ``SimFuture.result()``.
+        Thread-safe.  Client-side mistakes (unknown stream/algo/scenario,
+        bad T) raise here, synchronously; server-side dispatch failures
+        surface through ``SimFuture.result()``.
+
+        ``scenario`` is a registered scenario name or a
+        ``repro.scenarios.Scenario`` (resolved here, so unknown names
+        fail the submitter, not a co-tenant's bucket); requests only
+        batch with requests running the same schedule.  ``priority``
+        (higher first) orders bucket dispatch — see
+        docs/serving.md#priority.
         """
         from .queue import SimRequest, SimFuture
         from .batcher import group_key
@@ -194,8 +203,12 @@ class SimServer:
                     f"unknown stream {stream!r}; registered: "
                     f"{sorted(self._streams)} (register_stream first)")
         budget = None if budget is None else float(budget)
+        if scenario is not None:
+            from repro.scenarios import resolve
+            scenario = resolve(scenario)
         req = SimRequest(algo=algo, seed=int(seed), T=int(T), budget=budget,
-                         stream=stream, cfg=cfg, exact=exact)
+                         stream=stream, cfg=cfg, exact=exact,
+                         scenario=scenario, priority=int(priority))
         try:
             group_key(req)          # exercises cfg.static_key/cfg.rates
         except Exception as exc:
@@ -279,16 +292,21 @@ class SimServer:
         from repro.federated import run_simulation_scan, run_batch
         from repro.federated.engine import batch_dispatch_plan
         from repro.federated.simulation import eval_window
+        with self._lock:
+            seq = self._stats["dispatch_seq"]
+            self._stats["dispatch_seq"] += 1
         meta = {"mode": "exact" if bucket.exact else "batched",
                 "bucket": bucket.size, "n_requests": bucket.n,
-                "n_padding": bucket.n_padding, "sharded": False}
+                "n_padding": bucket.n_padding, "sharded": False,
+                "seq": seq}
         try:
             stream, cfg, budgets = self._resolve(bucket)
             req0 = bucket.requests[0][0]
+            scenario = req0.scenario      # group key: shared by the bucket
             W = eval_window(cfg)
             base_key = (req0.stream, stream.version, stream.K,
                         stream.n_stream, req0.algo, req0.T, W,
-                        bucket.key[4])
+                        bucket.key[4], scenario)
             if bucket.exact:
                 key = ("exact", *base_key)
                 def build_exact():
@@ -296,7 +314,8 @@ class SimServer:
                         return run_simulation_scan(
                             req0.algo, stream.preds, stream.y, stream.costs,
                             req0.T, replace(cfg, seed=int(seed),
-                                            budget=float(budget)))
+                                            budget=float(budget)),
+                            scenario=scenario)
                     return run
                 run = self.cache.get_or_build(key, build_exact)
                 results = [run(r.seed, b) for (r, _), b
@@ -320,7 +339,8 @@ class SimServer:
                     def run(seeds, budgets):
                         return run_batch(
                             req0.algo, stream.preds, stream.y, stream.costs,
-                            req0.T, cfg, seeds, budgets, mesh=mesh)
+                            req0.T, cfg, seeds, budgets, mesh=mesh,
+                            scenario=scenario)
                     return run
                 run = self.cache.get_or_build(key, build_batched)
                 results = run(bucket.seeds(), budgets)[:bucket.n]

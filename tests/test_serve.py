@@ -361,6 +361,102 @@ def test_coalescing_under_concurrent_submission():
             assert other.identical_to(group[0]), f"seed {seed}"
 
 
+def test_plan_buckets_priority_order():
+    """Higher-priority buckets plan first; FIFO within a bucket and
+    within a priority class; priorities never share a bucket."""
+    cfg = SimConfig(budget=2.0)
+    items = _items(
+        [dict(algo="eflfg", seed=s, T=60, cfg=cfg, priority=0)
+         for s in range(2)]
+        + [dict(algo="eflfg", seed=s, T=60, cfg=cfg, priority=5)
+           for s in (7, 8)]
+        + [dict(algo="fedboost", seed=0, T=60, cfg=cfg, priority=5)]
+        + [dict(algo="eflfg", seed=9, T=60, cfg=cfg, priority=2)])
+    buckets = plan_buckets(items, max_batch=16)
+    assert [b.priority for b in buckets] == [5, 5, 2, 0]
+    # FIFO within the priority class: the eflfg pri-5 group arrived first
+    assert buckets[0].key[1] == "eflfg" and buckets[1].key[1] == "fedboost"
+    assert [r.seed for r, _ in buckets[0].requests] == [7, 8]
+    # group_key separates priorities (and scenarios) but not seeds
+    base = dict(algo="eflfg", seed=0, T=60)
+    assert group_key(SimRequest(**base)) != \
+        group_key(SimRequest(**{**base, "priority": 1}))
+
+
+def test_priority_orders_dispatch():
+    """Pre-queued mixed-priority traffic: the high-priority bucket's
+    dispatch sequence number comes first even though it was submitted
+    last (first slice of priority/deadline scheduling)."""
+    preds, y, costs = _stream()
+    T, cfg = 40, SimConfig(budget=2.0)
+    server = _server(preds, y, costs, max_batch=4, max_wait_ms=50.0)
+    client = SimClient(server)
+    low = client.submit_many(
+        [dict(algo="eflfg", seed=s, T=T, cfg=cfg, priority=0)
+         for s in range(2)])
+    high = client.submit_many(
+        [dict(algo="eflfg", seed=s, T=T, cfg=cfg, priority=9)
+         for s in range(2)])
+    with server:
+        results = [f.result(120) for f in low + high]
+    assert all(r.mse_curve.shape == (T,) for r in results)
+    assert high[0].execution["seq"] < low[0].execution["seq"]
+    # same (seed, cfg) bits whatever the priority class: ordering is a
+    # scheduling knob, not a program change
+    direct = run_batch("eflfg", preds, y, costs, T,
+                       SimConfig(budget=2.0, sweep_sharded=False),
+                       seeds=range(2))
+    for i in range(2):
+        assert low[i].result(1).identical_to(direct[i])
+        assert high[i].result(1).identical_to(direct[i])
+
+
+def test_aio_submit_awaits_results():
+    """The asyncio facade: submissions coalesce like a submit_many burst,
+    results await without a waiter thread per request, and server-side
+    errors re-raise in the awaiting task."""
+    import asyncio
+    preds, y, costs = _stream()
+    T, cfg = 40, SimConfig(budget=2.0)
+    n_before = threading.active_count()
+    with _server(preds, y, costs, max_batch=8,
+                 max_wait_ms=100.0) as server:
+        client = SimClient(server)
+
+        async def burst():
+            return await asyncio.gather(
+                *(client.aio_submit("eflfg", s, T=T, cfg=cfg)
+                  for s in range(4)))
+
+        results = asyncio.run(burst())
+        # no waiter thread per request: just the server dispatch thread
+        assert threading.active_count() <= n_before + 1
+    direct = run_batch("eflfg", preds, y, costs, T,
+                       SimConfig(budget=2.0, sweep_sharded=False),
+                       seeds=range(4))
+    for i in range(4):
+        assert results[i].identical_to(direct[i]), f"lane {i}"
+    assert server.stats()["batches"] == 1     # one coalesced bucket
+
+    async def failing():
+        return await SimClient(server).aio_submit(
+            "eflfg", 0, T=T, stream="ghost")
+    with pytest.raises(ValueError, match="unknown stream"):
+        asyncio.run(failing())
+
+
+def test_future_done_callbacks():
+    req = SimRequest(algo="eflfg", seed=0, T=10)
+    fut = SimFuture(req)
+    seen = []
+    fut.add_done_callback(lambda f: seen.append("early"))
+    fut.add_done_callback(lambda f: 1 / 0)      # must not break fulfillment
+    fut.set_result("ok")
+    assert seen == ["early"] and fut.result(0) == "ok"
+    fut.add_done_callback(lambda f: seen.append("late"))  # fires inline
+    assert seen == ["early", "late"]
+
+
 def test_run_batch_validation():
     preds, y, costs = _stream()
     with pytest.raises(ValueError, match="budgets"):
