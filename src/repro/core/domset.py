@@ -8,6 +8,10 @@ set of size ``O(alpha(G) ln K)`` (used in the regret bound discussion).
 
 The JAX path is a bounded ``lax.while_loop`` so it composes into the jitted
 round step; the NumPy path is the literal greedy algorithm (test oracle).
+Under ``vmap`` (every sweep/batch/serving path) a ``custom_vmap`` rule
+swaps in a batched-native loop — one flat while_loop over the batch with
+per-lane done masks and the greedy pick unrolled 2x per trip — bit-equal
+to per-lane solo calls (covered lanes execute masked no-op picks).
 """
 
 from __future__ import annotations
@@ -19,15 +23,13 @@ import jax.numpy as jnp
 
 __all__ = ["dominating_set", "dominating_set_np", "independence_number_np"]
 
+# See graph._BATCH_UNROLL: 2 greedy picks per batched while trip; extra
+# picks on converged lanes are masked no-ops, so unrolling is bit-safe.
+_BATCH_UNROLL = 2
 
-@jax.jit
-def dominating_set(adj: jnp.ndarray) -> jnp.ndarray:
-    """Greedy set cover.  ``adj[k, i]`` True iff i in N_out(k).
 
-    Returns a boolean mask (K,) of the chosen dominating set.  Every vertex
-    is covered: ``adj[D].any(axis=0)`` is all-True (self-loops guarantee
-    termination in at most K picks).
-    """
+@jax.custom_batching.custom_vmap
+def _ds(adj):
     K = adj.shape[0]
     adj_i = adj.astype(jnp.int32)
 
@@ -47,6 +49,53 @@ def dominating_set(adj: jnp.ndarray) -> jnp.ndarray:
     dom, _, _ = jax.lax.while_loop(lambda s: s[-1], body,
                                    (dom0, unc0, jnp.bool_(True)))
     return dom
+
+
+@_ds.def_vmap
+def _ds_batched(axis_size, in_batched, adj):
+    """Batched-native greedy set cover: per-lane done masks, bit-equal to
+    per-lane solo calls (pinned by ``tests/test_domset_policy.py``)."""
+    B = axis_size
+    if not in_batched[0]:
+        adj = jnp.broadcast_to(adj, (B,) + adj.shape)
+    K = adj.shape[-1]
+    rows = jnp.arange(K)
+    adj_i = adj.astype(jnp.int32)
+
+    def one(c):
+        dom, unc = c
+        gains = jnp.einsum("bkj,bj->bk", adj_i, unc)
+        gains = jnp.where(dom, -1, gains)
+        # a covered lane's pick is masked out of the one-hot: no-op trip
+        lane = jnp.any(unc > 0, axis=-1)
+        pick = jnp.argmax(gains, axis=-1)
+        onehot = (rows[None, :] == pick[:, None]) & lane[:, None]
+        dom = dom | onehot
+        row = jnp.einsum("bk,bkj->bj", onehot.astype(jnp.int32), adj_i)
+        unc = unc * (1 - row)
+        return dom, unc
+
+    def body(cc):
+        c, _ = cc
+        for _ in range(_BATCH_UNROLL):
+            c = one(c)
+        return c, jnp.any(c[1] > 0)
+
+    carry0 = (jnp.zeros((B, K), dtype=bool), jnp.ones((B, K), jnp.int32))
+    (dom, _), _ = jax.lax.while_loop(lambda cc: cc[1], body,
+                                     (carry0, jnp.bool_(True)))
+    return dom, True
+
+
+@jax.jit
+def dominating_set(adj: jnp.ndarray) -> jnp.ndarray:
+    """Greedy set cover.  ``adj[k, i]`` True iff i in N_out(k).
+
+    Returns a boolean mask (K,) of the chosen dominating set.  Every vertex
+    is covered: ``adj[D].any(axis=0)`` is all-True (self-loops guarantee
+    termination in at most K picks).
+    """
+    return _ds(adj)
 
 
 def dominating_set_np(adj: np.ndarray) -> np.ndarray:

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from .graph import feedback_graph, row_log_weight_sums
 from .domset import dominating_set
+from .numerics import ladder_sum
 from . import policy
 
 __all__ = ["EFLFGState", "EFLFGRoundOut", "init_state", "plan_round",
@@ -74,7 +75,7 @@ def plan_round(state: EFLFGState, key: jax.Array, costs: jnp.ndarray,
     drawn = policy.draw_node(key, p)
     sel = adj[drawn]
     mix = policy.ensemble_mix_weights(state.log_w, sel)
-    round_cost = jnp.sum(jnp.where(sel, costs, 0.0))
+    round_cost = ladder_sum(jnp.where(sel, costs, 0.0))
     return EFLFGRoundOut(adj, dom, p, drawn, sel, mix, round_cost,
                          state.log_w, iters)
 
@@ -96,7 +97,8 @@ def update_state(state: EFLFGState, plan: EFLFGRoundOut,
 
 
 def make_eflfg_scan_body(loss_fn, costs: jnp.ndarray, budget: jnp.ndarray,
-                         eta: jnp.ndarray, xi: jnp.ndarray):
+                         eta: jnp.ndarray, xi: jnp.ndarray,
+                         server_round=None):
     """Build a ``lax.scan`` body running one full Algorithm-2 round.
 
     ``loss_fn(plan, loss_carry, sched) -> (model_losses, ens_loss,
@@ -116,7 +118,16 @@ def make_eflfg_scan_body(loss_fn, costs: jnp.ndarray, budget: jnp.ndarray,
     The scan carry is ``(EFLFGState, prng_key, loss_carry)`` — the same
     key-splitting discipline as the reference Python loop, so a scan over
     rounds reproduces the loop draw-for-draw.
+
+    ``server_round`` swaps the server implementation: ``None`` composes
+    ``plan_round`` / ``update_state`` above, anything else must expose
+    ``.plan`` / ``.update`` with the same signatures — the Pallas-fused
+    ``repro.kernels.server_round.ops.fused_server_round()`` is the one
+    production alternative (``SimConfig.use_fused_server``), bit-equal
+    trajectories pinned by ``tests/test_server_round.py``.
     """
+    plan_fn = plan_round if server_round is None else server_round.plan
+    update_fn = update_state if server_round is None else server_round.update
 
     def body(carry, x):
         state, key, loss_carry = carry
@@ -126,10 +137,10 @@ def make_eflfg_scan_body(loss_fn, costs: jnp.ndarray, budget: jnp.ndarray,
         else:
             budget_t = budget * x.budget_scale
             sched = (x.active, x.label_shift)
-        plan = plan_round(state, kdraw, costs, budget_t, xi)
+        plan = plan_fn(state, kdraw, costs, budget_t, xi)
         model_losses, ens_loss, loss_carry, out = loss_fn(plan, loss_carry,
                                                           sched)
-        state = update_state(state, plan, model_losses, ens_loss, eta)
+        state = update_fn(state, plan, model_losses, ens_loss, eta)
         return (state, key, loss_carry), out
 
     return body

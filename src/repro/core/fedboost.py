@@ -23,6 +23,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .numerics import fma_fence, ladder_sum
+
 __all__ = ["FedBoostState", "fedboost_init", "fedboost_plan",
            "fedboost_update", "project_simplex", "make_fedboost_scan_body"]
 
@@ -64,9 +66,11 @@ def fedboost_plan(state: FedBoostState, key: jax.Array, costs: jnp.ndarray,
     # guarantee at least one transmitted model (highest current weight)
     best = jnp.argmax(state.alpha)
     sel = sel | ((jnp.arange(K) == best) & ~jnp.any(sel))
+    # ladder reductions (core.numerics) keep the mixing bit-identical to
+    # the fused client kernel's mix_weights_ref("linear")
     masked = jnp.where(sel, state.alpha, 0.0)
-    mix = masked / jnp.maximum(jnp.sum(masked), 1e-12)
-    cost = jnp.sum(jnp.where(sel, costs, 0.0))
+    mix = masked / jnp.maximum(ladder_sum(masked), 1e-12)
+    cost = ladder_sum(jnp.where(sel, costs, 0.0))
     return sel, pi, mix, cost
 
 
@@ -74,7 +78,11 @@ def fedboost_update(state: FedBoostState, sel: jnp.ndarray, pi: jnp.ndarray,
                     grad_alpha: jnp.ndarray, lr: jnp.ndarray) -> FedBoostState:
     """Projected SGD step with importance-weighted sparse gradients."""
     g = jnp.where(sel, grad_alpha / pi, 0.0)
-    alpha = project_simplex(state.alpha - lr * g)
+    # the fence pins lr*g to round before the subtraction in every
+    # program variant (vmap widths, shard_map partitions, fused kernels)
+    # — otherwise the backend may FMA-contract it in some programs but
+    # not others and alpha drifts an ulp between them (numerics.fma_fence)
+    alpha = project_simplex(state.alpha - fma_fence(lr * g))
     return FedBoostState(alpha=alpha, t=state.t + 1)
 
 

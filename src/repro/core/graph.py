@@ -17,8 +17,20 @@ The greedy loop is data dependent, so the JAX implementation is a bounded
 vertices simultaneously with (K, K) array ops — one eligibility
 evaluation per append step, no per-row loop machinery.  This runs inside
 the simulation engine's ``lax.scan`` hot path, where the flat single-loop
-form is severalfold faster than a ``vmap`` of per-row while loops.  A
-pure-NumPy reference (`feedback_graph_np`) mirrors the paper's
+form is severalfold faster than a ``vmap`` of per-row while loops.
+
+Under ``vmap`` (every sweep/batch/serving path) the builder does NOT go
+through JAX's generic while-loop batching: a ``custom_vmap`` rule swaps
+in a batched-native loop — one flat ``while_loop`` over the whole batch
+whose body advances all lanes with (B, K, K) ops, unrolled
+``_BATCH_UNROLL``x per trip to amortize loop machinery, with per-lane
+done masks so converged lanes execute masked no-ops and their
+``n_iters`` stop counting.  The rule is bit-equal to per-lane solo calls
+by construction: a lane's inactivity predicate is monotone (members,
+cost sums and weight sums only grow), so extra trips after a lane
+converges change nothing, and every reduction runs over K axes only.
+
+A pure-NumPy reference (`feedback_graph_np`) mirrors the paper's
 pseudo-code literally and is used as the oracle in property tests.
 
 Weights are carried in log space throughout the library: after many
@@ -35,7 +47,8 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.scipy.special import logsumexp
+
+from .numerics import ladder_logsumexp
 
 __all__ = [
     "feedback_graph",
@@ -44,6 +57,138 @@ __all__ = [
 ]
 
 _NEG_INF = -1e30
+
+# Inner unroll of the batched while body: 2 greedy appends per loop trip
+# halves the while-loop machinery overhead (measured ~1.2x on the batched
+# graph+domset scan) and stays bit-exact — appends past a lane's
+# convergence are masked no-ops, and the trip-parity slack only ever adds
+# such no-ops.
+_BATCH_UNROLL = 2
+
+
+def _graph_tables(log_w, costs, budget, log_w_prev_sums):
+    """Per-round precomputation shared by the solo and batched loops.
+
+    The while body runs on the scan engine's hot path, where every (K, K)
+    op costs ~1us of dispatch on CPU, so the log-space comparisons are
+    rewritten in exp space once:
+      eq. (3) argmax:  log_w_j - log(den) -> W_ROW[i, j] / den, with
+        ``W_ROW[i, j] = exp(log_w_j - shift_i)`` shifted per row by the
+        row's best *initially eligible* log-weight — so each row's
+        leading candidate scores ~1/den whatever the global weight
+        spread.  Within a row the shift is a constant positive factor:
+        the argmax is unchanged.
+      eq. (2) weight constraint:  logaddexp(W_i, log_w_j) <= lps_i + tol
+        ->  s_i + E_ij <= 1  with  s_i = exp(W_i - lps_i - tol) and
+        E_ij = exp(log_w_j - lps_i - tol); appending d_i advances the
+        row sum incrementally as  s_i += E[i, d_i]  (exact: exp turns
+        the log-sum into a plain sum).  lps = 1e30 (round 1) makes both
+        terms 0, disabling the constraint exactly as before.
+
+    Returns ``(E, s0, W_ROW)`` with shapes (K, K), (K,), (K, K).
+    """
+    K = log_w.shape[0]
+    thresh = log_w_prev_sums + 1e-6                        # fp tolerance
+    E = jnp.exp(log_w[None, :] - thresh[:, None])
+    s0 = jnp.exp(log_w - thresh)
+    # Row shift = the row's best log-weight among its round-start
+    # eligible set (self/over-budget/over-weight excluded).  Rows with no
+    # eligible candidate fall back to shift 0 (log_w <= 0 throughout the
+    # library, so exp stays bounded); they append nothing either way.
+    den0 = costs[:, None] + costs[None, :]
+    bad0 = (jnp.eye(K, dtype=bool) | (den0 > budget)
+            | (E > (1.0 - s0)[:, None]))
+    m = jnp.max(jnp.where(bad0, -jnp.inf, log_w[None, :]), axis=1)
+    shift = jnp.where(jnp.isfinite(m), m, 0.0)
+    W_ROW = jnp.exp(log_w[None, :] - shift[:, None])
+    return E, s0, W_ROW
+
+
+@jax.custom_batching.custom_vmap
+def _fg(log_w, costs, budget, log_w_prev_sums):
+    """Solo Algorithm 1: ``(K,) args -> (adjacency (K, K), n_iters)``."""
+    K = log_w.shape[0]
+    rows = jnp.arange(K)
+    E, s0, W_ROW = _graph_tables(log_w, costs, budget, log_w_prev_sums)
+
+    def body(carry):
+        mask, cost_sum, s, _, iters = carry
+        den = cost_sum[:, None] + costs[None, :]
+        # ineligibility folded into one sentinel chain: eligible ratios are
+        # >= 0 (W_ROW, den > 0), so -1 marks members/over-budget/over-weight
+        bad = mask | (den > budget) | (E > (1.0 - s)[:, None])
+        ratio = jnp.where(bad, -1.0, W_ROW / den)
+        best, idx = jax.lax.top_k(ratio, 1)                # one fused kernel
+        d = idx[:, 0]                                      # (K,) appends
+        active = best[:, 0] >= 0.0                         # any eligible?
+        # one-hot append instead of 2D scatter/gather (XLA CPU scatter is
+        # an order of magnitude slower than the fusable elementwise form)
+        upd = (rows[None, :] == d[:, None]) & active[:, None]
+        mask = mask | upd
+        cost_sum = cost_sum + jnp.where(active, costs[d], 0.0)
+        s = s + jnp.sum(jnp.where(upd, E, 0.0), axis=1)
+        any_active = jnp.any(active)
+        return (mask, cost_sum, s, any_active,
+                iters + any_active.astype(jnp.int32))
+
+    carry0 = (jnp.eye(K, dtype=bool),                      # self loops
+              costs, s0, jnp.bool_(True), jnp.int32(0))
+    mask, _, _, _, iters = jax.lax.while_loop(lambda c: c[3], body, carry0)
+    return mask, iters
+
+
+@_fg.def_vmap
+def _fg_batched(axis_size, in_batched, log_w, costs, budget,
+                log_w_prev_sums):
+    """Batched-native Algorithm 1: one flat while_loop over the batch.
+
+    Replaces JAX's generic while-loop batching (which would re-trace the
+    solo body under vmap) with a hand-batched loop: per-lane done masks,
+    ``_BATCH_UNROLL`` appends per trip, per-lane ``n_iters`` counters
+    that freeze on convergence.  Bit-equal to per-lane solo calls —
+    pinned by ``tests/test_feedback_graph.py``.
+    """
+    B = axis_size
+
+    def bcast(x, batched):
+        x = jnp.asarray(x)
+        return x if batched else jnp.broadcast_to(x, (B,) + x.shape)
+
+    log_w, costs, budget, lps = (
+        bcast(a, b) for a, b in zip(
+            (log_w, costs, budget, log_w_prev_sums), in_batched))
+    K = log_w.shape[-1]
+    rows = jnp.arange(K)
+    E, s0, W_ROW = jax.vmap(_graph_tables)(log_w, costs, budget, lps)
+
+    def one(c):
+        mask, cs, s, it = c
+        den = cs[..., None] + costs[:, None, :]
+        bad = (mask | (den > budget[:, None, None])
+               | (E > (1.0 - s)[..., None]))
+        ratio = jnp.where(bad, -1.0, W_ROW / den)
+        best, idx = jax.lax.top_k(ratio, 1)
+        d = idx[..., 0]                                    # (B, K)
+        active = best[..., 0] >= 0.0
+        upd = (rows[None, None, :] == d[..., None]) & active[..., None]
+        mask = mask | upd
+        cs = cs + jnp.where(active,
+                            jnp.take_along_axis(costs, d, axis=-1), 0.0)
+        s = s + jnp.sum(jnp.where(upd, E, 0.0), axis=-1)
+        it = it + jnp.any(active, axis=-1).astype(jnp.int32)
+        return (mask, cs, s, it), active
+
+    def body(cc):
+        c, _ = cc
+        for _ in range(_BATCH_UNROLL):
+            c, active = one(c)
+        return c, jnp.any(active)
+
+    carry0 = (jnp.tile(jnp.eye(K, dtype=bool)[None], (B, 1, 1)),
+              costs, s0, jnp.zeros((B,), jnp.int32))
+    (mask, _, _, iters), _ = jax.lax.while_loop(
+        lambda cc: cc[1], body, (carry0, jnp.bool_(True)))
+    return (mask, iters), (True, True)
 
 
 @functools.partial(jax.jit, static_argnames=("with_iters",))
@@ -60,24 +205,28 @@ def feedback_graph(log_w: jnp.ndarray, costs: jnp.ndarray, budget: jnp.ndarray,
     set is empty stop changing, and the loop exits once a full step
     appends nothing (at most K-1 productive steps + 1 no-op step).
 
-    ``with_iters`` exists for the lockstep-waste diagnostic: under
-    ``vmap`` (every sweep/batch path) the while_loop's trip count is the
-    *maximum* over the batched instances, so co-resident lanes idle
-    through ``max - own`` iterations each round.  ``n_iters`` is each
-    instance's OWN productive count — the engine records it per round
-    and ``SweepResult.lockstep_waste`` aggregates the idle iterations
-    (the documented graph-builder-batching limitation, now measurable;
-    docs/architecture.md#known-limitations).
+    Under ``vmap`` (every sweep/batch/serving path) a ``custom_vmap``
+    rule swaps in the batched-native loop (module docstring): converged
+    lanes ride as masked no-ops instead of re-running the solo body, and
+    results stay bit-equal to per-lane solo calls.  ``n_iters`` is each
+    instance's OWN productive count either way — the engine records it
+    per round and ``SweepResult.lockstep_waste`` aggregates the residual
+    idle iterations of co-scheduled lanes
+    (docs/architecture.md#known-limitations).
 
     Precision note: the exp-space form trades the log-space form's
-    unbounded dynamic range for speed.  Models trailing the leading
-    weight by more than ~80 nats have ``w_lin`` underflow to 0, so the
-    eq.-(3) argmax among *only such* candidates degenerates to
-    lowest-index (they stay eligible and still join the neighborhood).
-    At the paper's horizons the weight spread stays far below that
-    (~45 nats at T=2000) and such models carry negligible eq.-(5)
-    mixture weight anyway; for extreme horizons, re-derive eta or shard
-    the run before the spread approaches float32 exp range.
+    unbounded dynamic range for speed.  The eq.-(3) scores are max-shifted
+    *per source row* by the row's best initially-eligible log-weight, so
+    a high-weight but ineligible leader (over budget, already a member)
+    cannot underflow the scores of the candidates that actually compete.
+    The residual degeneracy is narrow: candidates trailing their own
+    row's best eligible candidate by more than ~88 nats underflow to a
+    0 score and that argmax falls back to lowest-index (they stay
+    eligible and still join the neighborhood).  At the paper's horizons
+    the spread stays far below that (~45 nats at T=2000) and such models
+    carry negligible eq.-(5) mixture weight anyway; for extreme horizons,
+    re-derive eta or shard the run before the spread approaches float32
+    exp range.
 
     Args:
       log_w: (K,) log confidence weights ``log w_{k,t}``.
@@ -88,60 +237,8 @@ def feedback_graph(log_w: jnp.ndarray, costs: jnp.ndarray, budget: jnp.ndarray,
         disables the weight constraint exactly as the paper's t=1 round
         (where no previous neighborhood exists).
     """
-    K = log_w.shape[0]
-    rows = jnp.arange(K)
-
-    # Per-round precomputation; the while body runs on the scan engine's
-    # hot path, where every (K, K) op costs ~1us of dispatch on CPU, so
-    # the log-space comparisons are rewritten in exp space once:
-    #   eq. (3) argmax:  log_w_j - log(den) -> w_lin_j / den  (max-shifted
-    #     so the leading weight is 1; ratios scale uniformly, argmax
-    #     unchanged),
-    #   eq. (2) weight constraint:  logaddexp(W_i, log_w_j) <= lps_i + tol
-    #     ->  s_i + E_ij <= 1  with  s_i = exp(W_i - lps_i - tol) and
-    #     E_ij = exp(log_w_j - lps_i - tol); appending d_i advances the
-    #     row sum incrementally as  s_i += E[i, d_i]  (exact: exp turns
-    #     the log-sum into a plain sum).  lps = 1e30 (round 1) makes both
-    #     terms 0, disabling the constraint exactly as before.
-    w_lin = jnp.exp(log_w - jnp.max(log_w))
-    thresh = log_w_prev_sums + 1e-6                        # fp tolerance
-    E = jnp.exp(log_w[None, :] - thresh[:, None])
-
-    def step(mask, cost_sum, s):
-        den = cost_sum[:, None] + costs[None, :]
-        # ineligibility folded into one sentinel chain: eligible ratios are
-        # >= 0 (w_lin, den > 0), so -1 marks members/over-budget/over-weight
-        bad = mask | (den > budget) | (E > (1.0 - s)[:, None])
-        ratio = jnp.where(bad, -1.0, w_lin[None, :] / den)
-        best, idx = jax.lax.top_k(ratio, 1)                # one fused kernel
-        d = idx[:, 0]                                      # (K,) appends
-        active = best[:, 0] >= 0.0                         # any eligible?
-        # one-hot append instead of 2D scatter/gather (XLA CPU scatter is
-        # an order of magnitude slower than the fusable elementwise form)
-        upd = (rows[None, :] == d[:, None]) & active[:, None]
-        mask = mask | upd
-        cost_sum = cost_sum + jnp.where(active, costs[d], 0.0)
-        s = s + jnp.sum(jnp.where(upd, E, 0.0), axis=1)
-        return mask, cost_sum, s, jnp.any(active)
-
-    carry0 = (jnp.eye(K, dtype=bool),                      # self loops
-              costs, jnp.exp(log_w - thresh), jnp.bool_(True))
-    if with_iters:
-        def body(carry):
-            mask, cost_sum, s, _, iters = carry
-            mask, cost_sum, s, any_active = step(mask, cost_sum, s)
-            return (mask, cost_sum, s, any_active,
-                    iters + any_active.astype(jnp.int32))
-        mask, _, _, _, iters = jax.lax.while_loop(
-            lambda c: c[3], body, carry0 + (jnp.int32(0),))
-        return mask, iters
-
-    def body(carry):
-        mask, cost_sum, s, _ = carry
-        return step(mask, cost_sum, s)
-
-    mask, _, _, _ = jax.lax.while_loop(lambda c: c[-1], body, carry0)
-    return mask
+    mask, iters = _fg(log_w, costs, jnp.asarray(budget), log_w_prev_sums)
+    return (mask, iters) if with_iters else mask
 
 
 def row_log_weight_sums(adj: jnp.ndarray, log_w: jnp.ndarray) -> jnp.ndarray:
@@ -150,9 +247,11 @@ def row_log_weight_sums(adj: jnp.ndarray, log_w: jnp.ndarray) -> jnp.ndarray:
     Per-row masked logsumexp — the per-row max shift is what keeps this
     exact at any weight spread (a global-max shift underflows rows far
     below the leader to log(0)); it runs once per round, so the extra
-    (K, K) ops are not on the greedy loop's per-trip hot path."""
+    (K, K) ops are not on the greedy loop's per-trip hot path.  The inner
+    sum is a fixed-order ladder (``core.numerics``) so the fused server
+    kernel reproduces it bit-for-bit."""
     masked = jnp.where(adj, log_w[None, :], _NEG_INF)
-    return logsumexp(masked, axis=1)
+    return ladder_logsumexp(masked, axis=1)
 
 
 # ---------------------------------------------------------------------------

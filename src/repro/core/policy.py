@@ -9,7 +9,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.scipy.special import logsumexp
+
+from .numerics import (fma_fence, ladder_logsumexp, ladder_matvec,
+                       ladder_sum)
 
 __all__ = [
     "pmf",
@@ -23,12 +25,17 @@ __all__ = [
 
 def pmf(log_u: jnp.ndarray, dom: jnp.ndarray, xi: jnp.ndarray) -> jnp.ndarray:
     """Eq. (4): p_k = (1-xi) u_k / U + xi / |D| * I(k in D)."""
-    exploit = jnp.exp(log_u - logsumexp(log_u))
+    exploit = jnp.exp(log_u - ladder_logsumexp(log_u))
     dsize = jnp.sum(dom)
     explore = dom.astype(exploit.dtype) / jnp.maximum(dsize, 1)
-    p = (1.0 - xi) * exploit + xi * explore
+    # the fences pin the two products to round before the mixture add:
+    # without them XLA/LLVM may contract one into an FMA in some fusion
+    # contexts (vmapped vs flat, fused kernel vs unfused) and the mixture
+    # drifts an ulp between program variants (see numerics.fma_fence)
+    p = fma_fence((1.0 - xi) * exploit) + fma_fence(xi * explore)
     # guard: renormalize away accumulated fp error so sampling is exact
-    return p / jnp.sum(p)
+    # (ladder reductions keep the bits identical inside the fused kernel)
+    return p / ladder_sum(p)
 
 
 def draw_node(key: jax.Array, p: jnp.ndarray) -> jnp.ndarray:
@@ -39,13 +46,13 @@ def draw_node(key: jax.Array, p: jnp.ndarray) -> jnp.ndarray:
 def ensemble_mix_weights(log_w: jnp.ndarray, sel: jnp.ndarray) -> jnp.ndarray:
     """Eq. (5) mixture weights: w_k / W_t restricted to the selected set."""
     masked = jnp.where(sel, log_w, -jnp.inf)
-    return jnp.exp(masked - logsumexp(masked))
+    return jnp.exp(masked - ladder_logsumexp(masked))
 
 
 def observation_probs(adj: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
     """Eq. (7): q_k = sum_{j in N_in(k)} p_j.  adj[j, i] == i in N_out(j),
     so N_in(k) = {j : adj[j, k]} and q = p @ adj."""
-    return p @ adj.astype(p.dtype)
+    return ladder_matvec(p, adj.astype(p.dtype))
 
 
 def is_loss_estimates(model_losses: jnp.ndarray, ens_loss: jnp.ndarray,
@@ -72,5 +79,13 @@ def is_loss_estimates(model_losses: jnp.ndarray, ens_loss: jnp.ndarray,
 
 def exp_weight_update(log_v: jnp.ndarray, eta: jnp.ndarray,
                       ell: jnp.ndarray) -> jnp.ndarray:
-    """Eq. (9) in log space: log v_{t+1} = log v_t - eta * ell."""
-    return log_v - eta * ell
+    """Eq. (9) in log space: log v_{t+1} = log v_t - eta * ell.
+
+    The fence forces the product to round before the subtraction in
+    every program variant — otherwise XLA/LLVM contracts ``mul`` +
+    ``sub`` into an FMA in some fusion contexts but not others (the
+    vmapped interpret-mode Pallas grid contracts even through an
+    ``optimization_barrier``), and the weight state — which feeds back
+    into every later round's selection — drifts an ulp between the
+    fused kernel and the unfused scan."""
+    return log_v - fma_fence(eta * ell)

@@ -51,7 +51,7 @@ from . import sweep_sharding
 from .simulation import SimConfig, SimResult, eval_window, make_round_body
 
 __all__ = ["run_simulation_scan", "run_batch", "batch_dispatch_plan",
-           "run_sweep", "run_sweep_sharded", "SweepResult"]
+           "batch_buckets", "run_sweep", "run_sweep_sharded", "SweepResult"]
 
 
 # Compiled scans are cached per configuration: the stream data, PRNG key
@@ -301,6 +301,14 @@ def run_batch(algo: str, preds, y, costs, T: int, cfg: SimConfig,
     client-evaluation program and batch lanes would no longer match
     their vmapped bits.
 
+    On the vmap path, EFL-FG batches with heterogeneous budgets are
+    additionally *budget-compacted* (``batch_buckets``): lanes are
+    regrouped into one dispatch per distinct budget (each of width
+    >= 2), so a bucket's graph-builder loop runs only its own trip
+    count instead of the whole batch's worst case.  Lane bits are
+    unchanged — batched-family invariance again — and results are
+    reassembled in lane order.
+
     Determinism: lane results are bit-equal to the same configuration
     embedded in any other batch of width >= 2 (and to the ``run_sweep``
     vmap path), and float32-close — NOT bit-equal — to a solo
@@ -337,10 +345,31 @@ def run_batch(algo: str, preds, y, costs, T: int, cfg: SimConfig,
         outs = jax.tree.map(lambda a: np.asarray(a)[:n], outs)
     else:
         fn = _get_scan(algo, T, cfg, sweep="flat", scheduled=scheduled)
-        outs = jax.tree.map(np.asarray,
-                            fn(preds, y, costs, keys, budgets_j,
-                               comp.arrays) if scheduled
-                            else fn(preds, y, costs, keys, budgets_j))
+
+        def dispatch(ks, bs):
+            return jax.tree.map(
+                np.asarray,
+                fn(preds, y, costs, ks, bs, comp.arrays) if scheduled
+                else fn(preds, y, costs, ks, bs))
+
+        buckets = batch_buckets(algo, budgets)
+        if buckets is None:
+            outs = dispatch(keys, budgets_j)
+        else:
+            # budget-compacted dispatch: one flat program per budget
+            # bucket, so each bucket's graph loop runs only ITS max trip
+            # count instead of the whole batch's.  Every bucket has
+            # width >= 2, so lane bits are unchanged (batched-family
+            # invariance) — reassembly below restores lane order.
+            outs = None
+            for idx in buckets:
+                sel = jnp.asarray(idx)
+                o = dispatch(keys[sel], budgets_j[sel])
+                if outs is None:
+                    outs = {k: np.empty((n,) + v.shape[1:], v.dtype)
+                            for k, v in o.items()}
+                for k, v in o.items():
+                    outs[k][idx] = v
     scale = comp.scale if scheduled else 1.0
     return [_to_result(jax.tree.map(lambda a: a[i], outs), T,
                        budgets[i] * scale, algo)
@@ -400,6 +429,40 @@ def batch_dispatch_plan(cfg: SimConfig, n: int, mesh=None):
             f"batch at least {2 * n_sweep} lanes, shrink the mesh, or "
             "drop the forced sharding")
     return True, mesh
+
+
+def batch_buckets(algo: str, budgets: Sequence[float]):
+    """Budget-compaction plan for a flat (vmapped) ``run_batch``.
+
+    Returns a list of lane-index lists — one bucket per distinct budget,
+    in ascending budget order — or ``None`` when the batch should stay a
+    single dispatch.  Bucketing only pays when the round body contains a
+    data-dependent loop whose trip count grows with the budget (EFL-FG's
+    Algorithm-1 builder: bigger budgets append more nodes), so a batch
+    mixing tight- and loose-budget lanes pays every round for the loosest
+    lane's trips.  Splitting by budget lets each bucket's ``while_loop``
+    stop at its OWN max.  ``None`` is returned when:
+
+    * ``algo`` has no such loop (FedBoost), or
+    * budgets are uniform (nothing to compact — and on uniform traffic
+      the extra dispatches are pure overhead), or
+    * any bucket would have width 1: a width-1 vmap compiles the SOLO
+      program family, so the lane's bits would depend on its co-tenants'
+      budgets — the exact load-dependence the batched-family guarantee
+      (docs/serving.md#determinism) rules out.  Lone-budget lanes ride
+      the single mixed dispatch instead, which is bit-identical.
+
+    Exposed (rather than inlined in ``run_batch``) so the serving layer
+    can report the compaction in its dispatch metadata.
+    """
+    if algo != "eflfg":
+        return None
+    groups: dict = {}
+    for i, b in enumerate(budgets):
+        groups.setdefault(float(b), []).append(i)
+    if len(groups) < 2 or any(len(v) < 2 for v in groups.values()):
+        return None
+    return [groups[b] for b in sorted(groups)]
 
 
 class SweepResult:

@@ -31,6 +31,8 @@ try:  # jax >= 0.5 exports shard_map at top level
 except ImportError:  # jax 0.4.x keeps it in jax.experimental
     from jax.experimental.shard_map import shard_map
 
+from repro.core.numerics import ladder_matvec, ladder_sum
+
 __all__ = ["sharded_round_losses", "sharded_window_eval", "make_client_eval"]
 
 
@@ -138,29 +140,32 @@ def sharded_window_eval(preds: jnp.ndarray, y: jnp.ndarray,
     sq = (p_cl - y_cl[None, :]) ** 2
     ml_chunk = jnp.where(cmask[None, :],
                          jnp.minimum(sq / loss_scale, 1.0), 0.0)
-    yhat = mix @ p_cl
+    # ladder reductions (core.numerics) exactly mirror
+    # simulation.client_window_losses: the K-axis ladder is per-position,
+    # so computing yhat on the chunk equals computing it full-width
+    yhat = ladder_matvec(mix, p_cl)
     ens_sq_chunk = jnp.where(cmask, (yhat - y_cl) ** 2, 0.0)
     # uplink: device-order tiled gather reassembles the full window layout
     ml = jax.lax.all_gather(ml_chunk, axis, axis=1, tiled=True)  # (K, W)
     ens_sq = jax.lax.all_gather(ens_sq_chunk, axis, axis=0, tiled=True)
-    model_losses = ml.sum(1)
+    model_losses = ladder_sum(ml, axis=1)
     if active is None:
         n_eff = n_t
     else:
         cm = jax.lax.all_gather(cmask, axis, axis=0, tiled=True)  # (W,)
         n_eff = jnp.maximum(jnp.sum(cm), 1)
-    ens_sq_mean = ens_sq.sum() / n_eff.astype(ens_sq.dtype)
-    ens_loss = jnp.minimum(ens_sq / loss_scale, 1.0).sum()
+    ens_sq_mean = ladder_sum(ens_sq) / n_eff.astype(ens_sq.dtype)
+    ens_loss = ladder_sum(jnp.minimum(ens_sq / loss_scale, 1.0))
     grad = None
     if with_grad:
         resid_chunk = jnp.where(cmask, yhat - y_cl, 0.0)
         resid = jax.lax.all_gather(resid_chunk, axis, axis=0, tiled=True)
         # preds is replicated, so the full-window prediction gather is a
         # local lookup — no collective needed, and the values (hence the
-        # matmul) are bit-identical to gathering the chunks.
+        # ladder products) are bit-identical to gathering the chunks.
         idx_full = (cursor + jnp.arange(window)) % n_stream
         grad = (2.0 / n_eff.astype(resid.dtype)) \
-            * (preds[:, idx_full] @ resid)
+            * ladder_sum(preds[:, idx_full] * resid[None, :], axis=1)
     return ens_sq_mean, ens_loss, model_losses, grad
 
 

@@ -50,6 +50,7 @@ from repro.core import (init_state, fedboost_init,
                         make_eflfg_scan_body, make_fedboost_scan_body,
                         regret_init, regret_update, regret_value,
                         RegretTracker)
+from repro.core.numerics import ladder_matvec, ladder_sum
 from repro.kernels.client_eval import ops as client_eval_ops
 
 __all__ = ["SimConfig", "SimResult", "run_simulation_reference",
@@ -72,6 +73,13 @@ class SimConfig:
                                       # per round) vs the unfused ~6-op path;
                                       # trajectories agree (float32, pinned
                                       # by tests/test_client_eval.py)
+    use_fused_server: bool = False    # Pallas-fused EFL-FG server round
+                                      # (repro.kernels.server_round: two
+                                      # launches per round) vs the unfused
+                                      # plan_round/update_state ops; bit-equal
+                                      # trajectories pinned by
+                                      # tests/test_server_round.py.  No-op
+                                      # for FedBoost.
     sweep_sharded: Optional[bool] = None  # run_sweep dispatch: None = auto
                                       # (shard over the device mesh when >1
                                       # device is visible), True = force the
@@ -93,7 +101,7 @@ class SimConfig:
         mirrored tuples would silently batch incompatible requests)."""
         return (self.n_clients, self.clients_per_round, self.loss_scale,
                 self.uplink_bandwidth, self.loss_bandwidth, self.use_fused,
-                self.rates(T))
+                self.use_fused_server, self.rates(T))
 
 
 @dataclass
@@ -208,14 +216,18 @@ def client_window_losses(preds: jnp.ndarray, y: jnp.ndarray,
     if shift is not None:
         y_cl = y_cl + shift
     sq = (p_cl - y_cl[None, :]) ** 2               # per-model sq errors
-    model_losses = jnp.where(cmask[None, :],
-                             jnp.minimum(sq / loss_scale, 1.0), 0.0).sum(1)
-    yhat = mix @ p_cl                              # true ensemble prediction
+    # ladder reductions (core.numerics): client losses feed back into the
+    # server weight state, so their accumulation order must be identical
+    # across every program variant (unfused / fused kernels / vmapped)
+    model_losses = ladder_sum(
+        jnp.where(cmask[None, :], jnp.minimum(sq / loss_scale, 1.0), 0.0),
+        axis=1)
+    yhat = ladder_matvec(mix, p_cl)                # true ensemble prediction
     ens_sq = jnp.where(cmask, (yhat - y_cl) ** 2, 0.0)
     n_eff = (n_t if active is None
              else jnp.maximum(jnp.sum(cmask), 1))
-    ens_sq_mean = ens_sq.sum() / n_eff.astype(ens_sq.dtype)
-    ens_loss = jnp.minimum(ens_sq / loss_scale, 1.0).sum()
+    ens_sq_mean = ladder_sum(ens_sq) / n_eff.astype(ens_sq.dtype)
+    ens_loss = ladder_sum(jnp.minimum(ens_sq / loss_scale, 1.0))
     return ens_sq_mean, ens_loss, model_losses
 
 
@@ -238,10 +250,11 @@ def fedboost_window_grad(preds: jnp.ndarray, y: jnp.ndarray,
     y_cl = y[idx]
     if shift is not None:
         y_cl = y_cl + shift
-    resid = jnp.where(cmask, mix @ p_cl - y_cl, 0.0)
+    resid = jnp.where(cmask, ladder_matvec(mix, p_cl) - y_cl, 0.0)
     n_eff = (n_t if active is None
              else jnp.maximum(jnp.sum(cmask), 1))
-    return (2.0 / n_eff.astype(resid.dtype)) * (p_cl @ resid)
+    return (2.0 / n_eff.astype(resid.dtype)) * ladder_sum(
+        p_cl * resid[None, :], axis=1)
 
 
 def _eflfg_loss_fn(evaluate, cfg, n_stream):
@@ -428,8 +441,13 @@ def make_round_body(algo: str, preds, y, costs, cfg: SimConfig, budget,
         fused = cfg.use_fused and W <= n_stream
         evaluate = _make_evaluate(algo, fused, preds, y, cfg, W, ext)
     if algo == "eflfg":
+        server_round = None
+        if cfg.use_fused_server:
+            from repro.kernels.server_round import ops as server_round_ops
+            server_round = server_round_ops.fused_server_round()
         body = make_eflfg_scan_body(_eflfg_loss_fn(evaluate, cfg, n_stream),
-                                    costs, budget, eta, xi)
+                                    costs, budget, eta, xi,
+                                    server_round=server_round)
         algo_init = lambda: init_state(K)
     else:
         body = make_fedboost_scan_body(
@@ -494,7 +512,8 @@ def _get_step(algo: str, cfg: SimConfig, eta: float, xi: float):
     # constants identically in both programs and trajectories stay
     # bit-identical between the two execution paths.
     key = (algo, cfg.n_clients, cfg.clients_per_round, cfg.loss_scale,
-           cfg.uplink_bandwidth, cfg.loss_bandwidth, cfg.use_fused, eta, xi)
+           cfg.uplink_bandwidth, cfg.loss_bandwidth, cfg.use_fused,
+           cfg.use_fused_server, eta, xi)
     fn = _STEP_CACHE.get(key)
     if fn is None:
         eta_j, xi_j = jnp.float32(eta), jnp.float32(xi)

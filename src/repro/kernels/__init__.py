@@ -3,6 +3,9 @@
   ensemble_combine  eq. (5) masked weighted expert mixing
   client_eval       fused per-round client evaluation (gather + eq.-(5)
                     mixing + window losses + FedBoost grad, one launch)
+  server_round      fused EFL-FG server round (Algorithm-1 graph +
+                    dominating set + PMF/draw + eq.-(9) updates, two
+                    launches around the client exchange)
   kernel_gram       fused kernel-regression predict (client hot path)
   flash_attention   GQA/causal/sliding-window attention (arch substrate)
 
@@ -12,8 +15,9 @@ dispatch), ref.py (pure-jnp oracle used by the allclose test sweeps).
 
 from .ensemble_combine import ops as ensemble_combine_ops
 from .client_eval import ops as client_eval_ops
+from .server_round import ops as server_round_ops
 from .kernel_gram import ops as kernel_gram_ops
 from .flash_attention import ops as flash_attention_ops
 
-__all__ = ["ensemble_combine_ops", "client_eval_ops", "kernel_gram_ops",
-           "flash_attention_ops"]
+__all__ = ["ensemble_combine_ops", "client_eval_ops", "server_round_ops",
+           "kernel_gram_ops", "flash_attention_ops"]

@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.numerics import ladder_matvec, ladder_sum
+
 from .ref import WEIGHTINGS, mix_weights_ref
 
 __all__ = ["client_eval_pallas"]
@@ -73,11 +75,19 @@ def _client_eval_kernel(preds_ref, y_ref, cursor_ref, nt_ref, w_ref,
     mix_ref[...] = mix.astype(mix_ref.dtype)
 
     sq = (pw - yw) ** 2                                 # (K, W) broadcast
-    ml = jnp.where(cmask, jnp.minimum(sq / loss_scale, 1.0), 0.0).sum(
-        axis=1)                                         # (K,)
+    # ladder reductions: same fixed add tree as the unfused
+    # ``client_window_losses`` (see repro.core.numerics) so the two
+    # execution strategies stay bit-equal in every fusion context
+    ml = ladder_sum(
+        jnp.where(cmask, jnp.minimum(sq / loss_scale, 1.0), 0.0), axis=1)
     ml_ref[...] = ml[None, :].astype(ml_ref.dtype)
 
-    yhat = jnp.dot(mix, pw, preferred_element_type=jnp.float32)  # (1, W)
+    if interpret:
+        yhat = ladder_matvec(mix, pw)                   # (1, W)
+    else:
+        # MXU-friendly contraction for compiled TPU (never
+        # bit-comparable to the CPU path in the first place)
+        yhat = jnp.dot(mix, pw, preferred_element_type=jnp.float32)
     ens_sq = jnp.where(cmask, (yhat - yw) ** 2, 0.0)
     if active_ref is None:
         nf = n_t.astype(ens_sq.dtype)
@@ -86,19 +96,19 @@ def _client_eval_kernel(preds_ref, y_ref, cursor_ref, nt_ref, w_ref,
         # slot 0 is always compiled active, see Participation.mask)
         nf = jnp.maximum(jnp.sum(cmask.astype(jnp.int32)), 1).astype(
             ens_sq.dtype)
-    ens_sq_mean = ens_sq.sum() / nf
-    ens_norm = jnp.minimum(ens_sq / loss_scale, 1.0).sum()
+    ens_sq_mean = ladder_sum(ens_sq[0]) / nf
+    ens_norm = ladder_sum(jnp.minimum(ens_sq[0] / loss_scale, 1.0))
     scal_ref[...] = jnp.stack([ens_sq_mean, ens_norm]).reshape(1, 2).astype(
         scal_ref.dtype)
 
     if with_grad:
         resid = jnp.where(cmask, yhat - yw, 0.0)        # (1, W)
         if interpret:
-            # Rank-1 matvec, the *same* contraction the unfused
-            # ``p_cl @ resid`` lowers to on CPU: anything else is 1 ulp
-            # off, and the FedBoost alpha trajectory feeds back on
-            # itself, amplifying that ulp over rounds.
-            grad = (2.0 / nf) * jnp.dot(pw, resid[0])
+            # Same fixed-order ladder contraction as the unfused
+            # ``fedboost_window_grad``: the FedBoost alpha trajectory
+            # feeds back on itself, so even a 1-ulp difference here
+            # amplifies over rounds.
+            grad = (2.0 / nf) * ladder_sum(pw * resid, axis=1)
             grad_ref[...] = grad[None, :].astype(grad_ref.dtype)
         else:
             # MXU-friendly rank-2 form for compiled TPU (which is never

@@ -31,7 +31,8 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 from jax import lax
-from jax.scipy.special import logsumexp
+
+from repro.core.numerics import ladder_logsumexp, ladder_matvec, ladder_sum
 
 __all__ = ["ClientEvalOut", "WEIGHTINGS", "mix_weights_ref",
            "client_eval_ref", "extend_stream"]
@@ -59,10 +60,10 @@ def mix_weights_ref(w: jnp.ndarray, sel: jnp.ndarray,
     """
     if weighting == "log":
         masked = jnp.where(sel, w, -jnp.inf)
-        return jnp.exp(masked - logsumexp(masked))
+        return jnp.exp(masked - ladder_logsumexp(masked))
     if weighting == "linear":
         masked = jnp.where(sel, w, 0.0)
-        return masked / jnp.maximum(jnp.sum(masked), 1e-12)
+        return masked / jnp.maximum(ladder_sum(masked), 1e-12)
     if weighting == "none":
         return w
     raise ValueError(f"unknown weighting {weighting!r}")
@@ -116,16 +117,17 @@ def client_eval_ref(preds_ext: jnp.ndarray, y_ext: jnp.ndarray,
         y_cl = y_cl + shift
     mix = mix_weights_ref(w, sel, weighting).astype(p_cl.dtype)
     sq = (p_cl - y_cl[None, :]) ** 2
-    model_losses = jnp.where(cmask[None, :],
-                             jnp.minimum(sq / loss_scale, 1.0), 0.0).sum(1)
-    yhat = mix @ p_cl
+    model_losses = ladder_sum(
+        jnp.where(cmask[None, :], jnp.minimum(sq / loss_scale, 1.0), 0.0),
+        axis=1)
+    yhat = ladder_matvec(mix, p_cl)
     ens_sq = jnp.where(cmask, (yhat - y_cl) ** 2, 0.0)
     if active is None:
         nf = n_t.astype(ens_sq.dtype)
     else:
         nf = jnp.maximum(jnp.sum(cmask), 1).astype(ens_sq.dtype)
-    ens_sq_mean = ens_sq.sum() / nf
-    ens_norm = jnp.minimum(ens_sq / loss_scale, 1.0).sum()
+    ens_sq_mean = ladder_sum(ens_sq) / nf
+    ens_norm = ladder_sum(jnp.minimum(ens_sq / loss_scale, 1.0))
     resid = jnp.where(cmask, yhat - y_cl, 0.0)
-    grad = (2.0 / nf) * (p_cl @ resid)
+    grad = (2.0 / nf) * ladder_sum(p_cl * resid[None, :], axis=1)
     return ClientEvalOut(mix, ens_sq_mean, ens_norm, model_losses, grad)

@@ -290,7 +290,7 @@ class SimServer:
 
     def _dispatch(self, bucket) -> None:
         from repro.federated import run_simulation_scan, run_batch
-        from repro.federated.engine import batch_dispatch_plan
+        from repro.federated.engine import batch_buckets, batch_dispatch_plan
         from repro.federated.simulation import eval_window
         with self._lock:
             seq = self._stats["dispatch_seq"]
@@ -334,6 +334,11 @@ class SimServer:
                         mesh = None
                 sharded, mesh = batch_dispatch_plan(cfg, bucket.size, mesh)
                 meta["sharded"] = sharded
+                # budget compaction happens inside run_batch on the vmap
+                # path; surface the plan so clients can see how their
+                # lane was grouped (None = single mixed dispatch)
+                meta["budget_buckets"] = (None if sharded else
+                                          batch_buckets(req0.algo, budgets))
                 key = ("batched", *base_key, bucket.size, sharded)
                 def build_batched():
                     def run(seeds, budgets):

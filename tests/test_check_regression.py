@@ -1,0 +1,179 @@
+"""Unit tests for the benchmark regression gate's decision logic.
+
+Everything here runs over synthetic records — no benchmark is executed.
+The load-bearing pins:
+
+* serve/sharded determinism flags are judged on the fresh run alone and
+  fail HARD even when the baseline lacks the section (the historical bug
+  skipped them with a warning, the way timing-noise cells below the
+  floor are skipped — but flags are load-independent and must fail
+  deterministically);
+* hard failures are never retryable, timing failures are;
+* a retry re-measures only the sections whose own cells are failing;
+* the absolute ``SERVE_MIN_SPEEDUP`` throughput floor gates the fresh
+  run's batched/serial ratio with or without a baseline section.
+"""
+
+from __future__ import annotations
+
+import copy
+
+import pytest
+
+from benchmarks.check_regression import (SERVE_MIN_SPEEDUP, check,
+                                         check_serve, check_sharded,
+                                         retry_skips, retryable,
+                                         _merge_best)
+
+THRESHOLD = 0.30
+
+
+def _algo_cell(ref=1.0):
+    return {
+        "t_reference_s": ref, "t_scan_s": 0.4 * ref,
+        "t_scan_unfused_s": 0.5 * ref, "t_sweep8_s": 2.0 * ref,
+        "t_loop_baseline_s": 3.0 * ref,
+        "trajectories_identical": True,
+        "fused_trajectories_identical": True,
+    }
+
+
+def _serve_cell(rel, serial=0.5):
+    return {
+        "t_serial_s": serial, "t_batched_s": rel * serial, "rel": rel,
+        "served_equals_sweep": True, "exact_equals_direct": True,
+    }
+
+
+def _sharded_cell(rel=0.8, vmap=0.5):
+    return {
+        "t_sweep_vmap_s": vmap, "t_sweep_sharded_s": rel * vmap,
+        "rel": rel, "trajectories_identical": True,
+    }
+
+
+def _record():
+    """A healthy fresh/baseline record: every gate passes vs itself."""
+    return {
+        "eflfg": _algo_cell(), "fedboost": _algo_cell(0.5),
+        "serve": {"eflfg": _serve_cell(0.80),     # speedup 1.25 > 1.1
+                  "fedboost": _serve_cell(0.40)},  # speedup 2.5  > 2.0
+        "sharded_sweep": {"eflfg": _sharded_cell(),
+                          "fedboost": _sharded_cell(),
+                          "mesh2d": _sharded_cell()},
+    }
+
+
+def _kinds(failures):
+    return [kind for kind, _ in failures]
+
+
+def test_healthy_record_passes_every_gate():
+    rec = _record()
+    for fn in (check, check_serve, check_sharded):
+        failures, warnings = fn(rec, copy.deepcopy(rec), THRESHOLD)
+        assert failures == [], fn.__name__
+        assert warnings == [], fn.__name__
+
+
+def test_serve_flag_failure_is_hard():
+    fresh = _record()
+    fresh["serve"]["eflfg"]["served_equals_sweep"] = False
+    failures, _ = check_serve(_record(), fresh, THRESHOLD)
+    assert any(kind == "hard" and "served_equals_sweep" in msg
+               for kind, msg in failures)
+    assert not retryable(failures)      # determinism never retries
+
+
+def test_serve_flags_checked_even_without_baseline_section():
+    """THE regression pin: a determinism-flag failure must not be
+    skipped just because the baseline predates the serve section."""
+    base = _record()
+    del base["serve"]
+    fresh = _record()
+    fresh["serve"]["eflfg"]["exact_equals_direct"] = False
+    failures, warnings = check_serve(base, fresh, THRESHOLD)
+    assert any(kind == "hard" and "exact_equals_direct" in msg
+               for kind, msg in failures)
+    # the baseline-relative timing gate is what gets skipped, loudly
+    assert any("baseline has no section" in w for w in warnings)
+
+
+def test_sharded_flags_checked_even_without_baseline_section():
+    base = _record()
+    del base["sharded_sweep"]
+    fresh = _record()
+    fresh["sharded_sweep"]["mesh2d"]["trajectories_identical"] = False
+    failures, _ = check_sharded(base, fresh, THRESHOLD)
+    assert any(kind == "hard" and "mesh2d" in msg
+               for kind, msg in failures)
+
+
+def test_serve_absolute_speedup_floor():
+    """``1/rel`` under ``SERVE_MIN_SPEEDUP`` fails (timing kind, so CI
+    noise gets its retry) — with or without a baseline serve section."""
+    assert SERVE_MIN_SPEEDUP["fedboost"] >= 2.0    # the ROADMAP metric
+    for with_baseline in (True, False):
+        base = _record()
+        if not with_baseline:
+            del base["serve"]
+        fresh = _record()
+        fresh["serve"]["fedboost"] = _serve_cell(0.60)   # speedup 1.67 < 2x
+        failures, _ = check_serve(base, fresh, THRESHOLD)
+        floor_fails = [msg for kind, msg in failures
+                       if kind == "timing" and "floor" in msg]
+        assert any("fedboost" in msg for msg in floor_fails), with_baseline
+
+
+def test_serve_floor_not_gated_below_noise_floor():
+    """Sub-50ms serial cells are dispatch noise: reported, not gated."""
+    fresh = _record()
+    fresh["serve"]["eflfg"] = _serve_cell(2.0, serial=0.01)  # "slower"
+    failures, _ = check_serve(_record(), fresh, THRESHOLD)
+    assert failures == []
+
+
+def test_serve_relative_drift_still_gated():
+    base, fresh = _record(), _record()
+    # drift eflfg past +30% while staying above the absolute floor, so
+    # exactly the baseline-relative gate fires
+    base["serve"]["eflfg"]["rel"] = 0.60
+    fresh["serve"]["eflfg"]["rel"] = 0.60 * (1.0 + THRESHOLD + 0.1)
+    failures, _ = check_serve(base, fresh, THRESHOLD)
+    assert _kinds(failures) == ["timing"] and "+30%" in failures[0][1]
+    assert retryable(failures)
+
+
+def test_retryable_requires_all_timing():
+    assert retryable([("timing", "serve/eflfg: ...")])
+    assert not retryable([])
+    assert not retryable([("timing", "a"), ("hard", "b")])
+    assert not retryable([("hard", "serve/eflfg: flag false")])
+
+
+def test_retry_skips_only_healthy_sections():
+    skips = retry_skips([("timing", "serve/eflfg: batched/serial drift")])
+    assert skips == {"skip_loop_baseline": True, "skip_sharded": True,
+                     "skip_serve": False, "skip_scenario": True}
+    skips = retry_skips([("timing", "eflfg/t_scan_s: normalized drift"),
+                         ("timing", "sharded_sweep/mesh2d: drift")])
+    assert skips["skip_sharded"] is False
+    assert skips["skip_serve"] is True and skips["skip_scenario"] is True
+
+
+def test_merge_best_keeps_skipped_sections_and_ands_flags():
+    """A retry that skipped serve must not erase run 1's serve record;
+    a flag that was ever false stays false through the merge."""
+    run1 = _record()
+    run1["serve"]["eflfg"]["served_equals_sweep"] = False
+    rerun = _record()
+    del rerun["serve"]                  # skipped on retry
+    del rerun["sharded_sweep"]
+    merged = _merge_best([run1, rerun])
+    assert merged["serve"]["eflfg"]["served_equals_sweep"] is False
+    # ... and when serve IS re-measured, the best rel wins but flags AND
+    rerun2 = _record()
+    rerun2["serve"]["eflfg"]["rel"] = 0.70
+    merged = _merge_best([run1, rerun2])
+    assert merged["serve"]["eflfg"]["rel"] == pytest.approx(0.70)
+    assert merged["serve"]["eflfg"]["served_equals_sweep"] is False

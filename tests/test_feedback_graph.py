@@ -72,6 +72,29 @@ def test_weight_constraint_monotone(seed, K):
             assert w[adj[k]].sum() <= w_prev[k] * (1 + 1e-4)
 
 
+@given(st.integers(0, 5_000))
+def test_ineligible_leader_extreme_spread_matches_oracle(seed):
+    """Regression (per-row score shift): a high-weight node that is
+    *ineligible* (cost alone exceeds the budget) must not crush the
+    eq.-(3) scores of the candidates that actually compete.  With the old
+    global-max shift, eligible weights ~120 nats below the leader all
+    underflowed to ratio 0 and the argmax degenerated to lowest-index;
+    the per-row eligible shift keeps them exact.  Non-hypothesis batched
+    coverage: tests/test_feedback_graph_batched.py."""
+    K = 10
+    r = np.random.default_rng(seed)
+    lw = np.zeros(K)
+    lw[1:] = -120.0 + r.uniform(0.0, 5.0, K - 1)
+    c = np.empty(K)
+    c[0] = 10.0                       # leader can never be appended
+    c[1:] = r.uniform(0.1, 1.0, K - 1)
+    adj = np.asarray(feedback_graph(jnp.asarray(lw, jnp.float32),
+                                    jnp.asarray(c, jnp.float32),
+                                    jnp.float32(3.0), jnp.full((K,), 1e30)))
+    adj_np = feedback_graph_np(np.exp(lw), c, 3.0, np.full(K, 1e30))
+    assert (adj == adj_np).all()
+
+
 def test_greedy_prefers_cheap_high_weight():
     """eq. (3): among eligible nodes the max w/(cost_sum + c) is appended
     first — a cheap good model beats an expensive equal one."""

@@ -446,6 +446,11 @@ def test_aio_submit_awaits_results():
 
 
 def test_future_done_callbacks():
+    """The docs/serving.md#callbacks contract: a callback registered
+    after fulfillment fires immediately in the registering thread (the
+    historical bug was that it never fired), every callback fires
+    exactly once, and callback exceptions are swallowed on both the
+    fulfillment and the already-done path."""
     req = SimRequest(algo="eflfg", seed=0, T=10)
     fut = SimFuture(req)
     seen = []
@@ -455,6 +460,21 @@ def test_future_done_callbacks():
     assert seen == ["early"] and fut.result(0) == "ok"
     fut.add_done_callback(lambda f: seen.append("late"))  # fires inline
     assert seen == ["early", "late"]
+    fut.add_done_callback(lambda f: 1 / 0)      # swallowed inline too
+    fut.add_done_callback(lambda f: seen.append(f.result(0)))
+    assert seen == ["early", "late", "ok"]      # sees the settled result
+    with pytest.raises(RuntimeError, match="write-once"):
+        fut.set_result("again")                 # no re-fire on rejection
+    assert seen == ["early", "late", "ok"]
+
+    failed = SimFuture(req)
+    errs = []
+    failed.add_done_callback(lambda f: errs.append("pre"))
+    failed.set_exception(ValueError("boom"))
+    failed.add_done_callback(lambda f: errs.append("post"))
+    assert errs == ["pre", "post"]              # fires on failure paths too
+    with pytest.raises(ValueError, match="boom"):
+        failed.result(0)
 
 
 def test_run_batch_validation():
@@ -467,6 +487,40 @@ def test_run_batch_validation():
         run_batch("eflfg", preds, y, costs, 20,
                   SimConfig(sweep_sharded=False), seeds=range(2),
                   mesh=default_sweep_mesh())
+
+
+def test_batch_buckets_plan():
+    """Budget compaction fires only where it can pay AND stay bit-safe:
+    EFL-FG (graph loop), >= 2 distinct budgets, every bucket width >= 2."""
+    from repro.federated.engine import batch_buckets
+    assert batch_buckets("eflfg", [6.0, 3.0, 6.0, 3.0]) == [[1, 3], [0, 2]]
+    assert batch_buckets("eflfg", [3.0, 3.0, 3.0]) is None    # uniform
+    assert batch_buckets("eflfg", [3.0, 3.0, 6.0]) is None    # width-1 bucket
+    assert batch_buckets("fedboost", [3.0, 6.0, 3.0, 6.0]) is None
+
+
+def test_run_batch_budget_compaction_bit_equal(monkeypatch):
+    """A heterogeneous-budget EFL-FG batch splits into per-budget
+    dispatches (so each bucket's graph loop stops at its OWN worst lane);
+    lane bits must be unchanged vs the single mixed dispatch AND vs the
+    same lanes in uniform-budget batches (batched-family invariance)."""
+    from repro.federated import engine
+    preds, y, costs = _stream()
+    T = 60
+    cfg = SimConfig(budget=2.0, sweep_sharded=False)
+    seeds, budgets = [0, 1, 2, 3], [1.0, 4.0, 1.0, 4.0]
+    compacted = run_batch("eflfg", preds, y, costs, T, cfg, seeds, budgets)
+    monkeypatch.setattr(engine, "batch_buckets", lambda a, b: None)
+    mixed = run_batch("eflfg", preds, y, costs, T, cfg, seeds, budgets)
+    for i in range(4):
+        assert compacted[i].identical_to(mixed[i]), f"lane {i}"
+    # ... and vs the same lanes dispatched as uniform-budget batches
+    lo = run_batch("eflfg", preds, y, costs, T, cfg, [0, 2], [1.0, 1.0])
+    hi = run_batch("eflfg", preds, y, costs, T, cfg, [1, 3], [4.0, 4.0])
+    assert compacted[0].identical_to(lo[0])
+    assert compacted[2].identical_to(lo[1])
+    assert compacted[1].identical_to(hi[0])
+    assert compacted[3].identical_to(hi[1])
 
 
 # ---------------------------------------------------------------------------
