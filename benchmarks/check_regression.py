@@ -37,7 +37,11 @@ ratio discipline — batched vs serial dispatch of the same request wave,
 interleaved in-process — with two hard determinism flags per cell:
 batched results bit-equal to the ``run_sweep`` vmap path, exact-mode
 results bit-equal to direct solo engine runs
-(docs/serving.md#determinism).
+(docs/serving.md#determinism).  The ``mixed_scenario`` serve cell gates
+the schedule-class-coalesced bucket (one dispatch spanning three
+scenario presets) against the scenario-split dispatch of the same
+requests, with single-bucket and per-lane bit-equality flags plus an
+absolute mixed-vs-split throughput floor.
 
 The ``scenario`` cells (schedule-threaded vs stationary scan,
 ``repro.scenarios``) are gated on their paired overhead ratio against
@@ -75,20 +79,33 @@ SHARDED_CELLS = ("eflfg", "fedboost", "mesh2d")
 # are still hard failures for every cell.
 SHARDED_GATE_FLOOR_S = 0.05
 # Serving cells (repro.serve dynamic batching vs serial direct engine
-# calls; same in-process machine-normalized ratio discipline).  The two
-# determinism flags are hard failures; the batched/serial ratio is gated
-# above the same floor (on the serial side).
-SERVE_CELLS = ("eflfg", "fedboost")
-SERVE_FLAGS = ("served_equals_sweep", "exact_equals_direct")
-# Absolute batched-vs-serial throughput floors (speedup = 1 / rel),
-# judged on the fresh run alone — no baseline section needed, so a
-# throughput collapse cannot ride a baseline refresh through CI.  The
-# FedBoost cell holds the ROADMAP >= 2x metric outright; the EFL-FG
-# floor is the conservative committed envelope of the de-lockstepped
-# graph loop on a 1-core runner (see docs/serving.md#benchmarks — the
-# cell's measured speedup is higher on multi-core hosts; raise the
-# floor alongside baseline refreshes as runners allow).
-SERVE_MIN_SPEEDUP = {"eflfg": 1.1, "fedboost": 2.0}
+# calls; same in-process machine-normalized ratio discipline).  Each
+# cell's determinism flags are hard failures; its ratio is gated above
+# the same floor (on the denominator side).  The per-algo cells compare
+# batched vs serial dispatch; the mixed_scenario cell compares one
+# schedule-class-coalesced bucket spanning three scenario presets vs the
+# scenario-split dispatch of the same requests
+# (docs/serving.md#scenarios).
+SERVE_CELLS = ("eflfg", "fedboost", "mixed_scenario")
+SERVE_FLAGS = {
+    "eflfg": ("served_equals_sweep", "exact_equals_direct"),
+    "fedboost": ("served_equals_sweep", "exact_equals_direct"),
+    "mixed_scenario": ("one_bucket", "lanes_equal_split"),
+}
+# Denominator / numerator timing keys per cell (default: serial/batched).
+SERVE_SERIAL_KEY = {"mixed_scenario": "t_split_s"}
+SERVE_BATCHED_KEY = {"mixed_scenario": "t_mixed_s"}
+# Absolute throughput floors (speedup = 1 / rel), judged on the fresh
+# run alone — no baseline section needed, so a throughput collapse
+# cannot ride a baseline refresh through CI.  The FedBoost cell holds
+# the ROADMAP >= 2x metric outright; the EFL-FG floor is the
+# conservative committed envelope of the de-lockstepped graph loop on a
+# 1-core runner (see docs/serving.md#benchmarks — the cell's measured
+# speedup is higher on multi-core hosts; raise the floor alongside
+# baseline refreshes as runners allow).  The mixed_scenario floor pins
+# the acceptance contract that coalescing beats scenario-split dispatch
+# at all.
+SERVE_MIN_SPEEDUP = {"eflfg": 1.1, "fedboost": 2.0, "mixed_scenario": 1.05}
 # Scenario cells (repro.scenarios schedule-threaded scan vs stationary
 # scan, in-process paired ratios): the constant-scenario bit-equality
 # flag is a hard failure; `rel` is gated against the ABSOLUTE documented
@@ -268,7 +285,7 @@ def check_serve(base: dict, fresh: dict, threshold: float):
             failures.append(("hard", f"serve/{cell}: missing from fresh "
                              "run"))
             continue
-        for flag in SERVE_FLAGS:
+        for flag in SERVE_FLAGS[cell]:
             if not f.get(flag, False):
                 failures.append(("hard", f"serve/{cell}: {flag} is false "
                                  "in the fresh run (serving determinism "
@@ -292,9 +309,11 @@ def check_serve(base: dict, fresh: dict, threshold: float):
         if bsec is not None and b is None:
             failures.append(("hard", f"serve/{cell}: missing from "
                              "baseline"))
-        serial_times = [f.get("t_serial_s", 0.0)]
+        skey = SERVE_SERIAL_KEY.get(cell, "t_serial_s")
+        bkey = SERVE_BATCHED_KEY.get(cell, "t_batched_s")
+        serial_times = [f.get(skey, 0.0)]
         if b is not None:
-            serial_times.append(b.get("t_serial_s", 0.0))
+            serial_times.append(b.get(skey, 0.0))
         below_floor = min(serial_times) < SHARDED_GATE_FLOOR_S
         # absolute throughput floor, judged on the fresh run alone
         min_speedup = SERVE_MIN_SPEEDUP.get(cell)
@@ -320,8 +339,8 @@ def check_serve(base: dict, fresh: dict, threshold: float):
             continue
         ratio = f_rel / b_rel if b_rel > 0 else float("inf")
         line = (f"serve/{cell}: batched/serial {b_rel:.3f} -> {f_rel:.3f} "
-                f"(x{ratio:.2f}); raw {b['t_batched_s']:.4f}s -> "
-                f"{f['t_batched_s']:.4f}s")
+                f"(x{ratio:.2f}); raw {b[bkey]:.4f}s -> "
+                f"{f[bkey]:.4f}s")
         if below_floor:
             print("  rep  " + line + "  [below gating floor "
                   f"{SHARDED_GATE_FLOOR_S}s serial — not timing-gated]")
@@ -460,7 +479,7 @@ def _merge_best(fresh_runs: list) -> dict:
             if not g or not m:
                 continue
             flags = {fl: (m.get(fl, False) and g.get(fl, False))
-                     for fl in SERVE_FLAGS}
+                     for fl in SERVE_FLAGS[cell]}
             g_rel, m_rel = g.get("rel"), m.get("rel")
             if g_rel is not None and m_rel is not None and g_rel < m_rel:
                 best_sec[cell] = dict(g)

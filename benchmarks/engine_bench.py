@@ -34,7 +34,11 @@ serving determinism flags (batched results bit-equal to the ``run_sweep``
 vmap path, exact-mode results bit-equal to direct solo runs; see
 docs/serving.md#determinism).  The gate compares the batched/serial
 *ratio* (machine-normalized by construction, like the sharded cells) and
-hard-fails on either flag.
+hard-fails on either flag.  A third serve cell, ``mixed_scenario``, times
+one wave spanning three scenario presets coalesced into a single bucket
+(per-lane schedule stacking) against the scenario-split dispatch of the
+same requests, gated on the mixed/split ratio plus single-bucket and
+per-lane bit-equality flags.
 
 Each record also carries a ``scenario`` section: the schedule-threaded
 round body (``repro.scenarios`` — per-round budget factors,
@@ -259,6 +263,74 @@ def _serve_record(fast: bool) -> dict:
             "served_equals_sweep": served_eq,
             "exact_equals_direct": exact_eq,
         }
+
+    # Mixed-scenario cell: one wave spanning three scenario presets,
+    # coalesced into ONE bucket by the schedule-class group key (per-lane
+    # schedule stacking), vs the scenario-split dispatch — one wave per
+    # preset, i.e. one bucket per preset, the pre-stacking behavior.
+    # FedBoost traffic: no graph lockstep, so the cell isolates the
+    # fewer-dispatches win.  `rel` is the gated mixed/split ratio
+    # (machine-normalized); the flags pin single-bucket dispatch and
+    # per-lane bit-equality against the split dispatch.
+    mix = ("step_decay", "partial_participation", "concept_drift")
+    n_mix = 12                     # 4 per preset; one 12-lane mixed bucket
+    # a longer horizon than the per-algo cells: at T=300 the FedBoost
+    # split waves finish under the gate's 50 ms floor and the absolute
+    # mixed-vs-split floor would never actually be judged
+    T_mix = 1000 if fast else 2000
+    lanes = [mix[i % 3] for i in range(n_mix)]
+    specs_mix = [dict(algo="fedboost", seed=s, T=T_mix, cfg=cfg,
+                      scenario=nm) for s, nm in enumerate(lanes)]
+
+    def wave(specs):
+        server = SimServer(max_batch=n_mix, max_wait_ms=0.0)
+        server.register_stream("default", preds, y, costs)
+        futs = SimClient(server).submit_many(specs)
+        server.start()
+        results = [f.result(3600) for f in futs]
+        st = server.stats()
+        server.stop()
+        return results, futs, st
+
+    def split_waves():
+        out = [None] * n_mix
+        for nm in mix:
+            idx = [i for i, l in enumerate(lanes) if l == nm]
+            res, _, _ = wave([specs_mix[i] for i in idx])
+            for j, i in enumerate(idx):
+                out[i] = res[j]
+        return out
+
+    split = split_waves()                  # warm the per-preset programs
+    mixed, futs, st = wave(specs_mix)      # warm the stacked program
+    one_bucket = (st["batches"] == 1
+                  and all(f.execution["n_scenarios"] == len(mix)
+                          for f in futs))
+    tm, tsp = [], []
+    for _ in range(5):
+        t0 = time.time()
+        split = split_waves()
+        tsp.append(time.time() - t0)
+        t0 = time.time()
+        mixed, _, _ = wave(specs_mix)
+        tm.append(time.time() - t0)
+    ratios = [m / s for s, m in zip(tsp, tm)]
+    rel = stats.median(ratios)
+    i_rep = min(range(len(ratios)), key=lambda i: abs(ratios[i] - rel))
+    lanes_eq = all(a.identical_to(b) for a, b in zip(mixed, split))
+    rec["mixed_scenario"] = {
+        "n_requests": n_mix, "scenarios": list(mix), "algo": "fedboost",
+        "T": T_mix,
+        "t_split_s": round(tsp[i_rep], 4),
+        "t_mixed_s": round(tm[i_rep], 4),
+        # median of per-rep mixed/split ratios: the gated statistic
+        "rel": round(rel, 4),
+        "mixed_vs_split": round(1.0 / rel, 2) if rel > 0 else None,
+        "req_per_s_mixed": round(n_mix / tm[i_rep], 2),
+        "req_per_s_split": round(n_mix / tsp[i_rep], 2),
+        "one_bucket": one_bucket,
+        "lanes_equal_split": lanes_eq,
+    }
     return rec
 
 
@@ -566,6 +638,15 @@ def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False,
                          "-", str(c["served_equals_sweep"])))
             rows.append((f"engine/serve/{cell}/exact_equals_direct",
                          "-", str(c["exact_equals_direct"])))
+        c = srv["mixed_scenario"]
+        rows.append(("engine/serve/mixed_scenario/req_per_s_mixed",
+                     "-", f"{c['req_per_s_mixed']:.2f}"))
+        rows.append(("engine/serve/mixed_scenario/mixed_vs_split",
+                     "-", f"{c['mixed_vs_split']:.2f}"))
+        rows.append(("engine/serve/mixed_scenario/one_bucket",
+                     "-", str(c["one_bucket"])))
+        rows.append(("engine/serve/mixed_scenario/lanes_equal_split",
+                     "-", str(c["lanes_equal_split"])))
 
     if not skip_sharded:
         rec["sharded_sweep"] = sharded = _sharded_sweep_record(fast)
@@ -635,7 +716,8 @@ def merge_conservative(recs: list) -> dict:
             m["speedup"] = round(m["t_loop_baseline_s"] / m["t_scan_s"], 2)
     for section, cells in (("sharded_sweep", ("eflfg", "fedboost",
                                               "mesh2d")),
-                           ("serve", ("eflfg", "fedboost")),
+                           ("serve", ("eflfg", "fedboost",
+                                      "mixed_scenario")),
                            ("scenario", ("eflfg", "fedboost"))):
         secs = [r[section] for r in recs if section in r]
         if not secs or section not in out:

@@ -28,9 +28,14 @@ experiment is a single jit-compiled ``jax.lax.scan`` over rounds:
   declarative non-stationary schedule — per-round budget factors,
   client-participation masks, label drift — compiled into device arrays
   and threaded through the scan as ``xs``, so shapes stay static and
-  one scheduled program serves every scenario of a shape.  All-neutral
-  schedules (the ``constant`` preset) dispatch the scenario-free
-  program, bit-equal by construction.  See docs/scenarios.md.
+  one scheduled program serves every scenario of a shape.  The batch
+  and sweep entry points additionally take a *per-lane sequence* of
+  scenarios: compiled rows stack along the batch axis as ordinary jit
+  arguments, so the same program serves any MIX of scenarios — the
+  serving layer batches tenants on different schedules together on the
+  strength of this.  All-neutral schedules (the ``constant`` preset)
+  dispatch the scenario-free program, bit-equal by construction.  See
+  docs/scenarios.md and docs/determinism.md.
 
 ``run_simulation_scan`` runs one (algo, seed, budget) configuration and
 returns the same ``SimResult`` as the reference.  It is exported from
@@ -70,6 +75,11 @@ _SCAN_UNROLL = 1   # >1 lets XLA fuse across rounds: faster, but rounding
 # nothing (Scenario is frozen/hashable by design).
 _SCENARIO_CACHE: dict = {}
 
+# Per-lane schedule stacks, keyed (lane scenarios, T, window[, n]): a
+# mixed serve wave re-using the same scenario mix hits the stacked
+# device arrays instead of re-stacking/re-uploading them every wave.
+_STACK_CACHE: dict = {}
+
 
 def _compile_scenario(scenario, T: int, cfg: SimConfig):
     """Normalize a ``scenario=`` argument into a ``CompiledScenario``.
@@ -96,6 +106,73 @@ def _compile_scenario(scenario, T: int, cfg: SimConfig):
             f"used with (T={T}, window={eval_window(cfg)}) — compile "
             "against the same horizon and config")
     return comp
+
+
+def _lane_schedules(scenario, T: int, cfg: SimConfig, n: int):
+    """Normalize a batch/sweep ``scenario=`` argument — ``None``, ONE
+    scenario(-like), or a per-lane sequence of them — into the per-lane
+    stacked schedule arrays the batched scheduled programs consume.
+
+    Returns ``(stacked, scale)``:
+
+    * ``(None, None)`` — the stationary program (no scenario given, or
+      every lane compiled all-neutral: identity schedules dispatch the
+      scenario-free program, bit-equal by construction);
+    * otherwise ``stacked`` is a ``repro.scenarios.ScheduleArrays``
+      whose every leaf carries a leading ``(n,)`` lane axis (lane ``i``
+      runs its own schedule rows — any mix of scenarios in one
+      program), and ``scale`` holds the realized budget factors:
+      ``(T,)`` float64 when one shared scenario was given (every lane
+      identical — the pre-existing ``SweepResult.budget_scale`` shape),
+      ``(n, T)`` for a per-lane sequence.
+
+    Stacks are cached per resolved lane tuple (``_STACK_CACHE``) so
+    repeated serve waves over the same scenario mix re-upload nothing;
+    lanes passed as already-``CompiledScenario`` bypass the cache (the
+    arrays are not hashable).
+    """
+    if scenario is None:
+        return None, None
+    from repro import scenarios as _scenarios
+    W = eval_window(cfg)
+    if isinstance(scenario, (list, tuple)) and not isinstance(
+            scenario, (_scenarios.CompiledScenario,
+                       _scenarios.ScheduleArrays)):
+        lanes = list(scenario)
+        if len(lanes) != n:
+            raise ValueError(
+                f"per-lane scenario sequence has {len(lanes)} entries for "
+                f"{n} lanes — pass one scenario, or exactly one per lane")
+        comps = [_compile_scenario(s, T, cfg) for s in lanes]
+        if all(c is None or c.neutral for c in comps):
+            return None, None
+        try:
+            key = (tuple(None if s is None else _scenarios.resolve(s)
+                         for s in lanes), T, W)
+        except TypeError:
+            key = None                      # CompiledScenario lanes
+        if key is not None and key in _STACK_CACHE:
+            return _STACK_CACHE[key]
+        comps = [None if c is not None and c.neutral else c for c in comps]
+        out = _scenarios.stack_schedules(comps, T, W)
+        if key is not None:
+            _STACK_CACHE[key] = out
+        return out
+    comp = _compile_scenario(scenario, T, cfg)
+    if comp.neutral:
+        return None, None
+    try:
+        key = (_scenarios.resolve(scenario), T, W, n)
+    except TypeError:
+        key = None
+    if key is not None and key in _STACK_CACHE:
+        return _STACK_CACHE[key]
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), comp.arrays)
+    out = (stacked, comp.scale)
+    if key is not None:
+        _STACK_CACHE[key] = out
+    return out
 
 
 def _cfg_key(cfg: SimConfig, T: int):
@@ -168,26 +245,32 @@ def _get_scan(algo: str, T: int, cfg: SimConfig, sweep: str = "",
         else:
             fn = scan
     else:
-        # scheduled variants close over the broadcast schedule pytree —
-        # every lane of a sweep/batch runs the SAME scenario (the serving
-        # batcher group-keys by scenario, so buckets are homogeneous)
+        # scheduled variants vmap over a PER-LANE schedule stack (leading
+        # lane axis on every ScheduleArrays leaf): lane i runs its own
+        # scenario's rows, so one compiled program serves any mix of
+        # scenarios of the shape — the serving batcher coalesces tenants
+        # on different schedules into one bucket on the strength of this
         if sweep == "seeds":
             def fn(preds, y, costs, keys, budget, sched):
                 return jax.vmap(
-                    lambda k: _sweep_outs(
-                        scan(preds, y, costs, k, budget, sched)))(keys)
+                    lambda k, s: _sweep_outs(
+                        scan(preds, y, costs, k, budget, s)))(keys, sched)
         elif sweep == "grid":
+            # sched is per-SEED (the inner axis): every budget row of the
+            # grid re-uses lane i's schedule for seed i
             def fn(preds, y, costs, keys, budgets, sched):
                 per_seed = jax.vmap(
-                    lambda k, b: _sweep_outs(
-                        scan(preds, y, costs, k, b, sched)),
-                    in_axes=(0, None))
-                return jax.vmap(per_seed, in_axes=(None, 0))(keys, budgets)
+                    lambda k, b, s: _sweep_outs(
+                        scan(preds, y, costs, k, b, s)),
+                    in_axes=(0, None, 0))
+                return jax.vmap(per_seed,
+                                in_axes=(None, 0, None))(keys, budgets,
+                                                         sched)
         elif sweep == "flat":
             def fn(preds, y, costs, keys, budgets, sched):
                 return jax.vmap(
-                    lambda k, b: scan(preds, y, costs, k, b, sched)
-                )(keys, budgets)
+                    lambda k, b, s: scan(preds, y, costs, k, b, s)
+                )(keys, budgets, sched)
         else:
             fn = scan
     fn = _SCAN_CACHE[key] = jax.jit(fn)
@@ -283,10 +366,16 @@ def run_batch(algo: str, preds, y, costs, T: int, cfg: SimConfig,
     ``run_simulation_scan`` result.
 
     ``budgets`` is per-lane (same length as ``seeds``) or ``None`` for
-    ``cfg.budget`` everywhere.  ``scenario`` applies ONE non-stationary
-    schedule to every lane (the serving batcher group-keys by scenario,
-    so buckets are scenario-homogeneous); per-lane violations count
-    against ``budgets[i] * scale[t]``.
+    ``cfg.budget`` everywhere.  ``scenario`` is per-lane too: ONE
+    scenario(-like) applies the same schedule to every lane, while a
+    sequence (length ``n``, entries ``None`` / name / ``Scenario`` /
+    ``CompiledScenario``) gives lane ``i`` its own schedule — compiled
+    rows stack along the batch axis as ordinary jit arguments, so one
+    scheduled program serves ANY mix of scenarios (the serving batcher
+    coalesces tenants on different schedules into one bucket).  An
+    all-neutral lane set dispatches the scenario-free program,
+    bit-equal by construction; per-lane violations count against
+    ``budgets[i] * scale[i, t]``.
 
     Execution: a single vmap over the batch axis, or — when
     ``cfg.sweep_sharded``/auto-dispatch says so AND every mesh shard
@@ -332,47 +421,59 @@ def run_batch(algo: str, preds, y, costs, T: int, cfg: SimConfig,
                          "— the batch axis is flat (one pair per lane)")
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
     budgets_j = jnp.asarray(budgets, jnp.float32)
-    comp = _compile_scenario(scenario, T, cfg)
-    scheduled = comp is not None and not comp.neutral
+    sched, scale = _lane_schedules(scenario, T, cfg, n)
+    scheduled = sched is not None
 
     sharded, mesh = batch_dispatch_plan(cfg, n, mesh)
     if sharded:
         n_sweep, _ = sweep_sharding.mesh_axes(mesh)
         pk, pb = sweep_sharding.pad_configs(keys, budgets_j, n_sweep)
         fn = _get_sharded_flat(algo, T, cfg, mesh, scheduled=scheduled)
-        outs = (fn(preds, y, costs, pk, pb, comp.arrays) if scheduled
-                else fn(preds, y, costs, pk, pb))
+        if scheduled:
+            ps = sweep_sharding.pad_lane_tree(sched, n_sweep)
+            outs = fn(preds, y, costs, pk, pb, ps)
+        else:
+            outs = fn(preds, y, costs, pk, pb)
         outs = jax.tree.map(lambda a: np.asarray(a)[:n], outs)
     else:
         fn = _get_scan(algo, T, cfg, sweep="flat", scheduled=scheduled)
 
-        def dispatch(ks, bs):
+        def dispatch(ks, bs, ss=None):
             return jax.tree.map(
                 np.asarray,
-                fn(preds, y, costs, ks, bs, comp.arrays) if scheduled
+                fn(preds, y, costs, ks, bs, ss) if scheduled
                 else fn(preds, y, costs, ks, bs))
 
         buckets = batch_buckets(algo, budgets)
         if buckets is None:
-            outs = dispatch(keys, budgets_j)
+            outs = dispatch(keys, budgets_j, sched)
         else:
             # budget-compacted dispatch: one flat program per budget
             # bucket, so each bucket's graph loop runs only ITS max trip
             # count instead of the whole batch's.  Every bucket has
             # width >= 2, so lane bits are unchanged (batched-family
-            # invariance) — reassembly below restores lane order.
+            # invariance) — reassembly below restores lane order.  The
+            # schedule stack is lane-sliced along with keys/budgets, so
+            # each bucket carries exactly its lanes' rows.
             outs = None
             for idx in buckets:
                 sel = jnp.asarray(idx)
-                o = dispatch(keys[sel], budgets_j[sel])
+                o = dispatch(keys[sel], budgets_j[sel],
+                             None if sched is None else
+                             jax.tree.map(lambda a: a[sel], sched))
                 if outs is None:
                     outs = {k: np.empty((n,) + v.shape[1:], v.dtype)
                             for k, v in o.items()}
                 for k, v in o.items():
                     outs[k][idx] = v
-    scale = comp.scale if scheduled else 1.0
+    if scale is None:
+        thresh = [budgets[i] for i in range(n)]
+    elif scale.ndim == 1:           # one shared scenario: (T,) factors
+        thresh = [budgets[i] * scale for i in range(n)]
+    else:                           # per-lane scenarios: (n, T) factors
+        thresh = [budgets[i] * scale[i] for i in range(n)]
     return [_to_result(jax.tree.map(lambda a: a[i], outs), T,
-                       budgets[i] * scale, algo)
+                       thresh[i], algo)
             for i in range(n)]
 
 
@@ -489,8 +590,10 @@ class SweepResult:
                      append-iteration count per round (zeros for
                      FedBoost); feeds ``lockstep_waste``.
       seeds:         (n_seeds,) as given; budgets: scalar or (n_budgets,).
-      budget_scale:  (T,) float64 scenario budget factors, or None for a
-                     stationary sweep.
+      budget_scale:  scenario budget factors, float64: (T,) when one
+                     shared scenario was swept, (n_seeds, T) when a
+                     per-lane scenario sequence was given (lane i's
+                     realized factors), None for a stationary sweep.
       sharded:       True when produced by ``run_sweep_sharded``.
 
     Determinism: a given (seed, budget) configuration's trajectory is a
@@ -617,7 +720,9 @@ def run_sweep_sharded(algo: str, preds, y, costs, T: int, cfg: SimConfig,
     device mesh.
 
     Same arguments and ``SweepResult`` as ``run_sweep`` (including the
-    optional ``scenario`` schedule, replicated across every lane) plus an
+    optional ``scenario`` — one shared schedule or a per-seed-lane
+    sequence, stacked and partitioned over the mesh alongside
+    keys/budgets) plus an
     optional ``mesh`` (default: every visible device as a pure
     ``("sweep",)`` partition via ``launch.mesh.make_sweep_mesh``).  Each device vmaps
     the identical per-config scan over its shard of the flat axis; sweeps
@@ -639,8 +744,8 @@ def run_sweep_sharded(algo: str, preds, y, costs, T: int, cfg: SimConfig,
     costs = jnp.asarray(costs, jnp.float32)
     seeds = list(seeds)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-    comp = _compile_scenario(scenario, T, cfg)
-    scheduled = comp is not None and not comp.neutral
+    sched, scale = _lane_schedules(scenario, T, cfg, len(seeds))
+    scheduled = sched is not None
     if mesh is None:
         mesh = sweep_sharding.default_sweep_mesh()
     n_sweep, _ = sweep_sharding.mesh_axes(mesh)
@@ -650,14 +755,24 @@ def run_sweep_sharded(algo: str, preds, y, costs, T: int, cfg: SimConfig,
     flat_keys, flat_budgets = sweep_sharding.pad_configs(
         flat_keys, flat_budgets, n_sweep)
     fn = _get_sharded_sweep(algo, T, cfg, mesh, scheduled=scheduled)
-    outs = (fn(preds, y, costs, flat_keys, flat_budgets, comp.arrays)
-            if scheduled else fn(preds, y, costs, flat_keys, flat_budgets))
+    if scheduled:
+        if grid_shape is not None:
+            # the flat config axis is budgets-outermost: tile each seed
+            # lane's schedule rows once per budget row, matching
+            # _flatten_configs' layout
+            sched = jax.tree.map(
+                lambda a: jnp.tile(a, (grid_shape[0],)
+                                   + (1,) * (a.ndim - 1)), sched)
+        sched = sweep_sharding.pad_lane_tree(sched, n_sweep)
+        outs = fn(preds, y, costs, flat_keys, flat_budgets, sched)
+    else:
+        outs = fn(preds, y, costs, flat_keys, flat_budgets)
     outs = jax.tree.map(lambda a: np.asarray(a)[:n_cfg], outs)
     if grid_shape is not None:
         outs = jax.tree.map(
             lambda a: a.reshape(grid_shape + a.shape[1:]), outs)
     return SweepResult(outs, seeds, budgets_arr, T, sharded=True,
-                       budget_scale=comp.scale if scheduled else None)
+                       budget_scale=scale)
 
 
 def _dispatch_sharded(cfg: SimConfig, n_cfg: int) -> bool:
@@ -681,13 +796,16 @@ def run_sweep(algo: str, preds, y, costs, T: int, cfg: SimConfig,
     field shapes.  Per-round (T, K) loss matrices are never materialized
     per configuration; regret accumulates on device via ``RegretCarry``.
 
-    ``scenario`` applies ONE non-stationary schedule
-    (``repro.scenarios``) to every grid point: the per-round budget
-    factor multiplies each lane's base budget, so a budget grid under
-    ``step_decay`` sweeps the *starting* provision.  All-neutral
-    schedules dispatch the scenario-free program (bit-equal by
-    construction); ``violations`` always count against the realized
-    per-round budgets.
+    ``scenario`` (``repro.scenarios``) applies ONE non-stationary
+    schedule to every grid point, or — as a sequence of length
+    ``len(seeds)`` (entries ``None`` / name / ``Scenario``) — a
+    *per-lane* schedule: seed lane ``i`` runs its own compiled rows,
+    stacked along the batch axis as jit arguments, shared across the
+    budget axis of a grid.  The per-round budget factor multiplies each
+    lane's base budget, so a budget grid under ``step_decay`` sweeps
+    the *starting* provision.  All-neutral lane sets dispatch the
+    scenario-free program (bit-equal by construction); ``violations``
+    always count against the realized per-round budgets.
 
     Execution: on a single device the scan is vmapped over the grid; with
     more than one visible device the flat configuration axis is sharded
@@ -710,8 +828,8 @@ def run_sweep(algo: str, preds, y, costs, T: int, cfg: SimConfig,
     y = jnp.asarray(y, jnp.float32)
     costs = jnp.asarray(costs, jnp.float32)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-    comp = _compile_scenario(scenario, T, cfg)
-    scheduled = comp is not None and not comp.neutral
+    sched, scale = _lane_schedules(scenario, T, cfg, len(seeds))
+    scheduled = sched is not None
     if budgets is None:
         fn = _get_scan(algo, T, cfg, sweep="seeds", scheduled=scheduled)
         args = (preds, y, costs, keys, jnp.float32(cfg.budget))
@@ -721,7 +839,6 @@ def run_sweep(algo: str, preds, y, costs, T: int, cfg: SimConfig,
         fn = _get_scan(algo, T, cfg, sweep="grid", scheduled=scheduled)
         args = (preds, y, costs, keys, budgets_j)
         budgets_arr = np.asarray(budgets_j)
-    outs = fn(*args, comp.arrays) if scheduled else fn(*args)
+    outs = fn(*args, sched) if scheduled else fn(*args)
     outs = jax.tree.map(np.asarray, outs)
-    return SweepResult(outs, seeds, budgets_arr, T,
-                       budget_scale=comp.scale if scheduled else None)
+    return SweepResult(outs, seeds, budgets_arr, T, budget_scale=scale)

@@ -36,7 +36,7 @@ from repro.launch.sharding import sweep_specs
 from .sharded import shard_map
 
 __all__ = ["SWEEP_AXIS", "DATA_AXIS", "mesh_axes", "pad_configs",
-           "sharded_sweep_fn", "default_sweep_mesh"]
+           "pad_lane_tree", "sharded_sweep_fn", "default_sweep_mesh"]
 
 SWEEP_AXIS = "sweep"
 DATA_AXIS = "data"
@@ -77,6 +77,22 @@ def pad_configs(keys: jnp.ndarray, budgets: jnp.ndarray, n_shards: int):
     return keys, budgets
 
 
+def pad_lane_tree(tree, n_shards: int):
+    """Pad every leaf's leading (lane) axis up to a multiple of
+    ``n_shards`` with broadcast copies of the last lane — the pytree
+    counterpart of ``pad_configs``, used for the per-lane schedule
+    stack (``repro.scenarios.ScheduleArrays`` with a leading lane axis)
+    that rides the sharded flat sweep alongside keys/budgets."""
+    def pad(a):
+        n = a.shape[0]
+        n_pad = -(-n // n_shards) * n_shards
+        if n_pad == n:
+            return a
+        return jnp.concatenate(
+            [a, jnp.broadcast_to(a[-1:], (n_pad - n,) + a.shape[1:])])
+    return jax.tree.map(pad, tree)
+
+
 def sharded_sweep_fn(scan_config_fn, mesh: Mesh, scheduled: bool = False):
     """shard_map + jit a per-config scan into a mesh-sharded flat sweep.
 
@@ -89,19 +105,23 @@ def sharded_sweep_fn(scan_config_fn, mesh: Mesh, scheduled: bool = False):
     config order.  Stream arrays are replicated on every device; only the
     config axis is partitioned.
 
-    ``scheduled=True`` adds a trailing schedule-arrays argument
-    (``repro.scenarios.ScheduleArrays``, replicated like the stream —
-    every lane of a scheduled sweep runs the SAME scenario) and expects
-    ``scan_config_fn(..., sched)``.
+    ``scheduled=True`` adds a trailing *per-lane* schedule-stack argument
+    (``repro.scenarios.ScheduleArrays`` with a leading lane axis — one
+    schedule row set per flat config, any mix of scenarios) partitioned
+    over the sweep axis exactly like keys/budgets; expects
+    ``scan_config_fn(..., sched)`` taking one lane's ``(T, ...)`` rows.
+    Pad the stack alongside the configs with ``pad_lane_tree``.
     """
     in_specs, out_spec = sweep_specs(mesh, axis=SWEEP_AXIS)
 
     if scheduled:
-        in_specs = in_specs + (P(),)     # schedule pytree: replicated
+        # schedule stack: lane-partitioned like keys/budgets (a pytree
+        # prefix — every ScheduleArrays leaf shards its leading lane axis)
+        in_specs = in_specs + (P(SWEEP_AXIS),)
 
         def per_shard(preds, y, costs, keys, budgets, sched):
-            run = lambda k, b: scan_config_fn(preds, y, costs, k, b, sched)
-            return jax.vmap(run)(keys, budgets)
+            run = lambda k, b, s: scan_config_fn(preds, y, costs, k, b, s)
+            return jax.vmap(run)(keys, budgets, sched)
     else:
         def per_shard(preds, y, costs, keys, budgets):
             run = lambda k, b: scan_config_fn(preds, y, costs, k, b)
@@ -124,6 +144,12 @@ def sharded_sweep_fn(scan_config_fn, mesh: Mesh, scheduled: bool = False):
     def call(preds, y, costs, keys, budgets, sched=None):
         sweep_specs(mesh, n_configs=keys.shape[0], axis=SWEEP_AXIS)
         if scheduled:
+            lanes = {a.shape[0] for a in jax.tree.leaves(sched)}
+            if lanes != {keys.shape[0]}:
+                raise ValueError(
+                    f"sharded_sweep_fn: schedule stack lanes {lanes} do "
+                    f"not match the {keys.shape[0]} flat configs — pad "
+                    "with pad_lane_tree alongside pad_configs")
             return fn(preds, y, costs, keys, budgets, sched)
         return fn(preds, y, costs, keys, budgets)
 

@@ -27,9 +27,10 @@ CLI: ``python -m repro.launch.scenario_run``.
 """
 
 from .spec import (BudgetSchedule, CompiledScenario, Drift, Participation,
-                   Scenario, ScheduleArrays)
+                   Scenario, ScheduleArrays, neutral_schedule,
+                   stack_schedules)
 from .registry import get, names, register, resolve
 
 __all__ = ["BudgetSchedule", "Participation", "Drift", "Scenario",
-           "ScheduleArrays", "CompiledScenario", "register", "get",
-           "names", "resolve"]
+           "ScheduleArrays", "CompiledScenario", "neutral_schedule",
+           "stack_schedules", "register", "get", "names", "resolve"]

@@ -46,7 +46,8 @@ from typing import Any, NamedTuple
 import numpy as np
 
 __all__ = ["BudgetSchedule", "Participation", "Drift", "Scenario",
-           "ScheduleArrays", "CompiledScenario"]
+           "ScheduleArrays", "CompiledScenario", "neutral_schedule",
+           "stack_schedules"]
 
 
 class ScheduleArrays(NamedTuple):
@@ -77,6 +78,54 @@ class CompiledScenario(NamedTuple):
     T: int
     window: int
     scale: np.ndarray   # (T,) float64 host copy of budget_scale
+
+
+def neutral_schedule(T: int, W: int) -> ScheduleArrays:
+    """Identity schedule rows for one ``(T, W)`` shape: budget factor 1,
+    every client active, zero label shift.  These are the rows a
+    scenario-free lane contributes when it rides in a *mixed* per-lane
+    stack (``stack_schedules``) — numerically a no-op, so the scheduled
+    program computes the stationary trajectory for that lane (to within
+    the scheduled program family's bits; see docs/determinism.md)."""
+    import jax.numpy as jnp
+    return ScheduleArrays(jnp.ones((T,), jnp.float32),
+                          jnp.ones((T, W), bool),
+                          jnp.zeros((T,), jnp.float32))
+
+
+def stack_schedules(comps, T: int, W: int):
+    """Stack per-lane compiled scenarios along a leading batch axis.
+
+    ``comps`` is one ``CompiledScenario | None`` per batch lane, each
+    compiled for the same ``(T, W)`` shape.  Returns ``(arrays, scale)``
+    where ``arrays`` is a ``ScheduleArrays`` whose every leaf carries a
+    leading ``(n,)`` lane axis — the per-lane ``xs`` pytree the engine
+    vmaps over, so ONE scheduled program serves *any mix* of scenarios
+    of the shape — and ``scale`` is the ``(n, T)`` float64 host copy of
+    the realized budget factors (per-lane violation accounting).
+    ``None``/neutral lanes get identity rows (``neutral_schedule``).
+    """
+    import jax.numpy as jnp
+    for i, c in enumerate(comps):
+        if c is not None and (c.T != T or c.window != W):
+            raise ValueError(
+                f"stack_schedules: lane {i} compiled for (T={c.T}, "
+                f"window={c.window}), stacking for (T={T}, window={W}) — "
+                "compile every lane against the same horizon and config")
+    ident = None
+    rows, scales = [], []
+    for c in comps:
+        if c is None:
+            if ident is None:
+                ident = neutral_schedule(T, W)
+            rows.append(ident)
+            scales.append(np.ones(T, np.float64))
+        else:
+            rows.append(c.arrays)
+            scales.append(c.scale)
+    arrays = ScheduleArrays(*(jnp.stack(leaves)
+                              for leaves in zip(*rows)))
+    return arrays, np.stack(scales)
 
 
 _BUDGET_KINDS = ("constant", "step_decay", "outage")

@@ -2,8 +2,9 @@
 
 Pure planning logic (no jax, no threads — the server composes this with
 ``RequestQueue``): requests are grouped by their *static* configuration
-(everything that shapes the compiled program, plus the scenario — a
-batch runs ONE schedule — and the priority class), chunked to the
+(everything that shapes the compiled program, plus the schedule CLASS —
+stationary vs scheduled; per-lane schedule stacking means a batch can
+mix scenarios — and the priority class), chunked to the
 server's ``max_batch``, and padded up to a small set of bucket sizes so
 steady-state traffic re-uses a handful of compiled executables instead
 of tracing one per batch occupancy.  Planned buckets come back in
@@ -77,17 +78,24 @@ def _cfg_static_key(cfg, T: int) -> tuple:
 def group_key(req: SimRequest) -> tuple:
     """Requests sharing this key can ride in one batch: same stream
     (= same (K, n_stream) arrays), same algorithm, same horizon, same
-    static config, same execution mode, same **scenario** (a batch runs
-    ONE schedule — `run_batch`'s contract), and same priority (a bucket
-    dispatches as a unit, so a low-priority co-tenant would otherwise
-    ride ahead of its class).  Seed and budget — the flat batch axis —
-    are deliberately absent.
+    static config, same execution mode, same **schedule class**
+    (stationary vs scheduled — NOT the scenario itself: compiled
+    schedules stack per lane as jit arguments, so `run_batch` serves any
+    mix of scenarios in one program and tenants on different schedules
+    coalesce into one bucket), and same priority (a bucket dispatches as
+    a unit, so a low-priority co-tenant would otherwise ride ahead of
+    its class).  Seed, budget and scenario — the flat batch axis — are
+    deliberately absent.
 
-    ``req.scenario`` is a frozen ``repro.scenarios.Scenario`` (or
-    ``None``) — hashable by design, so it keys directly; ``submit``
-    resolves name strings before enqueueing."""
+    The class bit is ``req.scenario is not None``: scheduled and
+    stationary requests compile different programs, and keeping the
+    stationary class pure preserves the by-construction bit-equality of
+    scenario-free traffic (``SimServer.submit`` normalizes all-neutral
+    scenarios like ``"constant"`` to ``None``, so they land here too).
+    """
     return (req.stream, req.algo, req.T, req.exact,
-            _cfg_static_key(req.cfg, req.T), req.scenario, req.priority)
+            _cfg_static_key(req.cfg, req.T), req.scenario is not None,
+            req.priority)
 
 
 @dataclass
@@ -111,7 +119,9 @@ class Bucket:
         return self.key[3]
 
     @property
-    def scenario(self):
+    def scheduled(self) -> bool:
+        """True when the bucket's lanes run (per-lane) scenario
+        schedules; each request carries its own ``scenario``."""
         return self.key[5]
 
     @property

@@ -13,8 +13,10 @@ engine call:
   reproducibility mode.
 
 A compiled-executable cache keyed by (mode, stream name + registration
-version + shape, algorithm, T, W, static config, scenario, bucket size,
-sharded) makes steady-state traffic
+version + shape, algorithm, T, W, static config, schedule class
+(stationary vs scheduled — scenarios themselves are per-lane jit
+arguments, not key material), bucket size, sharded) makes steady-state
+traffic
 re-use a handful of compiled programs: every key is built (and its
 program compiled) exactly once, then hit forever — the engine's own
 scan cache plus the fixed bucket shapes guarantee no retracing
@@ -190,9 +192,14 @@ class SimServer:
 
         ``scenario`` is a registered scenario name or a
         ``repro.scenarios.Scenario`` (resolved here, so unknown names
-        fail the submitter, not a co-tenant's bucket); requests only
-        batch with requests running the same schedule.  ``priority``
-        (higher first) orders bucket dispatch — see
+        fail the submitter, not a co-tenant's bucket).  Requests batch
+        by schedule *class*, not by scenario: tenants on different
+        non-stationary schedules coalesce into one bucket, whose
+        compiled per-lane schedule rows stack along the batch axis
+        (``run_batch``).  All-neutral scenarios (``"constant"``) are
+        normalized to ``None`` here, so they ride the stationary
+        program — bit-equal to scenario-free traffic by construction.
+        ``priority`` (higher first) orders bucket dispatch — see
         docs/serving.md#priority.
         """
         from .queue import SimRequest, SimFuture
@@ -215,6 +222,16 @@ class SimServer:
             raise ValueError(
                 f"cfg must be a SimConfig (or None), got {type(cfg)!r}: "
                 f"{exc}") from exc
+        if scenario is not None:
+            # cfg validated above: compile (cached engine-side — warms
+            # the schedule the dispatch will use) and normalize neutral
+            # schedules to the stationary class
+            from repro.federated import SimConfig
+            from repro.federated.engine import _compile_scenario
+            comp = _compile_scenario(
+                scenario, req.T, cfg if cfg is not None else SimConfig())
+            if comp.neutral:
+                req.scenario = None
         fut = SimFuture(req)
         self._queue.put(req, fut)
         with self._lock:
@@ -264,13 +281,16 @@ class SimServer:
                 self._dispatch(bucket)
 
     def _resolve(self, bucket):
-        """(stream, cfg, per-lane budgets incl. padding) for a bucket.
+        """(stream, cfg, per-lane budgets, per-lane scenarios — padding
+        included) for a bucket.
 
         The bucket's group key guarantees every request shares the same
         *static* config, so ``req0.cfg`` can shape the program — but
-        ``budget`` is a per-lane knob excluded from the key, so a
-        ``budget=None`` request must fall back to its OWN config's
-        default, never a co-tenant's.
+        ``budget`` and ``scenario`` are per-lane knobs excluded from the
+        key: a ``budget=None`` request must fall back to its OWN
+        config's default, never a co-tenant's, and each lane runs its
+        own schedule (padding lanes repeat the last request's, a valid
+        configuration whose results are dropped).
         """
         from repro.federated import SimConfig
         req0 = bucket.requests[0][0]
@@ -286,7 +306,9 @@ class SimServer:
                          else default_budget)
                    for r, _ in bucket.requests]
         budgets += [budgets[-1]] * bucket.n_padding
-        return stream, cfg, budgets
+        scenarios = [r.scenario for r, _ in bucket.requests]
+        scenarios += [scenarios[-1]] * bucket.n_padding
+        return stream, cfg, budgets, scenarios
 
     def _dispatch(self, bucket) -> None:
         from repro.federated import run_simulation_scan, run_batch
@@ -300,17 +322,20 @@ class SimServer:
                 "n_padding": bucket.n_padding, "sharded": False,
                 "seq": seq}
         try:
-            stream, cfg, budgets = self._resolve(bucket)
+            stream, cfg, budgets, scens = self._resolve(bucket)
             req0 = bucket.requests[0][0]
-            scenario = req0.scenario      # group key: shared by the bucket
+            scheduled = bucket.scheduled  # group key: the schedule CLASS
+            meta["scheduled"] = scheduled
+            meta["n_scenarios"] = len({r.scenario
+                                       for r, _ in bucket.requests})
             W = eval_window(cfg)
             base_key = (req0.stream, stream.version, stream.K,
                         stream.n_stream, req0.algo, req0.T, W,
-                        bucket.key[4], scenario)
+                        bucket.key[4], scheduled)
             if bucket.exact:
                 key = ("exact", *base_key)
                 def build_exact():
-                    def run(seed, budget):
+                    def run(seed, budget, scenario):
                         return run_simulation_scan(
                             req0.algo, stream.preds, stream.y, stream.costs,
                             req0.T, replace(cfg, seed=int(seed),
@@ -318,8 +343,8 @@ class SimServer:
                             scenario=scenario)
                     return run
                 run = self.cache.get_or_build(key, build_exact)
-                results = [run(r.seed, b) for (r, _), b
-                           in zip(bucket.requests, budgets)]
+                results = [run(r.seed, b, s) for (r, _), b, s
+                           in zip(bucket.requests, budgets, scens)]
             else:
                 mesh = self.mesh
                 if mesh is not None and cfg.sweep_sharded is None:
@@ -341,14 +366,15 @@ class SimServer:
                                           batch_buckets(req0.algo, budgets))
                 key = ("batched", *base_key, bucket.size, sharded)
                 def build_batched():
-                    def run(seeds, budgets):
+                    def run(seeds, budgets, scenarios):
                         return run_batch(
                             req0.algo, stream.preds, stream.y, stream.costs,
                             req0.T, cfg, seeds, budgets, mesh=mesh,
-                            scenario=scenario)
+                            scenario=scenarios)
                     return run
                 run = self.cache.get_or_build(key, build_batched)
-                results = run(bucket.seeds(), budgets)[:bucket.n]
+                results = run(bucket.seeds(), budgets,
+                              scens if scheduled else None)[:bucket.n]
         except Exception as exc:                        # noqa: BLE001
             with self._lock:
                 self._stats["failed"] += bucket.n

@@ -45,6 +45,13 @@ def _serve_cell(rel, serial=0.5):
     }
 
 
+def _mixed_cell(rel=0.5, split=0.6):
+    return {
+        "t_split_s": split, "t_mixed_s": rel * split, "rel": rel,
+        "one_bucket": True, "lanes_equal_split": True,
+    }
+
+
 def _sharded_cell(rel=0.8, vmap=0.5):
     return {
         "t_sweep_vmap_s": vmap, "t_sweep_sharded_s": rel * vmap,
@@ -57,7 +64,8 @@ def _record():
     return {
         "eflfg": _algo_cell(), "fedboost": _algo_cell(0.5),
         "serve": {"eflfg": _serve_cell(0.80),     # speedup 1.25 > 1.1
-                  "fedboost": _serve_cell(0.40)},  # speedup 2.5  > 2.0
+                  "fedboost": _serve_cell(0.40),   # speedup 2.5  > 2.0
+                  "mixed_scenario": _mixed_cell(0.50)},  # 2.0 > 1.05
         "sharded_sweep": {"eflfg": _sharded_cell(),
                           "fedboost": _sharded_cell(),
                           "mesh2d": _sharded_cell()},
@@ -123,6 +131,40 @@ def test_serve_absolute_speedup_floor():
         floor_fails = [msg for kind, msg in failures
                        if kind == "timing" and "floor" in msg]
         assert any("fedboost" in msg for msg in floor_fails), with_baseline
+
+
+def test_mixed_scenario_flag_failure_is_hard():
+    """Per-lane bit-equality vs the scenario-split dispatch and the
+    single-bucket coalescing contract are determinism flags, not
+    timings — no retry may clear them."""
+    for flag in ("one_bucket", "lanes_equal_split"):
+        fresh = _record()
+        fresh["serve"]["mixed_scenario"][flag] = False
+        failures, _ = check_serve(_record(), fresh, THRESHOLD)
+        assert any(kind == "hard" and flag in msg
+                   for kind, msg in failures), flag
+        assert not retryable(failures)
+
+
+def test_mixed_scenario_absolute_floor():
+    """Coalescing must beat the scenario-split dispatch outright —
+    the floor is judged on the fresh run even without a baseline cell
+    for it (pre-refresh baselines miss only the relative gate)."""
+    assert SERVE_MIN_SPEEDUP["mixed_scenario"] > 1.0
+    base = _record()
+    del base["serve"]["mixed_scenario"]          # pre-refresh baseline
+    fresh = _record()
+    fresh["serve"]["mixed_scenario"] = _mixed_cell(0.99)  # 1.01 < 1.05
+    failures, _ = check_serve(base, fresh, THRESHOLD)
+    floor_fails = [msg for kind, msg in failures
+                   if kind == "timing" and "floor" in msg]
+    assert any("mixed_scenario" in msg for msg in floor_fails)
+    # ... but a stale baseline (section present, cell absent) is itself
+    # a hard failure: refresh BENCH_engine.json alongside the cell
+    fresh = _record()
+    failures, _ = check_serve(base, fresh, THRESHOLD)
+    assert any(kind == "hard" and "missing from baseline" in msg
+               for kind, msg in failures)
 
 
 def test_serve_floor_not_gated_below_noise_floor():

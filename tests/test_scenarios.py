@@ -512,6 +512,220 @@ def test_served_scenario_batched_equals_engine():
 
 
 # ---------------------------------------------------------------------------
+# Per-lane mixed scenarios: one program serves any scenario mix
+# ---------------------------------------------------------------------------
+
+# one preset per schedule channel (budget scale / participation mask /
+# label shift), all non-neutral at T=120
+MIX = ("step_decay", "partial_participation", "concept_drift")
+
+
+def test_mixed_scenario_batch_bit_equal_split_dispatch():
+    """A run_batch whose lanes carry different scenarios is bit-equal,
+    lane for lane, to scenario-keyed homogeneous dispatches of the same
+    requests — co-tenant schedules must not leak across lanes, and the
+    stacked program stays in the batched family."""
+    preds, y, costs = _stream()
+    cfg = SimConfig(budget=2.0, sweep_sharded=False)
+    T = 120
+    lanes = MIX * 2                   # 6 lanes, interleaved mix
+    mixed = run_batch("eflfg", preds, y, costs, T, cfg, seeds=range(6),
+                      scenario=list(lanes))
+    for name in MIX:
+        idx = [i for i, s in enumerate(lanes) if s == name]
+        split = run_batch("eflfg", preds, y, costs, T, cfg,
+                          seeds=idx, scenario=name)
+        for j, i in enumerate(idx):
+            assert mixed[i].identical_to(split[j]), f"{name} lane {i}"
+
+
+def test_mixed_participation_per_lane_divisor():
+    """Regression: lanes in one dispatch running different participation
+    masks must each normalize by their OWN surviving-client count.  A
+    per-bucket divisor would corrupt the full-participation lanes the
+    moment a masked co-tenant shared their batch — pinned by
+    bit-equality against the homogeneous dispatch for both algorithms,
+    plus the lockstep_waste identity on the mixed sweep."""
+    preds, y, costs = _stream()
+    cfg = SimConfig(budget=2.0, sweep_sharded=False)
+    T = 120
+    lanes = ["partial_participation", "concept_drift"] * 2  # masked/full
+    for algo in ("eflfg", "fedboost"):
+        mixed = run_batch(algo, preds, y, costs, T, cfg, seeds=range(4),
+                          scenario=lanes)
+        part = run_batch(algo, preds, y, costs, T, cfg, seeds=[0, 2],
+                         scenario="partial_participation")
+        full = run_batch(algo, preds, y, costs, T, cfg, seeds=[1, 3],
+                         scenario="concept_drift")
+        for i, r in zip([0, 2], part):
+            assert mixed[i].identical_to(r), f"{algo} masked lane {i}"
+        for i, r in zip([1, 3], full):
+            assert mixed[i].identical_to(r), f"{algo} full lane {i}"
+    sw = run_sweep("eflfg", preds, y, costs, T, cfg, seeds=range(4),
+                   scenario=lanes)
+    it = sw.graph_iters
+    assert sw.lockstep_waste == int((it.max(0, keepdims=True) - it).sum())
+
+
+def test_mixed_all_neutral_lanes_take_stationary_path():
+    """A per-lane sequence that is neutral in EVERY lane ("constant" /
+    None) must dispatch the scenario-free program — bit-equal by
+    construction to scenario=None, not merely float-close — and a
+    length mismatch fails fast."""
+    preds, y, costs = _stream()
+    cfg = SimConfig(budget=2.0, sweep_sharded=False)
+    T = 120
+    plain = run_batch("eflfg", preds, y, costs, T, cfg, seeds=range(3))
+    neut = run_batch("eflfg", preds, y, costs, T, cfg, seeds=range(3),
+                     scenario=["constant", None, "constant"])
+    for a, b in zip(plain, neut):
+        assert a.identical_to(b)
+    with pytest.raises(ValueError, match="per-lane"):
+        run_batch("eflfg", preds, y, costs, T, cfg, seeds=range(3),
+                  scenario=["constant", None])
+
+
+def test_mixed_scenario_sweep_per_lane_scale():
+    """run_sweep accepts a per-lane scenario sequence: lanes match the
+    mixed run_batch, budget_scale comes back (n_seeds, T), and
+    violations count against each lane's OWN realized budgets."""
+    preds, y, costs = _stream()
+    cfg = SimConfig(budget=2.0, sweep_sharded=False)
+    T = 120
+    sw = run_sweep("eflfg", preds, y, costs, T, cfg, seeds=range(3),
+                   scenario=list(MIX))
+    rb = run_batch("eflfg", preds, y, costs, T, cfg, seeds=range(3),
+                   scenario=list(MIX))
+    for i in range(3):
+        assert rb[i].identical_to_sweep_lane(sw, i), f"lane {i}"
+    assert sw.budget_scale.shape == (3, T)
+    # lane 0 decays, lanes 1-2 are budget-neutral
+    np.testing.assert_array_equal(
+        sw.budget_scale[0], scenarios.get("step_decay").budget.scale(T))
+    np.testing.assert_array_equal(sw.budget_scale[1:], 1.0)
+    realized = 2.0 * np.asarray(sw.budget_scale)
+    np.testing.assert_array_equal(
+        sw.violations, (sw.round_costs > realized + 1e-6).sum(-1))
+
+
+def test_mixed_scenario_stack_cache_reuse():
+    """The stacked per-lane schedule arrays are cached across waves: a
+    second dispatch of the same scenario mix (different seeds) reuses
+    the same device-resident stack instead of recompiling it."""
+    from repro.federated import engine
+    preds, y, costs = _stream()
+    cfg = SimConfig(budget=2.0, sweep_sharded=False)
+    T = 120
+    lanes = list(MIX * 2)
+    engine._STACK_CACHE.clear()
+    run_batch("eflfg", preds, y, costs, T, cfg, seeds=range(6),
+              scenario=lanes)
+    entries = {k: id(v) for k, v in engine._STACK_CACHE.items()}
+    assert len(entries) == 1
+    run_batch("eflfg", preds, y, costs, T, cfg, seeds=range(6, 12),
+              scenario=lanes)
+    assert {k: id(v) for k, v in engine._STACK_CACHE.items()} == entries
+
+
+def test_mixed_scenario_sharded_trivial_mesh_bit_equal():
+    """The per-lane schedule stack through the shard_map/padding
+    machinery (trivial one-device mesh) reproduces the mixed vmap path
+    bit-for-bit, pad_lane_tree included."""
+    from repro.launch.mesh import make_sweep_mesh
+    preds, y, costs = _stream()
+    T = 120
+    cfg_v = SimConfig(budget=2.0, sweep_sharded=False)
+    cfg = SimConfig(budget=2.0)
+    trivial = make_sweep_mesh(devices=jax.devices()[:1])
+    sv = run_sweep("eflfg", preds, y, costs, T, cfg_v, seeds=range(3),
+                   scenario=list(MIX))
+    ss = run_sweep("eflfg", preds, y, costs, T, cfg, seeds=range(3),
+                   mesh=trivial, scenario=list(MIX))
+    assert ss.sharded and not sv.sharded
+    assert ss.identical_to(sv)
+    np.testing.assert_array_equal(ss.budget_scale, sv.budget_scale)
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >1 device (forced-8 CI job)")
+def test_mixed_scenario_sharded_multi_device_bit_equal():
+    """Real partitioning of the lane axis: a mixed-scenario sweep
+    sharded over every visible device (schedule stack padded alongside
+    keys/budgets) matches the mixed vmap path."""
+    preds, y, costs = _stream()
+    T = 120
+    n_seeds = jax.device_count() + 2          # force pad_lane_tree
+    lanes = [MIX[i % len(MIX)] for i in range(n_seeds)]
+    cfg_v = SimConfig(budget=2.0, sweep_sharded=False)
+    cfg = SimConfig(budget=2.0, sweep_sharded=True)
+    sv = run_sweep("eflfg", preds, y, costs, T, cfg_v,
+                   seeds=range(n_seeds), scenario=lanes)
+    ss = run_sweep("eflfg", preds, y, costs, T, cfg,
+                   seeds=range(n_seeds), scenario=lanes)
+    assert ss.sharded
+    assert ss.identical_to(sv)
+    np.testing.assert_array_equal(ss.budget_scale, sv.budget_scale)
+
+
+def test_served_mixed_scenario_wave_single_bucket():
+    """The acceptance wave: 8 requests spanning three scenario presets
+    coalesce into ONE bucket (the group key carries only the schedule
+    CLASS) and dispatch as one batched program — each lane bit-equal to
+    the scenario-keyed dispatch of the same request."""
+    from repro.serve import SimServer, SimClient, SimRequest, group_key
+    preds, y, costs = _stream()
+    T, cfg = 120, SimConfig(budget=2.0)
+    ka = group_key(SimRequest(algo="eflfg", seed=0, T=T,
+                              scenario=scenarios.get("step_decay")))
+    kb = group_key(SimRequest(algo="eflfg", seed=0, T=T,
+                              scenario=scenarios.get("concept_drift")))
+    assert ka == kb               # different scenarios, one bucket class
+    lanes = [MIX[i % len(MIX)] for i in range(8)]
+    with SimServer(max_batch=8, max_wait_ms=100.0) as server:
+        server.register_stream("default", preds, y, costs)
+        futs = SimClient(server).submit_many(
+            [dict(algo="eflfg", seed=s, T=T, cfg=cfg, scenario=name)
+             for s, name in enumerate(lanes)])
+        served = [f.result(300) for f in futs]
+        st = server.stats()
+    assert st["batches"] == 1 and st["served"] == 8
+    execs = [f.execution for f in futs]
+    assert all(e["seq"] == execs[0]["seq"] for e in execs)
+    assert execs[0]["bucket"] == 8 and execs[0]["scheduled"]
+    assert execs[0]["n_scenarios"] == 3
+    cfg_v = SimConfig(budget=2.0, sweep_sharded=False)
+    for name in MIX:
+        idx = [i for i, s in enumerate(lanes) if s == name]
+        direct = run_batch("eflfg", preds, y, costs, T, cfg_v,
+                           seeds=idx, scenario=name)
+        for j, i in enumerate(idx):
+            assert served[i].identical_to(direct[j]), f"{name} lane {i}"
+
+
+def test_served_neutral_scenario_joins_stationary_bucket():
+    """submit normalizes all-neutral scenarios to None, so "constant"
+    traffic batches WITH stationary traffic — one bucket, and both
+    lanes bit-equal to the scenario-free program by construction."""
+    from repro.serve import SimServer, SimClient
+    preds, y, costs = _stream()
+    T, cfg = 120, SimConfig(budget=2.0)
+    with SimServer(max_batch=8, max_wait_ms=100.0) as server:
+        server.register_stream("default", preds, y, costs)
+        futs = SimClient(server).submit_many(
+            [dict(algo="eflfg", seed=0, T=T, cfg=cfg, scenario="constant"),
+             dict(algo="eflfg", seed=1, T=T, cfg=cfg)])
+        served = [f.result(120) for f in futs]
+        st = server.stats()
+    assert st["batches"] == 1
+    assert not futs[0].execution["scheduled"]
+    plain = run_batch("eflfg", preds, y, costs, T,
+                      SimConfig(budget=2.0, sweep_sharded=False),
+                      seeds=[0, 1])
+    for s, p in zip(served, plain):
+        assert s.identical_to(p)
+
+
+# ---------------------------------------------------------------------------
 # Committed artifacts + CLI wiring
 # ---------------------------------------------------------------------------
 

@@ -11,6 +11,12 @@ Validates the repo's markdown documentation (``docs/*.md`` +
 * **inline code paths** that look like repo paths (``src/...``,
   ``docs/...``, ``tests/...``, ``benchmarks/...``, ``experiments/...``,
   ``tools/...``) must exist — docs rot starts with renamed files;
+* **dotted code references** — inline code naming a package symbol
+  (``repro.federated.run_batch``, ``repro.serve.SimServer.submit``,
+  call parentheses tolerated) must resolve against the actual package:
+  the longest importable module prefix is imported and the rest walked
+  with ``getattr`` (dataclass/NamedTuple fields without class-level
+  defaults count as present);
 * **runnable code fences** — fenced blocks whose info string contains
   ``doctest`` (e.g. ```` ```python doctest ````) plus every ``>>>``
   example in module docstrings named by ``DOCTEST_MODULES`` — are
@@ -35,6 +41,8 @@ REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
 CODEPATH_RE = re.compile(
     r"`((?:src|docs|tests|benchmarks|experiments|tools)/[A-Za-z0-9_./-]+)`")
+# `repro.module.symbol` (optionally with call args) in inline code
+CODE_REF_RE = re.compile(r"`(repro(?:\.[A-Za-z_]\w*)+)(?:\([^`]*)?`")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
 ANCHOR_RE = re.compile(r'<a\s+name="([^"]+)"')
 FENCE_RE = re.compile(r"^```")
@@ -50,6 +58,47 @@ def github_slug(heading: str) -> str:
     text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)   # link text only
     text = re.sub(r"[^\w\- ]", "", text)
     return text.replace(" ", "-")
+
+
+_REF_CACHE: dict = {}
+
+
+def resolve_code_ref(dotted: str):
+    """None when ``dotted`` resolves against the package, else a reason.
+
+    Imports the longest importable module prefix, then walks the
+    remaining parts with ``getattr``.  Dataclass/NamedTuple fields
+    declared without class-level defaults are real attributes of every
+    *instance* but absent from the class, so the field tables are
+    consulted before declaring a reference stale."""
+    if dotted in _REF_CACHE:
+        return _REF_CACHE[dotted]
+    import importlib
+    parts = dotted.split(".")
+    mod, n_mod = None, 0
+    for n_mod in range(len(parts), 0, -1):
+        try:
+            mod = importlib.import_module(".".join(parts[:n_mod]))
+            break
+        except ImportError:
+            continue
+    if mod is None:
+        err = "cannot import any module prefix"
+    else:
+        err, obj = None, mod
+        for name in parts[n_mod:]:
+            try:
+                obj = getattr(obj, name)
+            except AttributeError:
+                if (name in getattr(obj, "__dataclass_fields__", {})
+                        or name in getattr(obj, "_fields", ())
+                        or name in getattr(obj, "__annotations__", {})):
+                    break      # an instance field; nothing deeper to walk
+                err = (f"{'.'.join(parts[:n_mod])!r} has no attribute "
+                       f"{name!r}")
+                break
+    _REF_CACHE[dotted] = err
+    return err
 
 
 def md_files(docs_dir: str) -> list:
@@ -116,6 +165,12 @@ def check_file(path: str, anchors_of, problems: list) -> None:
                     problems.append(
                         f"{rel}:{lineno}: stale path `{code_path}` "
                         "(no such file in the repo)")
+            for ref in CODE_REF_RE.findall(line):
+                err = resolve_code_ref(ref)
+                if err:
+                    problems.append(
+                        f"{rel}:{lineno}: stale code reference `{ref}` "
+                        f"({err})")
 
 
 def runnable_fences(path: str) -> list:
