@@ -41,7 +41,11 @@ results bit-equal to direct solo engine runs
 the schedule-class-coalesced bucket (one dispatch spanning three
 scenario presets) against the scenario-split dispatch of the same
 requests, with single-bucket and per-lane bit-equality flags plus an
-absolute mixed-vs-split throughput floor.
+absolute mixed-vs-split throughput floor.  The ``sustained`` serve cell
+is the open-loop load generator (``benchmarks.serve_load``): sustained
+traffic at ~70% of measured capacity, gated on the p99/p50
+tail-amplification ratio with a hard ``all_completed`` flag — and,
+like every serve cell, HARD-failed when a stale baseline lacks it.
 
 The ``scenario`` cells (schedule-threaded vs stationary scan,
 ``repro.scenarios``) are gated on their paired overhead ratio against
@@ -86,15 +90,23 @@ SHARDED_GATE_FLOOR_S = 0.05
 # schedule-class-coalesced bucket spanning three scenario presets vs the
 # scenario-split dispatch of the same requests
 # (docs/serving.md#scenarios).
-SERVE_CELLS = ("eflfg", "fedboost", "mixed_scenario")
+SERVE_CELLS = ("eflfg", "fedboost", "mixed_scenario", "sustained")
 SERVE_FLAGS = {
     "eflfg": ("served_equals_sweep", "exact_equals_direct"),
     "fedboost": ("served_equals_sweep", "exact_equals_direct"),
     "mixed_scenario": ("one_bucket", "lanes_equal_split"),
+    # every open-loop request must complete without a typed error
+    "sustained": ("all_completed",),
 }
 # Denominator / numerator timing keys per cell (default: serial/batched).
-SERVE_SERIAL_KEY = {"mixed_scenario": "t_split_s"}
-SERVE_BATCHED_KEY = {"mixed_scenario": "t_mixed_s"}
+# The sustained cell's `rel` is the p99/p50 tail amplification of the
+# open-loop wave (benchmarks.serve_load): p50 is the denominator the
+# timing floor is judged on, p99 the reported raw numerator.  Like the
+# other serve ratios it is a paired same-run statistic, so it needs no
+# reference-canary normalization — and the cell being missing from a
+# stale baseline is a HARD failure (the PR-7 policy), not a warning.
+SERVE_SERIAL_KEY = {"mixed_scenario": "t_split_s", "sustained": "p50_s"}
+SERVE_BATCHED_KEY = {"mixed_scenario": "t_mixed_s", "sustained": "p99_s"}
 # Absolute throughput floors (speedup = 1 / rel), judged on the fresh
 # run alone — no baseline section needed, so a throughput collapse
 # cannot ride a baseline refresh through CI.  The FedBoost cell holds

@@ -38,7 +38,11 @@ hard-fails on either flag.  A third serve cell, ``mixed_scenario``, times
 one wave spanning three scenario presets coalesced into a single bucket
 (per-lane schedule stacking) against the scenario-split dispatch of the
 same requests, gated on the mixed/split ratio plus single-bucket and
-per-lane bit-equality flags.
+per-lane bit-equality flags.  A fourth, ``sustained``, drives the
+open-loop load generator (``benchmarks.serve_load``) at ~70% of
+measured warm capacity and records sustained-load p50/p99 latency; the
+gate hard-fails when the cell is missing (stale baseline) or any
+request errored, and gates the p99/p50 tail-amplification ratio.
 
 Each record also carries a ``scenario`` section: the schedule-threaded
 round body (``repro.scenarios`` — per-round budget factors,
@@ -331,6 +335,14 @@ def _serve_record(fast: bool) -> dict:
         "one_bucket": one_bucket,
         "lanes_equal_split": lanes_eq,
     }
+
+    # Sustained-load cell: open-loop traffic at ~70% of measured warm
+    # capacity (benchmarks.serve_load) — p50 tracks the batched service
+    # time, p99 shows batching + queueing delay, and the gated `rel` is
+    # the tail amplification p99/p50 (a paired same-run ratio, machine-
+    # normalized by construction), plus the hard all_completed flag.
+    from benchmarks.serve_load import sustained_record
+    rec["sustained"] = sustained_record(preds, y, costs, fast)
     return rec
 
 
@@ -647,6 +659,15 @@ def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False,
                      "-", str(c["one_bucket"])))
         rows.append(("engine/serve/mixed_scenario/lanes_equal_split",
                      "-", str(c["lanes_equal_split"])))
+        c = srv["sustained"]
+        rows.append(("engine/serve/sustained/p50_s",
+                     "-", f"{c['p50_s']:.4f}"))
+        rows.append(("engine/serve/sustained/p99_s",
+                     "-", f"{c['p99_s']:.4f}"))
+        rows.append(("engine/serve/sustained/throughput_req_s",
+                     "-", f"{c['throughput_req_s']:.2f}"))
+        rows.append(("engine/serve/sustained/all_completed",
+                     "-", str(c["all_completed"])))
 
     if not skip_sharded:
         rec["sharded_sweep"] = sharded = _sharded_sweep_record(fast)
@@ -717,7 +738,7 @@ def merge_conservative(recs: list) -> dict:
     for section, cells in (("sharded_sweep", ("eflfg", "fedboost",
                                               "mesh2d")),
                            ("serve", ("eflfg", "fedboost",
-                                      "mixed_scenario")),
+                                      "mixed_scenario", "sustained")),
                            ("scenario", ("eflfg", "fedboost"))):
         secs = [r[section] for r in recs if section in r]
         if not secs or section not in out:

@@ -1,0 +1,216 @@
+"""Open-loop load generator for the serving tier (p50/p99 latency).
+
+Closed-loop benchmarks (submit, wait, submit ...) hide queueing: a
+stalled server just slows the *generator* down, and every recorded
+latency still looks like the bare service time (coordinated omission).
+This generator is **open-loop**: request ``i`` is injected at
+``t0 + i / arrival_hz`` no matter how the previous ones are doing, and
+each latency is measured from the request's *scheduled* arrival to its
+completion callback — so admission queueing, batching delay and worker
+backlog all land in the tail where they belong.
+
+Two frontends:
+
+* ``sustained_record(...)`` — the ``serve.sustained`` cell of
+  ``BENCH_engine.json`` (called by ``benchmarks.engine_bench``):
+  in-process ``SimServer`` traffic at ~70% of the measured warm
+  capacity, reporting ``p50_s`` / ``p99_s`` and the gated tail
+  amplification ``rel = p99/p50`` (a paired ratio, machine-normalized
+  by construction) plus a hard ``all_completed`` flag.
+* the CLI — the same wave against a live remote daemon:
+
+      PYTHONPATH=src python -m benchmarks.serve_load \
+          --remote 127.0.0.1:41523 --n 64 --hz 8 --algo fedboost --T 300
+
+  (the daemon needs its stream registered first; see
+  ``python -m repro.launch.served register-stream`` and
+  docs/serving.md#remote-mode).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import threading
+import time
+
+__all__ = ["run_open_loop", "summarize", "sustained_record", "main"]
+
+
+def _percentile(sorted_vals, q: float) -> float:
+    """Nearest-rank percentile of an already-sorted list."""
+    if not sorted_vals:
+        return float("nan")
+    rank = max(1, math.ceil(q / 100.0 * len(sorted_vals)))
+    return sorted_vals[rank - 1]
+
+
+def run_open_loop(submit, specs, arrival_hz: float,
+                  timeout_s: float = 600.0) -> dict:
+    """Inject ``specs`` through ``submit(spec) -> future`` at a fixed
+    ``arrival_hz``; returns raw samples (see ``summarize``).
+
+    Latencies are scheduled-arrival to completion (open-loop: no
+    coordinated omission).  ``submit`` may be an in-process
+    ``SimClient.submit`` or the remote one — anything returning a
+    future with ``add_done_callback``/``result``.
+    """
+    interval = 1.0 / float(arrival_hz)
+    lock = threading.Lock()
+    all_done = threading.Event()
+    lats: list = []
+    errors: list = []
+    remaining = len(specs)
+    t0 = time.monotonic() + 0.005
+
+    def _on_done(fut, t_sched):
+        nonlocal remaining
+        dt = time.monotonic() - t_sched
+        with lock:
+            try:
+                fut.result(timeout=0)
+                lats.append(dt)
+            except Exception as exc:        # noqa: BLE001 - typed tally
+                errors.append(type(exc).__name__)
+            remaining -= 1
+            if remaining == 0:
+                all_done.set()
+
+    for i, spec in enumerate(specs):
+        t_sched = t0 + i * interval
+        delay = t_sched - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        try:
+            fut = submit(spec)
+        except Exception as exc:            # noqa: BLE001 - sync reject
+            with lock:
+                errors.append(type(exc).__name__)
+                remaining -= 1
+                if remaining == 0:
+                    all_done.set()
+            continue
+        fut.add_done_callback(
+            lambda f, ts=t_sched: _on_done(f, ts))
+    if not all_done.wait(timeout_s):
+        raise TimeoutError(
+            f"open-loop wave incomplete after {timeout_s}s "
+            f"({remaining} of {len(specs)} outstanding)")
+    wall_s = time.monotonic() - t0
+    return {"lats": lats, "errors": errors, "wall_s": wall_s,
+            "n": len(specs), "arrival_hz": float(arrival_hz)}
+
+
+def summarize(raw: dict) -> dict:
+    """The sustained-load cell: p50/p99/max latency, throughput, and
+    ``rel = p99/p50`` — the gated tail-amplification ratio (both
+    quantiles come from the same run, so the machine's speed cancels
+    out of it, like the other serve ratios)."""
+    ls = sorted(raw["lats"])
+    p50 = _percentile(ls, 50.0)
+    p99 = _percentile(ls, 99.0)
+    return {
+        "n_requests": raw["n"],
+        "arrival_hz": round(raw["arrival_hz"], 3),
+        "completed": len(ls),
+        "errors": len(raw["errors"]),
+        "error_types": sorted(set(raw["errors"])),
+        "all_completed": not raw["errors"] and len(ls) == raw["n"],
+        "p50_s": round(p50, 4),
+        "p99_s": round(p99, 4),
+        "max_s": round(ls[-1], 4) if ls else float("nan"),
+        # tail amplification p99/p50: the gated statistic
+        "rel": round(p99 / p50, 4) if ls and p50 > 0 else None,
+        "throughput_req_s": round(len(ls) / raw["wall_s"], 2),
+    }
+
+
+def sustained_record(preds, y, costs, fast: bool,
+                     algo: str = "fedboost") -> dict:
+    """The ``serve.sustained`` BENCH cell: open-loop traffic against an
+    in-process ``SimServer`` at ~70% of measured warm capacity.
+
+    The arrival rate is calibrated per machine (one warm closed wave
+    measures capacity), so the cell sits in the same utilization regime
+    everywhere: p50 tracks the batched service time, p99 shows batching
+    + queueing delay, and ``rel = p99/p50`` is comparable across hosts.
+    FedBoost traffic — the batching-win path, free of the EFL-FG graph
+    lockstep that would dominate the quantiles (docs/serving.md#tuning).
+    """
+    from dataclasses import replace
+
+    from repro.federated import SimConfig
+    from repro.serve import SimClient, SimServer
+
+    T = 300 if fast else 2000
+    n_req, max_batch = 64, 16
+    cfg = SimConfig(n_clients=100, budget=3.0, use_fused=False)
+    specs = [dict(algo=algo, seed=s, T=T, cfg=cfg) for s in range(n_req)]
+
+    with SimServer(max_batch=max_batch, max_wait_ms=1.0) as server:
+        server.register_stream("default", preds, y, costs)
+        client = SimClient(server)
+        # warm the bucket executables, then measure closed-loop capacity
+        warm = [client.submit(**s) for s in specs[:max_batch]]
+        for f in warm:
+            f.result(timeout=3600.0)
+        t0 = time.monotonic()
+        warm = [client.submit(**s) for s in specs[:max_batch]]
+        for f in warm:
+            f.result(timeout=3600.0)
+        cap_hz = max_batch / max(time.monotonic() - t0, 1e-6)
+        hz = 0.7 * cap_hz
+        raw = run_open_loop(lambda s: client.submit(**s), specs, hz,
+                            timeout_s=3600.0)
+    rec = summarize(raw)
+    rec.update({"algo": algo, "T": T, "max_batch": max_batch,
+                "capacity_req_s": round(cap_hz, 2),
+                "utilization_target": 0.7})
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# CLI: the same wave against a live remote daemon
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.serve_load",
+        description="open-loop load generator for the serving tier")
+    ap.add_argument("--remote", required=True,
+                    help="host:port of a running serve daemon "
+                         "(repro.launch.served start)")
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--hz", type=float, default=8.0,
+                    help="open-loop arrival rate (requests/s)")
+    ap.add_argument("--algo", default="fedboost",
+                    choices=("eflfg", "fedboost"))
+    ap.add_argument("--T", type=int, default=300)
+    ap.add_argument("--stream", default="default")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline (typed DeadlineExceeded "
+                         "counts as an error in the tally)")
+    ap.add_argument("--timeout", type=float, default=600.0)
+    args = ap.parse_args(argv)
+
+    from repro.serve import SimClient
+    host, _, port = args.remote.rpartition(":")
+    client = SimClient.connect((host or "127.0.0.1", int(port)))
+    specs = [dict(algo=args.algo, seed=s, T=args.T, stream=args.stream)
+             for s in range(args.n)]
+    if args.deadline_s is not None:
+        for s in specs:
+            s["deadline_s"] = args.deadline_s
+    try:
+        raw = run_open_loop(lambda s: client.submit(**s), specs,
+                            args.hz, timeout_s=args.timeout)
+    finally:
+        client.close()
+    print(json.dumps(summarize(raw), indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,244 @@
+"""Management CLI for the remote serving daemon.
+
+``python -m repro.launch.served`` controls a detached
+``repro.serve.daemon`` process through a pidfile:
+
+    PYTHONPATH=src python -m repro.launch.served start \
+        --pidfile /tmp/served.json --max-pending 256
+    PYTHONPATH=src python -m repro.launch.served register-stream \
+        --pidfile /tmp/served.json --name default --npz stream.npz
+    PYTHONPATH=src python -m repro.launch.served status \
+        --pidfile /tmp/served.json
+    PYTHONPATH=src python -m repro.launch.served stop \
+        --pidfile /tmp/served.json
+
+``start`` spawns the daemon detached (its own session), waits for the
+DAEMON-READY handshake, and prints the address clients pass to
+``SimClient.connect``.  ``stop`` asks for a graceful drain over RPC
+(in-flight requests are served, new ones rejected ``Overloaded``),
+falling back to SIGTERM, and waits for the pidfile to disappear.
+``register-stream`` ships a ``.npz`` with ``preds`` (K, n_stream),
+``y`` (n_stream,) and ``costs`` (K,) arrays; re-registering a name
+bumps its version and invalidates the worker's cached executables for
+the old data.  See docs/serving.md#remote-mode.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+_EPILOG = """\
+subcommand details:
+
+  start            spawn a detached daemon (pidfile + ready handshake);
+                   prints {"pid", "host", "port"} on success
+  stop             graceful drain via RPC (SIGTERM fallback); waits for
+                   the pidfile to disappear
+  status           the daemon's status() document: queue depth,
+                   in-flight count, stream versions, worker liveness
+  register-stream  upload a tenant stream from an .npz (preds, y,
+                   costs); idempotent per content, version-bumping per
+                   call
+  list-streams     registered stream names + versions (worker view)
+
+docs/serving.md#remote-mode documents addressing, deadlines, failure
+semantics and tuning for the remote tier.
+"""
+
+
+def _read_pidfile(path: str) -> dict:
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except FileNotFoundError:
+        raise SystemExit(f"no pidfile at {path} — is the daemon running?")
+    except json.JSONDecodeError as exc:
+        raise SystemExit(f"unreadable pidfile {path}: {exc}")
+
+
+def _rpc(info: dict, method: str, params=None, deadline_s: float = 30.0):
+    from repro.serve.transport import RpcClient
+    client = RpcClient((info["host"], info["port"]), connect_timeout=5.0)
+    try:
+        return client.call(method, params or {}, deadline_s=deadline_s)
+    finally:
+        client.close()
+
+
+def _alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+        return True
+    except (ProcessLookupError, PermissionError):
+        return False
+
+
+# ---------------------------------------------------------------------------
+# subcommands
+# ---------------------------------------------------------------------------
+
+def cmd_start(args) -> int:
+    if os.path.exists(args.pidfile):
+        info = _read_pidfile(args.pidfile)
+        if _alive(info.get("pid", -1)):
+            raise SystemExit(f"daemon already running (pid {info['pid']}, "
+                             f"{info['host']}:{info['port']})")
+        os.unlink(args.pidfile)         # stale pidfile from a hard kill
+    cmd = [sys.executable, "-m", "repro.serve.daemon",
+           "--host", args.host, "--port", str(args.port),
+           "--pidfile", args.pidfile,
+           "--max-pending", str(args.max_pending),
+           "--retry-limit", str(args.retry_limit),
+           "--heartbeat-s", str(args.heartbeat_s),
+           "--max-batch", str(args.max_batch),
+           "--max-wait-ms", str(args.max_wait_ms)]
+    log = open(args.log, "ab") if args.log else subprocess.DEVNULL
+    proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, stderr=log,
+                            start_new_session=True, text=True,
+                            env=dict(os.environ))
+    from repro.serve.daemon import READY_PREFIX
+    deadline = time.monotonic() + args.spawn_timeout
+    info = None
+    while time.monotonic() < deadline:
+        line = proc.stdout.readline()
+        if not line:
+            break
+        if line.startswith(READY_PREFIX):
+            info = json.loads(line[len(READY_PREFIX):])
+            break
+    if info is None:
+        proc.kill()
+        raise SystemExit("daemon failed to become ready "
+                         f"(see {args.log or 'its stderr'})")
+    proc.stdout.close()                 # detach: the daemon outlives us
+    print(json.dumps(info))
+    return 0
+
+
+def cmd_stop(args) -> int:
+    info = _read_pidfile(args.pidfile)
+    pid = info["pid"]
+    try:
+        _rpc(info, "stop", deadline_s=10.0)
+    except Exception:                   # noqa: BLE001 - endpoint gone
+        if _alive(pid):
+            os.kill(pid, signal.SIGTERM)
+    deadline = time.monotonic() + args.timeout
+    while time.monotonic() < deadline:
+        if not os.path.exists(args.pidfile) and not _alive(pid):
+            print(json.dumps({"stopped": pid}))
+            return 0
+        time.sleep(0.1)
+    if _alive(pid):
+        raise SystemExit(f"daemon {pid} did not stop within "
+                         f"{args.timeout}s (drain still running?)")
+    os.unlink(args.pidfile)             # process gone, pidfile orphaned
+    print(json.dumps({"stopped": pid}))
+    return 0
+
+
+def cmd_status(args) -> int:
+    info = _read_pidfile(args.pidfile)
+    if not _alive(info["pid"]):
+        raise SystemExit(f"pidfile names pid {info['pid']} but it is not "
+                         "running (stale pidfile)")
+    print(json.dumps(_rpc(info, "status", deadline_s=10.0), indent=2,
+                     default=str))
+    return 0
+
+
+def cmd_register_stream(args) -> int:
+    import numpy as np
+    with np.load(args.npz) as data:
+        missing = {"preds", "y", "costs"} - set(data.files)
+        if missing:
+            raise SystemExit(f"{args.npz} is missing arrays: "
+                             f"{sorted(missing)}")
+        params = {"name": args.name, "preds": data["preds"],
+                  "y": data["y"], "costs": data["costs"]}
+    info = _read_pidfile(args.pidfile)
+    print(json.dumps(_rpc(info, "register_stream", params,
+                          deadline_s=120.0)))
+    return 0
+
+
+def cmd_list_streams(args) -> int:
+    info = _read_pidfile(args.pidfile)
+    print(json.dumps(_rpc(info, "list_streams", deadline_s=10.0),
+                     indent=2))
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# argument plumbing
+# ---------------------------------------------------------------------------
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.served",
+        description="manage the remote serving daemon (repro.serve)",
+        epilog=_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def common(p):
+        p.add_argument("--pidfile", required=True,
+                       help="JSON pidfile tying the CLI to one daemon")
+
+    p = sub.add_parser("start", help="spawn a detached daemon")
+    common(p)
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=0,
+                   help="0 = ephemeral (read the printed address)")
+    p.add_argument("--max-pending", type=int, default=256,
+                   help="admission bound: queued + in-flight requests "
+                        "beyond this are rejected Overloaded")
+    p.add_argument("--retry-limit", type=int, default=1,
+                   help="re-dispatches per request after a worker death")
+    p.add_argument("--heartbeat-s", type=float, default=1.0)
+    p.add_argument("--max-batch", type=int, default=16)
+    p.add_argument("--max-wait-ms", type=float, default=2.0)
+    p.add_argument("--log", default=None,
+                   help="file for daemon+worker stderr (default: discard)")
+    p.add_argument("--spawn-timeout", type=float, default=180.0,
+                   help="seconds to wait for DAEMON-READY (the worker "
+                        "pays the jax import on first spawn)")
+    p.set_defaults(fn=cmd_start)
+
+    p = sub.add_parser("stop", help="graceful drain + shutdown")
+    common(p)
+    p.add_argument("--timeout", type=float, default=90.0)
+    p.set_defaults(fn=cmd_stop)
+
+    p = sub.add_parser("status", help="daemon status document")
+    common(p)
+    p.set_defaults(fn=cmd_status)
+
+    p = sub.add_parser("register-stream",
+                       help="upload a tenant stream from an .npz")
+    common(p)
+    p.add_argument("--name", default="default")
+    p.add_argument("--npz", required=True,
+                   help=".npz with preds (K, n_stream), y (n_stream,), "
+                        "costs (K,)")
+    p.set_defaults(fn=cmd_register_stream)
+
+    p = sub.add_parser("list-streams", help="registered streams + versions")
+    common(p)
+    p.set_defaults(fn=cmd_list_streams)
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,9 +20,15 @@ Quick start::
         results = client.map(
             [dict(algo="fedboost", seed=s, T=2000) for s in range(32)])
 
+Remote mode crosses a process boundary with the same client surface:
+``SimClient.connect("host:port")`` talks to a management daemon
+(``repro.serve.daemon``, CLI ``python -m repro.launch.served``) that
+supervises a ``repro.serve.worker`` subprocess over the framed RPC
+transport (``repro.serve.transport``) — docs/serving.md#remote-mode.
+
 Docs: docs/serving.md (lifecycle, bucketing, determinism, tuning),
-docs/api.md (reference).  CLI driver: ``python -m repro.launch.serve
-simulate``.
+docs/api.md (reference).  CLI drivers: ``python -m repro.launch.serve
+simulate`` (in-process), ``python -m repro.launch.served`` (daemon).
 """
 
 from .queue import SimRequest, SimFuture, RequestQueue, QueueClosed, ALGOS
@@ -30,8 +36,13 @@ from .batcher import (Bucket, DynamicBatcher, bucket_size, bucket_sizes,
                       group_key, plan_buckets)
 from .server import ExecutableCache, SimServer, Stream
 from .client import SimClient
+from .transport import (TransportError, FrameError, ConnectionLost,
+                        DeadlineExceeded, Overloaded, WorkerDied,
+                        RemoteError)
 
 __all__ = ["ALGOS", "SimRequest", "SimFuture", "RequestQueue",
            "QueueClosed", "Bucket", "DynamicBatcher", "bucket_size",
            "bucket_sizes", "group_key", "plan_buckets", "ExecutableCache",
-           "SimServer", "Stream", "SimClient"]
+           "SimServer", "Stream", "SimClient", "TransportError",
+           "FrameError", "ConnectionLost", "DeadlineExceeded", "Overloaded",
+           "WorkerDied", "RemoteError"]

@@ -35,14 +35,45 @@ class SimClient:
     def __init__(self, server):
         self.server = server
 
+    @classmethod
+    def connect(cls, addr, **kw) -> "SimClient":
+        """Remote mode: a ``SimClient`` over a serve-daemon endpoint
+        (``"host:port"`` or ``(host, port)``; see
+        ``repro.launch.served`` for running one).
+
+        The returned client's ``submit``/``SimFuture``/``aio_submit``
+        surface is verbatim the in-process one; extra keywords
+        (``retries``, ``backoff_s``, ``connect_timeout``) configure the
+        ``repro.serve.remote.RemoteServer`` adapter underneath.  Remote
+        futures can additionally fail with the typed transport errors
+        (docs/serving.md#remote-mode), and ``submit`` accepts a
+        ``deadline_s`` bound.
+        """
+        from .remote import RemoteServer
+        return cls(RemoteServer(addr, **kw))
+
     def submit(self, algo: str, seed: int, *, T: int,
                budget: Optional[float] = None, stream: str = "default",
                cfg=None, exact: bool = False, scenario=None,
-               priority: int = 0):
-        """Enqueue one request; returns its ``SimFuture``."""
+               priority: int = 0, deadline_s: Optional[float] = None):
+        """Enqueue one request; returns its ``SimFuture``.
+
+        ``deadline_s`` (remote mode only) bounds the whole attempt,
+        queue wait and retries included: the future is guaranteed to
+        settle — result or typed error — within it.
+        """
+        kw = {} if deadline_s is None else {"deadline_s": deadline_s}
         return self.server.submit(algo, seed, T=T, budget=budget,
                                   stream=stream, cfg=cfg, exact=exact,
-                                  scenario=scenario, priority=priority)
+                                  scenario=scenario, priority=priority,
+                                  **kw)
+
+    def close(self) -> None:
+        """Close a remote connection (no-op over an in-process server —
+        the ``SimServer`` lifecycle belongs to whoever started it)."""
+        close = getattr(self.server, "close", None)
+        if close is not None:
+            close()
 
     async def aio_submit(self, algo: str, seed: int, *, T: int, **kw):
         """Submit one request and ``await`` its ``SimResult`` — the

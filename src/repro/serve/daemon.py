@@ -1,0 +1,517 @@
+"""The serving management daemon: the front door of the remote tier.
+
+``ServeDaemon`` owns the client-facing RPC endpoint and supervises one
+``repro.serve.worker`` subprocess (the only process that imports jax —
+the daemon itself is stdlib + numpy, so its control loops never stall
+behind a compile).  Responsibilities, each pinned by
+``tests/test_transport_faults.py`` / ``tests/test_served_daemon.py``:
+
+* **admission control** — a bounded ``RequestQueue``; when
+  ``queued + in-flight`` reaches ``max_pending`` (or the daemon is
+  draining), submits are rejected with a typed ``Overloaded`` the
+  client can retry after backoff.
+* **deadline-aware drop** — each admitted request carries an absolute
+  deadline (from the request's remaining-budget ``deadline_ms``); the
+  pump fails expired requests with ``DeadlineExceeded`` *before*
+  forwarding, so a backed-up queue sheds load instead of computing
+  results nobody is waiting for.
+* **worker liveness** — a heartbeat thread pings the worker; on misses
+  (or connection loss) the worker is declared dead, killed, and
+  respawned, and every cached stream is re-registered (the worker's
+  process-local executable cache starts cold, versions bumped).
+* **requeue-or-fail, exactly once** — in-flight requests whose worker
+  died are ``RequestQueue.restore``d for one more attempt (idempotent
+  submits: re-running a simulation is bit-identical), then failed with
+  ``WorkerDied``.  A future settles exactly once: ``restore`` drops
+  already-settled futures, and settling is first-wins.
+* **graceful drain** — ``drain_and_stop`` rejects new submits, serves
+  everything admitted, shuts the worker down, and only then stops the
+  front endpoint; ``repro.launch.served`` wires this to SIGTERM.
+
+Run it in the foreground with ``python -m repro.serve.daemon``;
+``repro.launch.served start`` is the detached launcher (pidfile,
+ready handshake).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+from typing import Optional
+
+from .queue import RequestQueue, SimFuture, SimRequest
+from .transport import (ConnectionLost, DeadlineExceeded, Overloaded,
+                        RpcClient, RpcServer, TransportError, WorkerDied)
+
+__all__ = ["ServeDaemon", "WorkerHandle", "main", "READY_PREFIX"]
+
+READY_PREFIX = "DAEMON-READY "
+
+
+class WorkerHandle:
+    """One spawned worker: subprocess + RPC client + spawn epoch."""
+
+    def __init__(self, proc: Optional[subprocess.Popen], client: RpcClient,
+                 epoch: int):
+        self.proc = proc
+        self.client = client
+        self.epoch = epoch
+
+    @property
+    def pid(self) -> Optional[int]:
+        return self.proc.pid if self.proc is not None else None
+
+    @property
+    def alive(self) -> bool:
+        if not self.client.alive:
+            return False
+        return self.proc is None or self.proc.poll() is None
+
+    def kill(self) -> None:
+        self.client.close()
+        if self.proc is None:
+            return
+        if self.proc.poll() is None:
+            self.proc.terminate()
+            try:
+                self.proc.wait(timeout=5.0)
+            except subprocess.TimeoutExpired:
+                self.proc.kill()
+                self.proc.wait(timeout=5.0)
+
+
+def _spawn_worker_subprocess(worker_args: dict, epoch: int) -> WorkerHandle:
+    """Default worker factory: ``python -m repro.serve.worker`` with an
+    ephemeral port, handshaken via the WORKER-READY stdout line (slow on
+    purpose — the worker imports jax)."""
+    cmd = [sys.executable, "-m", "repro.serve.worker", "--port", "0",
+           "--max-batch", str(worker_args.get("max_batch", 16)),
+           "--max-wait-ms", str(worker_args.get("max_wait_ms", 2.0))]
+    proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, stderr=None,
+                            env=dict(os.environ), text=True)
+    from .worker import READY_PREFIX as WORKER_READY
+    deadline = time.monotonic() + worker_args.get("spawn_timeout_s", 120.0)
+    addr = None
+    while time.monotonic() < deadline:
+        line = proc.stdout.readline()
+        if not line:
+            break
+        if line.startswith(WORKER_READY):
+            info = json.loads(line[len(WORKER_READY):])
+            addr = (info["host"], info["port"])
+            break
+    if addr is None:
+        proc.kill()
+        raise WorkerDied("worker failed to announce readiness")
+    client = RpcClient(addr, connect_timeout=10.0)
+    return WorkerHandle(proc, client, epoch)
+
+
+class ServeDaemon:
+    """See module docstring.  ``worker_factory(worker_args, epoch)`` is
+    injectable so the fault tests can stand up stub peers."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 max_pending: int = 256, retry_limit: int = 1,
+                 heartbeat_s: float = 1.0, heartbeat_misses: int = 3,
+                 poll_s: float = 0.02, linger_s: float = 0.002,
+                 worker_factory=None, worker_args: Optional[dict] = None):
+        self._host, self._port = host, port
+        self.max_pending = int(max_pending)
+        self.retry_limit = int(retry_limit)
+        self.heartbeat_s = float(heartbeat_s)
+        self.heartbeat_misses = int(heartbeat_misses)
+        self._poll_s, self._linger_s = float(poll_s), float(linger_s)
+        self._worker_factory = worker_factory or _spawn_worker_subprocess
+        self._worker_args = dict(worker_args or {})
+        self._queue = RequestQueue()
+        self._lock = threading.Lock()
+        self._streams: dict = {}        # name -> {preds,y,costs,version}
+        self._worker: Optional[WorkerHandle] = None
+        self._epoch = 0
+        self._misses = 0
+        self._restarts = 0
+        self._inflight: dict = {}       # id(fut) -> (req, fut)
+        self._draining = False
+        self._stopped = threading.Event()
+        self._rpc: Optional[RpcServer] = None
+        self._threads: list = []
+        self.counters = {"admitted": 0, "rejected": 0, "expired": 0,
+                         "retried": 0, "worker_failed": 0, "completed": 0}
+
+    # -- lifecycle --------------------------------------------------------
+
+    @property
+    def addr(self) -> tuple:
+        return self._rpc.addr
+
+    def start(self) -> "ServeDaemon":
+        self._spawn_worker()
+        self._rpc = RpcServer({
+            "ping": lambda p, c: {"pong": True},
+            "submit": self._h_submit,
+            "register_stream": self._h_register_stream,
+            "list_streams": self._h_list_streams,
+            "status": lambda p, c: self.status(),
+            "stop": self._h_stop,
+        }, host=self._host, port=self._port).start()
+        for name, target in (("daemon-pump", self._pump_loop),
+                             ("daemon-heartbeat", self._heartbeat_loop)):
+            t = threading.Thread(target=target, name=name, daemon=True)
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def __enter__(self) -> "ServeDaemon":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.drain_and_stop()
+
+    # -- front handlers ---------------------------------------------------
+
+    def _pending_count(self) -> int:
+        with self._lock:
+            inflight = len(self._inflight)
+        return len(self._queue) + inflight
+
+    def _reject(self, why: str):
+        with self._lock:
+            self.counters["rejected"] += 1
+        raise Overloaded(why)
+
+    def _h_submit(self, params, ctx):
+        if self._draining:
+            self._reject("daemon is draining; submit elsewhere")
+        if self._pending_count() >= self.max_pending:
+            self._reject(
+                f"admission queue full ({self.max_pending} pending)")
+        with self._lock:
+            known = params.get("stream", "default") in self._streams
+        if not known:
+            raise ValueError(
+                f"unknown stream {params.get('stream', 'default')!r}; "
+                "register-stream first")
+        scenario = params.get("scenario")
+        if scenario is not None and not isinstance(scenario, str):
+            raise TypeError("remote scenarios must be registered names")
+        # SimRequest validates algo/T synchronously — the submitter gets
+        # the ValueError, never a co-tenant.  cfg stays an opaque wire
+        # dict here; only the worker materializes a SimConfig.
+        req = SimRequest(
+            algo=params["algo"], seed=int(params["seed"]),
+            T=int(params["T"]), budget=params.get("budget"),
+            stream=params.get("stream", "default"),
+            cfg=params.get("cfg"), exact=bool(params.get("exact", False)),
+            scenario=scenario, priority=int(params.get("priority", 0)),
+            deadline=ctx["deadline"])
+        fut = SimFuture(req)
+        fut.attempts = 0
+        try:
+            self._queue.put(req, fut)
+        except Exception as exc:
+            self._reject(f"not accepting requests: {exc}")
+        with self._lock:
+            self.counters["admitted"] += 1
+        return fut                      # deferred: replied on fulfillment
+
+    def _h_register_stream(self, params, ctx):
+        name = params["name"]
+        with self._lock:
+            version = self._streams.get(name, {}).get("version", 0) + 1
+            self._streams[name] = {"preds": params["preds"],
+                                   "y": params["y"],
+                                   "costs": params["costs"],
+                                   "version": version}
+            worker = self._worker
+        if worker is None:
+            raise WorkerDied("no live worker to register the stream with")
+        reply = worker.client.call("register_stream", params,
+                                   deadline_s=60.0)
+        return {"name": name, "daemon_version": version,
+                "worker_version": reply["version"], "K": reply["K"],
+                "n_stream": reply["n_stream"]}
+
+    def _h_list_streams(self, params, ctx):
+        with self._lock:
+            worker = self._worker
+            cached = {n: {"version": s["version"]}
+                      for n, s in sorted(self._streams.items())}
+        if worker is not None and worker.alive:
+            try:
+                return worker.client.call("list_streams", {},
+                                          deadline_s=10.0)
+            except TransportError:
+                pass
+        return cached
+
+    def _h_stop(self, params, ctx):
+        threading.Thread(target=self.drain_and_stop,
+                         name="daemon-stop", daemon=True).start()
+        return {"stopping": True}
+
+    # -- worker supervision -----------------------------------------------
+
+    def _spawn_worker(self) -> None:
+        with self._lock:
+            self._epoch += 1
+            epoch = self._epoch
+        handle = self._worker_factory(self._worker_args, epoch)
+        # replay the stream registry: the fresh worker's process-local
+        # cache starts cold and must see current data (version bump)
+        with self._lock:
+            streams = dict(self._streams)
+        for name, s in streams.items():
+            handle.client.call("register_stream",
+                               {"name": name, "preds": s["preds"],
+                                "y": s["y"], "costs": s["costs"]},
+                               deadline_s=60.0)
+        with self._lock:
+            self._worker = handle
+            self._misses = 0
+
+    def _declare_worker_dead(self, worker: WorkerHandle, why: str) -> None:
+        with self._lock:
+            if self._worker is not worker:
+                return                  # already superseded
+            self._worker = None
+            self._restarts += 1
+        # closing the client fails its pending RPCs with ConnectionLost,
+        # which runs every in-flight request's requeue-or-fail callback
+        worker.kill()
+        if self._draining or self._stopped.is_set():
+            return
+        try:
+            self._spawn_worker()
+        except Exception:               # noqa: BLE001
+            pass                        # heartbeat loop keeps retrying
+
+    def _heartbeat_loop(self) -> None:
+        while not self._stopped.wait(self.heartbeat_s):
+            if self._draining:
+                return
+            with self._lock:
+                worker = self._worker
+            if worker is None:
+                try:
+                    self._spawn_worker()
+                except Exception:       # noqa: BLE001
+                    pass
+                continue
+            try:
+                worker.client.call("ping", {},
+                                   deadline_s=max(self.heartbeat_s, 0.2))
+                with self._lock:
+                    self._misses = 0
+            except (TransportError, TimeoutError):
+                with self._lock:
+                    self._misses += 1
+                    misses = self._misses
+                if misses >= self.heartbeat_misses or not worker.alive:
+                    self._declare_worker_dead(
+                        worker, f"{misses} missed heartbeats")
+
+    # -- the pump: queue -> worker ----------------------------------------
+
+    def _pump_loop(self) -> None:
+        while True:
+            batch = self._queue.drain(max_n=64, wait_s=self._poll_s,
+                                      linger_s=self._linger_s)
+            if not batch:
+                if self._stopped.is_set() or (self._queue.closed
+                                              and not len(self._queue)):
+                    if self._draining:
+                        return
+                continue
+            now = time.monotonic()
+            with self._lock:
+                worker = self._worker
+            for i, (req, fut) in enumerate(batch):
+                if fut.done():
+                    continue
+                if req.deadline is not None and now >= req.deadline:
+                    with self._lock:
+                        self.counters["expired"] += 1
+                    self._settle_exc(fut, DeadlineExceeded(
+                        "expired in the admission queue"))
+                    continue
+                if worker is None or not worker.alive:
+                    # no peer: put the whole remaining claim back and let
+                    # the heartbeat loop respawn — restore works even on
+                    # a closed (draining) queue
+                    self._queue.restore(batch[i:])
+                    time.sleep(self._poll_s)
+                    break
+                self._forward(req, fut, worker)
+
+    def _forward(self, req: SimRequest, fut: SimFuture,
+                 worker: WorkerHandle) -> None:
+        if not worker.client.alive:
+            # the worker died between the batch's liveness check and this
+            # forward: put the request back without burning an attempt
+            self._queue.restore([(req, fut)])
+            return
+        spec = {"algo": req.algo, "seed": req.seed, "T": req.T,
+                "budget": req.budget, "stream": req.stream,
+                "cfg": req.cfg, "exact": req.exact,
+                "scenario": req.scenario, "priority": req.priority}
+        remaining = (None if req.deadline is None
+                     else max(req.deadline - time.monotonic(), 1e-3))
+        with self._lock:
+            self._inflight[id(fut)] = (req, fut)
+        rfut = worker.client.call_async("submit", spec,
+                                        deadline_s=remaining)
+        rfut.add_done_callback(
+            lambda done: self._on_worker_reply(req, fut, done))
+
+    def _on_worker_reply(self, req: SimRequest, fut: SimFuture,
+                         rfut) -> None:
+        with self._lock:
+            self._inflight.pop(id(fut), None)
+        exc = rfut.exception(timeout=0)
+        if exc is None:
+            value = rfut.result(timeout=0)
+            with self._lock:
+                self.counters["completed"] += 1
+            # pass-through: the worker's wire tree goes back out to the
+            # client verbatim (bit-exact both hops)
+            self._settle_result(fut, value)
+            return
+        if isinstance(exc, (ConnectionLost, WorkerDied, TimeoutError)):
+            expired = (req.deadline is not None
+                       and time.monotonic() >= req.deadline)
+            fut.attempts = getattr(fut, "attempts", 0) + 1
+            if fut.attempts <= self.retry_limit and not expired \
+                    and not self._stopped.is_set():
+                with self._lock:
+                    self.counters["retried"] += 1
+                self._queue.restore([(req, fut)])
+                return
+            with self._lock:
+                self.counters["worker_failed"] += 1
+            self._settle_exc(fut, WorkerDied(
+                f"worker lost after {fut.attempts} attempt(s): {exc}"))
+            return
+        self._settle_exc(fut, exc)      # typed pass-through (no retry)
+
+    @staticmethod
+    def _settle_result(fut: SimFuture, value) -> None:
+        try:
+            fut.set_result(value)
+        except RuntimeError:
+            pass                        # lost a settle race: already done
+
+    @staticmethod
+    def _settle_exc(fut: SimFuture, exc: BaseException) -> None:
+        try:
+            fut.set_exception(exc)
+        except RuntimeError:
+            pass
+
+    # -- observability / shutdown -----------------------------------------
+
+    def status(self) -> dict:
+        with self._lock:
+            worker = self._worker
+            inflight = len(self._inflight)
+            streams = {n: s["version"] for n, s in self._streams.items()}
+            counters = dict(self.counters)
+            restarts = self._restarts
+        out = {"pid": os.getpid(), "draining": self._draining,
+               "queued": len(self._queue), "inflight": inflight,
+               "streams": streams, "counters": counters,
+               "worker": {"alive": worker is not None and worker.alive,
+                          "pid": worker.pid if worker else None,
+                          "epoch": worker.epoch if worker else None,
+                          "restarts": restarts}}
+        if self._rpc is not None:
+            host, port = self._rpc.addr
+            out["addr"] = f"{host}:{port}"
+        return out
+
+    def reject_count(self) -> int:
+        with self._lock:
+            return self.counters["rejected"]
+
+    def drain_and_stop(self, timeout: float = 60.0) -> None:
+        """Graceful shutdown: reject new, serve admitted, stop worker,
+        close the front endpoint."""
+        if self._draining:
+            self._stopped.wait(timeout)
+            return
+        self._draining = True
+        self._queue.close()
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if not len(self._queue) and not self._pending_count():
+                break
+            time.sleep(self._poll_s)
+        with self._lock:
+            worker, self._worker = self._worker, None
+            inflight = list(self._inflight.values())
+            self._inflight.clear()
+        for req, fut in inflight:       # drain timed out: fail typed
+            self._settle_exc(fut, WorkerDied("daemon stopped mid-flight"))
+        if worker is not None:
+            try:
+                worker.client.call("shutdown", {}, deadline_s=5.0)
+                if worker.proc is not None:
+                    worker.proc.wait(timeout=15.0)
+            except Exception:           # noqa: BLE001
+                pass
+            worker.kill()
+        self._stopped.set()
+        if self._rpc is not None:
+            self._rpc.stop()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve.daemon",
+        description="serving management daemon (foreground; use "
+                    "'python -m repro.launch.served start' to detach)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--max-pending", type=int, default=256)
+    ap.add_argument("--retry-limit", type=int, default=1)
+    ap.add_argument("--heartbeat-s", type=float, default=1.0)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--pidfile", default=None,
+                    help="JSON pidfile ({pid, host, port}); removed on "
+                         "clean exit")
+    args = ap.parse_args(argv)
+
+    daemon = ServeDaemon(
+        host=args.host, port=args.port, max_pending=args.max_pending,
+        retry_limit=args.retry_limit, heartbeat_s=args.heartbeat_s,
+        worker_args={"max_batch": args.max_batch,
+                     "max_wait_ms": args.max_wait_ms})
+    daemon.start()
+    host, port = daemon.addr
+    info = {"pid": os.getpid(), "host": host, "port": port}
+    if args.pidfile:
+        with open(args.pidfile, "w") as fh:
+            json.dump(info, fh)
+    print(READY_PREFIX + json.dumps(info), flush=True)
+
+    import signal
+    signal.signal(signal.SIGTERM,
+                  lambda *a: threading.Thread(target=daemon.drain_and_stop,
+                                              daemon=True).start())
+    signal.signal(signal.SIGINT,
+                  lambda *a: threading.Thread(target=daemon.drain_and_stop,
+                                              daemon=True).start())
+    daemon._stopped.wait()
+    if args.pidfile and os.path.exists(args.pidfile):
+        os.unlink(args.pidfile)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -59,6 +59,9 @@ class SimRequest:
     exact: bool = False
     scenario: Any = None              # Scenario | None (stationary)
     priority: int = 0                 # bucket dispatch order; higher first
+    deadline: Optional[float] = None  # absolute time.monotonic() bound; the
+                                      # remote daemon drops expired requests
+                                      # before dispatch (None = no deadline)
     submitted_at: float = field(default_factory=time.monotonic)
 
     def __post_init__(self):
@@ -175,6 +178,15 @@ class RequestQueue:
     concurrent burst of submissions coalesces into one drain, then take
     everything queued (up to ``max_n``).  A closed queue drains its
     remainder and then returns empty lists forever.
+
+    ``restore`` is the requeue half of the remote tier's
+    requeue-or-fail contract: a drainer that claimed a batch and then
+    lost its peer (worker died mid-flight) puts the claim back at the
+    FRONT of the queue — and it works on a *closed* queue, because
+    ``close()`` only stops NEW submissions.  Without it, a claim taken
+    just before shutdown had nowhere to go (``put`` raises
+    ``QueueClosed``) and its futures hung forever — the latent shutdown
+    race ``tests/test_served_daemon.py`` pins.
     """
 
     def __init__(self):
@@ -219,6 +231,23 @@ class RequestQueue:
             taken, self._items = (self._items[:max_n],
                                   self._items[max_n:])
             return taken
+
+    def restore(self, items: list) -> None:
+        """Put claimed ``(request, future)`` pairs back at the front of
+        the queue (original order preserved), waking any drainer.
+
+        Unlike ``put`` this succeeds on a closed queue: ``close()``
+        rejects new submissions, but a restored item is not new — it
+        was admitted once and its future is owned by a waiting client.
+        Items whose future is already fulfilled (e.g. failed by a
+        deadline sweep while in flight) are dropped, which is what makes
+        a requeue-or-fail race settle each future exactly once.
+        """
+        with self._cv:
+            live = [(r, f) for r, f in items if not f.done()]
+            if live:
+                self._items[:0] = live
+                self._cv.notify_all()
 
     def close(self) -> None:
         """Stop accepting new requests; queued ones remain drainable."""

@@ -1,0 +1,190 @@
+"""Client-side remote serving: ``SimServer``'s surface over a socket.
+
+``RemoteServer`` duck-types the slice of ``SimServer`` that
+``SimClient`` uses (``submit``, ``register_stream``), so
+``SimClient.connect(addr)`` hands back a client whose
+``submit``/``SimFuture``/``aio_submit`` API is *verbatim* the local
+one — the only visible differences are the typed transport errors a
+future can carry (``Overloaded``, ``DeadlineExceeded``, ``WorkerDied``,
+``ConnectionLost``) and that scenarios must be registered *names*.
+
+Robustness layered here (the rest lives in the daemon):
+
+* **retry with jittered exponential backoff** on ``Overloaded`` and
+  ``ConnectionLost`` — submits are idempotent (a re-run is bit-equal),
+  so retrying is always safe; other errors pass through untouched.
+* **reconnect** — a lost daemon connection is re-dialed on the next
+  attempt instead of poisoning the handle.
+* **deadlines** — ``submit(..., deadline_s=...)`` bounds the whole
+  retry chain; the remaining budget rides on each attempt, and the
+  transport watchdog guarantees a typed failure on time even against a
+  silent peer.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Optional
+
+from .queue import SimFuture, SimRequest
+from .transport import (ConnectionLost, DeadlineExceeded, Overloaded,
+                        RpcClient, TransportError)
+from .wire import result_from_wire, spec_to_wire
+
+__all__ = ["RemoteServer"]
+
+
+class RemoteServer:
+    """A connection to a ``repro.serve.daemon`` endpoint.
+
+    ``retries`` counts *extra* attempts after the first (0 disables
+    retry); ``backoff_s`` is the base of the jittered exponential
+    schedule ``backoff_s * 2**attempt * uniform(1, 2)``.
+    """
+
+    def __init__(self, addr, connect_timeout: float = 10.0,
+                 retries: int = 2, backoff_s: float = 0.05):
+        from .transport import parse_addr
+        self.addr = parse_addr(addr)
+        self.connect_timeout = float(connect_timeout)
+        self.retries = int(retries)
+        self.backoff_s = float(backoff_s)
+        self._lock = threading.Lock()
+        self._rpc: Optional[RpcClient] = None
+        self._closed = False
+        self._client()                  # fail fast on a bad address
+
+    # -- connection management --------------------------------------------
+
+    def _client(self) -> RpcClient:
+        with self._lock:
+            if self._closed:
+                raise ConnectionLost("RemoteServer is closed")
+            if self._rpc is not None and self._rpc.alive:
+                return self._rpc
+            self._rpc = RpcClient(self.addr,
+                                  connect_timeout=self.connect_timeout)
+            return self._rpc
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            rpc, self._rpc = self._rpc, None
+        if rpc is not None:
+            rpc.close()
+
+    # -- SimServer surface -------------------------------------------------
+
+    def register_stream(self, name: str, preds, y, costs) -> dict:
+        """Ship a stream's arrays to the daemon (which caches them for
+        worker respawns and forwards to the live worker)."""
+        import numpy as np
+        return self._client().call(
+            "register_stream",
+            {"name": name, "preds": np.asarray(preds),
+             "y": np.asarray(y), "costs": np.asarray(costs)},
+            deadline_s=120.0)
+
+    def submit(self, algo: str, seed: int, *, T: int,
+               budget: Optional[float] = None, stream: str = "default",
+               cfg=None, exact: bool = False, scenario=None,
+               priority: int = 0,
+               deadline_s: Optional[float] = None) -> SimFuture:
+        """Enqueue one remote request; returns a ``SimFuture`` exactly
+        like the local server's.  Client-side mistakes (bad algo/T,
+        non-name scenario) raise synchronously; admission rejections and
+        transport failures surface typed through the future after the
+        retry budget."""
+        spec = spec_to_wire(algo, seed, T=T, budget=budget, stream=stream,
+                            cfg=cfg, exact=exact, scenario=scenario,
+                            priority=priority)
+        req = SimRequest(algo=algo, seed=int(seed), T=int(T),
+                         budget=spec["budget"], stream=stream, cfg=cfg,
+                         exact=bool(exact), scenario=scenario,
+                         priority=int(priority))
+        fut = SimFuture(req)
+        deadline = (time.monotonic() + deadline_s
+                    if deadline_s is not None else None)
+        self._attempt(spec, fut, attempt=0, deadline=deadline)
+        return fut
+
+    def status(self, deadline_s: float = 10.0) -> dict:
+        return self._client().call("status", {}, deadline_s=deadline_s)
+
+    def stats(self, deadline_s: float = 10.0) -> dict:
+        """Worker-side serving counters (local ``SimServer.stats``
+        equivalent), via the daemon's status passthrough."""
+        return self.status(deadline_s=deadline_s)
+
+    # -- the retry chain ---------------------------------------------------
+
+    def _attempt(self, spec: dict, fut: SimFuture, attempt: int,
+                 deadline: Optional[float]) -> None:
+        if fut.done():
+            return
+        remaining = None
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                self._settle_exc(fut, DeadlineExceeded(
+                    "deadline passed before the submit could be sent"))
+                return
+        try:
+            client = self._client()
+        except (TransportError, OSError) as exc:
+            self._retry_or_fail(spec, fut, attempt, deadline,
+                                ConnectionLost(f"reconnect failed: {exc}"))
+            return
+        rfut = client.call_async("submit", spec, deadline_s=remaining)
+        rfut.add_done_callback(
+            lambda done: self._on_reply(spec, fut, attempt, deadline, done))
+
+    def _on_reply(self, spec, fut, attempt, deadline, rfut) -> None:
+        exc = rfut.exception(timeout=0)
+        if exc is None:
+            value = rfut.result(timeout=0)
+            try:
+                result = result_from_wire(value["result"])
+            except Exception as decode_exc:         # noqa: BLE001
+                self._settle_exc(fut, TransportError(
+                    f"undecodable result payload: {decode_exc}"))
+                return
+            try:
+                fut.set_result(result, execution=value.get("execution"))
+            except RuntimeError:
+                pass                    # deadline fired while decoding
+            return
+        if isinstance(exc, (Overloaded, ConnectionLost)):
+            self._retry_or_fail(spec, fut, attempt, deadline, exc)
+            return
+        self._settle_exc(fut, exc)      # typed, not retryable
+
+    def _retry_or_fail(self, spec, fut, attempt, deadline,
+                       exc: BaseException) -> None:
+        if attempt >= self.retries or self._closed:
+            self._settle_exc(fut, exc)
+            return
+        delay = self.backoff_s * (2 ** attempt) * (1.0 + random.random())
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= delay:
+                # out of time for another attempt: report what happened,
+                # typed — the deadline bounded the retry chain
+                self._settle_exc(fut, DeadlineExceeded(
+                    f"retry budget cut off by deadline (last: {exc})"))
+                return
+        timer = threading.Timer(
+            delay, self._attempt,
+            kwargs=dict(spec=spec, fut=fut, attempt=attempt + 1,
+                        deadline=deadline))
+        timer.daemon = True
+        timer.start()
+
+    @staticmethod
+    def _settle_exc(fut: SimFuture, exc: BaseException) -> None:
+        try:
+            fut.set_exception(exc)
+        except RuntimeError:
+            pass                        # settle race: already fulfilled

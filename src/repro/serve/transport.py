@@ -1,0 +1,718 @@
+"""Length-prefixed socket RPC for the cross-process serving tier.
+
+Pure stdlib (+ optional msgpack, + numpy for array payloads) — no jax,
+so client and daemon processes pay no accelerator import cost.  Three
+layers, each usable alone:
+
+* **codec** — ``encode``/``decode`` turn a JSON-ish tree (dicts, lists,
+  strings, numbers incl. NaN/inf, bytes, ``numpy`` arrays) into payload
+  bytes and back.  msgpack when available, JSON (with base64 byte
+  escapes) otherwise; the frame header carries the codec tag, so the
+  two ends never have to agree in advance.  Arrays travel as raw
+  ``tobytes`` + dtype + shape — decode reproduces them bit-for-bit,
+  which is what lets the serving determinism contract survive the wire.
+
+* **framing** — every message is ``MAGIC + codec byte + u32 length +
+  payload``.  ``Connection.recv_msg`` either returns a whole decoded
+  message, raises ``ConnectionLost`` (peer closed at a frame boundary)
+  or raises ``FrameError`` (bad magic, oversized length, or the stream
+  ended *inside* a frame).  A framing error is never silently resynced:
+  the connection is unusable and the caller must close it.
+
+* **RPC** — ``RpcClient.call``/``call_async`` with request/response
+  correlation ids and per-request deadlines; ``RpcServer`` dispatches
+  named handlers and supports *deferred* responses (a handler may
+  return an ``RpcFuture``-like object, and the response is written when
+  it fulfills — this is how a worker keeps many submits in flight so
+  its batcher can coalesce them).  Remote exceptions cross the wire as
+  ``{"type", "message"}`` and are re-raised typed on the caller's side
+  (``error_from_wire``).
+
+See docs/serving.md#remote-mode for the failure-semantics contract
+built on these errors.
+"""
+
+from __future__ import annotations
+
+import base64
+import itertools
+import json
+import socket
+import struct
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+try:                                            # optional: JSON fallback
+    import msgpack
+    _HAVE_MSGPACK = True
+except Exception:                               # pragma: no cover
+    msgpack = None
+    _HAVE_MSGPACK = False
+
+__all__ = [
+    "TransportError", "FrameError", "ConnectionLost", "DeadlineExceeded",
+    "Overloaded", "WorkerDied", "RemoteError",
+    "encode", "decode", "pack_frame", "read_frame",
+    "error_to_wire", "error_from_wire", "parse_addr", "format_addr",
+    "Connection", "RpcFuture", "RpcClient", "RpcServer",
+    "MAX_FRAME", "default_codec",
+]
+
+
+# ---------------------------------------------------------------------------
+# typed errors — the failure vocabulary of the remote serving contract
+# ---------------------------------------------------------------------------
+
+class TransportError(RuntimeError):
+    """Base of every serving-transport failure."""
+
+
+class FrameError(TransportError):
+    """The byte stream violated the framing protocol (bad magic, length
+    overflow, or truncation *inside* a frame).  The connection cannot be
+    resynced and must be closed."""
+
+
+class ConnectionLost(TransportError):
+    """The peer went away: clean close at a frame boundary, reset, or a
+    local close while requests were pending."""
+
+
+class DeadlineExceeded(TransportError):
+    """The request's deadline passed before a result was produced.  The
+    request may or may not have executed — deadlines bound *waiting*,
+    not remote work."""
+
+
+class Overloaded(TransportError):
+    """Admission control rejected the request (bounded queue full, or
+    the daemon is draining).  Always safe to retry after backoff."""
+
+
+class WorkerDied(TransportError):
+    """The worker process holding the request died mid-flight and the
+    retry budget is exhausted."""
+
+
+class RemoteError(TransportError):
+    """A remote exception type we don't model locally; ``rtype`` carries
+    the remote class name."""
+
+    def __init__(self, rtype: str, message: str):
+        super().__init__(f"{rtype}: {message}")
+        self.rtype = rtype
+        self.message = message
+
+
+# exceptions that cross the wire under their own name; anything else
+# arrives as RemoteError.  QueueClosed intentionally maps to Overloaded:
+# to a remote client, "the queue stopped accepting" IS an admission
+# rejection (retryable against a restarted daemon).
+_ERROR_TYPES = {
+    "FrameError": FrameError,
+    "ConnectionLost": ConnectionLost,
+    "DeadlineExceeded": DeadlineExceeded,
+    "Overloaded": Overloaded,
+    "WorkerDied": WorkerDied,
+    "ValueError": ValueError,
+    "TypeError": TypeError,
+    "KeyError": KeyError,
+}
+
+
+def error_to_wire(exc: BaseException) -> dict:
+    name = type(exc).__name__
+    if name == "QueueClosed":
+        name, exc = "Overloaded", Overloaded(f"queue closed: {exc}")
+    return {"type": name, "message": str(exc)}
+
+
+def error_from_wire(d: dict) -> BaseException:
+    rtype = str(d.get("type", "RemoteError"))
+    message = str(d.get("message", ""))
+    cls = _ERROR_TYPES.get(rtype)
+    if cls is None:
+        return RemoteError(rtype, message)
+    return cls(message)
+
+
+# ---------------------------------------------------------------------------
+# codec — msgpack-or-JSON trees with tagged ndarray / bytes leaves
+# ---------------------------------------------------------------------------
+
+_ND = "__nd__"
+_B64 = "__b64__"
+
+
+def default_codec() -> str:
+    return "msgpack" if _HAVE_MSGPACK else "json"
+
+
+def _to_wire(obj: Any) -> Any:
+    """Normalize a payload tree: tuples -> lists, numpy scalars -> python
+    scalars, ndarrays -> tagged raw-byte dicts (bit-exact round-trip)."""
+    if obj is None or isinstance(obj, (bool, int, float, str, bytes)):
+        return obj
+    if isinstance(obj, np.ndarray):
+        if obj.dtype.hasobject:
+            raise TypeError(f"cannot encode object-dtype array for the "
+                            f"wire (dtype {obj.dtype})")
+        arr = np.ascontiguousarray(obj)
+        return {_ND: True, "dtype": arr.dtype.str,
+                "shape": list(arr.shape), "data": arr.tobytes()}
+    if isinstance(obj, np.generic):
+        return obj.item()
+    if isinstance(obj, dict):
+        out = {}
+        for k, v in obj.items():
+            if not isinstance(k, str):
+                raise TypeError(f"wire dict keys must be str, got {k!r}")
+            out[k] = _to_wire(v)
+        return out
+    if isinstance(obj, (list, tuple)):
+        return [_to_wire(v) for v in obj]
+    # jax arrays (and anything array-like) fall through here; conversion
+    # via np.asarray keeps the exact device bits
+    try:
+        arr = np.asarray(obj)
+    except Exception:
+        raise TypeError(f"cannot encode {type(obj)!r} for the wire")
+    if arr.dtype.hasobject:
+        raise TypeError(f"cannot encode {type(obj)!r} for the wire")
+    return _to_wire(arr)
+
+
+def _from_wire(obj: Any) -> Any:
+    if isinstance(obj, dict):
+        if obj.get(_ND):
+            data = obj["data"]
+            if isinstance(data, dict):           # JSON byte escape
+                data = base64.b64decode(data[_B64])
+            arr = np.frombuffer(data, dtype=np.dtype(obj["dtype"]))
+            return arr.reshape(tuple(obj["shape"])).copy()
+        if _B64 in obj and len(obj) == 1:
+            return base64.b64decode(obj[_B64])
+        return {k: _from_wire(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_from_wire(v) for v in obj]
+    return obj
+
+
+def _json_escape_bytes(obj: Any) -> Any:
+    if isinstance(obj, bytes):
+        return {_B64: base64.b64encode(obj).decode("ascii")}
+    if isinstance(obj, dict):
+        return {k: _json_escape_bytes(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_json_escape_bytes(v) for v in obj]
+    return obj
+
+
+def encode(obj: Any, codec: Optional[str] = None) -> tuple:
+    """Encode a payload tree; returns ``(codec, payload_bytes)``."""
+    codec = codec or default_codec()
+    tree = _to_wire(obj)
+    if codec == "msgpack":
+        if not _HAVE_MSGPACK:
+            raise RuntimeError("msgpack codec requested but msgpack is "
+                               "not installed")
+        return codec, msgpack.packb(tree, use_bin_type=True)
+    if codec == "json":
+        # allow_nan emits NaN/Infinity literals; both ends are Python,
+        # whose json.loads parses them back — NaN payloads survive
+        return codec, json.dumps(_json_escape_bytes(tree),
+                                 allow_nan=True).encode("utf-8")
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def decode(codec: str, payload: bytes) -> Any:
+    if codec == "msgpack":
+        if not _HAVE_MSGPACK:
+            raise FrameError("peer sent msgpack but msgpack is not "
+                             "installed here")
+        tree = msgpack.unpackb(payload, raw=False, strict_map_key=False)
+    elif codec == "json":
+        tree = json.loads(payload.decode("utf-8"))
+    else:
+        raise FrameError(f"unknown codec tag {codec!r}")
+    return _from_wire(tree)
+
+
+# ---------------------------------------------------------------------------
+# framing — MAGIC + codec byte + u32 big-endian length + payload
+# ---------------------------------------------------------------------------
+
+MAGIC = b"\xa5\x5a"
+_CODEC_BYTE = {"msgpack": b"M", "json": b"J"}
+_BYTE_CODEC = {b"M": "msgpack", b"J": "json"}
+_HEADER = struct.Struct(">I")
+HEADER_LEN = len(MAGIC) + 1 + _HEADER.size
+MAX_FRAME = 1 << 28                     # 256 MiB: fits any stream we serve
+
+
+def pack_frame(obj: Any, codec: Optional[str] = None) -> bytes:
+    codec, payload = encode(obj, codec)
+    if len(payload) > MAX_FRAME:
+        raise FrameError(f"frame too large: {len(payload)} > {MAX_FRAME}")
+    return MAGIC + _CODEC_BYTE[codec] + _HEADER.pack(len(payload)) + payload
+
+
+def _recv_exact(sock: socket.socket, n: int, *, first: bool) -> bytes:
+    """Read exactly ``n`` bytes.  EOF before the first byte of a frame is
+    a clean close (``ConnectionLost``); EOF anywhere after it means the
+    peer died mid-frame (``FrameError``) — the distinction the
+    truncation tests pin."""
+    chunks, got = [], 0
+    while got < n:
+        try:
+            chunk = sock.recv(min(n - got, 1 << 20))
+        except (ConnectionResetError, BrokenPipeError) as exc:
+            raise ConnectionLost(f"peer reset: {exc}") from exc
+        if not chunk:
+            if first and got == 0:
+                raise ConnectionLost("peer closed the connection")
+            raise FrameError(f"stream truncated inside a frame "
+                             f"({got}/{n} bytes)")
+        chunks.append(chunk)
+        got += len(chunk)
+        first = False
+    return b"".join(chunks)
+
+
+def read_frame(sock: socket.socket) -> Any:
+    """Read and decode one frame; see ``_recv_exact`` for error rules."""
+    header = _recv_exact(sock, HEADER_LEN, first=True)
+    if header[:2] != MAGIC:
+        raise FrameError(f"bad magic {header[:2]!r}")
+    codec = _BYTE_CODEC.get(header[2:3])
+    if codec is None:
+        raise FrameError(f"bad codec byte {header[2:3]!r}")
+    (length,) = _HEADER.unpack(header[3:])
+    if length > MAX_FRAME:
+        raise FrameError(f"frame length {length} exceeds {MAX_FRAME}")
+    payload = _recv_exact(sock, length, first=False)
+    return decode(codec, payload)
+
+
+# ---------------------------------------------------------------------------
+# addresses
+# ---------------------------------------------------------------------------
+
+def parse_addr(addr) -> tuple:
+    """``"host:port"`` or ``(host, port)`` -> ``(host, int(port))``."""
+    if isinstance(addr, str):
+        host, _, port = addr.rpartition(":")
+        if not host or not port:
+            raise ValueError(f"address must be 'host:port', got {addr!r}")
+        return host, int(port)
+    host, port = addr
+    return str(host), int(port)
+
+
+def format_addr(addr) -> str:
+    host, port = parse_addr(addr)
+    return f"{host}:{port}"
+
+
+# ---------------------------------------------------------------------------
+# connection — one socket, framed send/recv, send lock
+# ---------------------------------------------------------------------------
+
+class Connection:
+    """A framed, thread-safe-for-send wrapper over one socket.  Receives
+    are single-reader by design (the RPC layers own the reader)."""
+
+    def __init__(self, sock: socket.socket, codec: Optional[str] = None):
+        self.sock = sock
+        self.codec = codec or default_codec()
+        self._send_lock = threading.Lock()
+        self._closed = False
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:                 # pragma: no cover - non-TCP socket
+            pass
+
+    @classmethod
+    def connect(cls, addr, timeout: float = 5.0,
+                codec: Optional[str] = None) -> "Connection":
+        host, port = parse_addr(addr)
+        sock = socket.create_connection((host, port), timeout=timeout)
+        sock.settimeout(None)
+        return cls(sock, codec=codec)
+
+    def send_msg(self, obj: Any) -> None:
+        frame = pack_frame(obj, self.codec)
+        with self._send_lock:
+            if self._closed:
+                raise ConnectionLost("connection is closed")
+            try:
+                self.sock.sendall(frame)
+            except OSError as exc:
+                raise ConnectionLost(f"send failed: {exc}") from exc
+
+    def recv_msg(self, timeout: Optional[float] = None) -> Any:
+        if timeout is not None:
+            self.sock.settimeout(timeout)
+        try:
+            return read_frame(self.sock)
+        except socket.timeout as exc:
+            raise TimeoutError("recv timed out") from exc
+        except OSError as exc:
+            raise ConnectionLost(f"recv failed: {exc}") from exc
+        finally:
+            if timeout is not None:
+                try:
+                    self.sock.settimeout(None)
+                except OSError:
+                    pass
+
+    def close(self) -> None:
+        with self._send_lock:
+            self._closed = True
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# RPC futures
+# ---------------------------------------------------------------------------
+
+class RpcFuture:
+    """Settle-once future for one RPC call (first settle wins — races
+    between a response, a deadline sweep, and a connection-loss fanout
+    are benign by construction).  Mirrors ``SimFuture``'s callback
+    contract: callbacks fire exactly once, exceptions swallowed."""
+
+    def __init__(self):
+        self._done = threading.Event()
+        self._lock = threading.Lock()
+        self._result = None
+        self._exception: Optional[BaseException] = None
+        self._callbacks: list = []
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def _settle(self, result=None,
+                exc: Optional[BaseException] = None) -> bool:
+        with self._lock:
+            if self._done.is_set():
+                return False
+            self._result = result
+            self._exception = exc
+            self._done.set()
+            callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            try:
+                fn(self)
+            except Exception:           # noqa: BLE001
+                pass
+        return True
+
+    def set_result(self, result) -> bool:
+        return self._settle(result=result)
+
+    def set_exception(self, exc: BaseException) -> bool:
+        return self._settle(exc=exc)
+
+    def add_done_callback(self, fn: Callable) -> None:
+        with self._lock:
+            if not self._done.is_set():
+                self._callbacks.append(fn)
+                return
+        try:
+            fn(self)
+        except Exception:               # noqa: BLE001
+            pass
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"RPC not settled within {timeout}s")
+        if self._exception is not None:
+            raise self._exception
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None):
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"RPC not settled within {timeout}s")
+        return self._exception
+
+
+# ---------------------------------------------------------------------------
+# RPC client
+# ---------------------------------------------------------------------------
+
+class RpcClient:
+    """Correlated request/response client over one connection.
+
+    A reader thread matches responses to pending calls by id; losing the
+    connection fails every pending call with ``ConnectionLost`` (nothing
+    ever hangs).  Per-call deadlines are enforced on BOTH sides: the
+    remaining budget rides in the request (``deadline_ms``), and a local
+    watchdog sweeps pending calls so a silent peer still produces a
+    typed ``DeadlineExceeded`` on time.
+    """
+
+    def __init__(self, addr, connect_timeout: float = 5.0,
+                 codec: Optional[str] = None):
+        self.conn = Connection.connect(addr, timeout=connect_timeout,
+                                       codec=codec)
+        self.addr = parse_addr(addr)
+        self._ids = itertools.count(1)
+        self._lock = threading.Lock()
+        self._pending: dict = {}        # id -> (RpcFuture, deadline|None)
+        self._dead: Optional[BaseException] = None
+        self._reader = threading.Thread(target=self._read_loop,
+                                        name="rpc-reader", daemon=True)
+        self._reader.start()
+        self._watchdog: Optional[threading.Thread] = None
+
+    # -- calls ------------------------------------------------------------
+
+    def call_async(self, method: str, params: Optional[dict] = None,
+                   deadline_s: Optional[float] = None) -> RpcFuture:
+        fut = RpcFuture()
+        deadline = (time.monotonic() + deadline_s
+                    if deadline_s is not None else None)
+        with self._lock:
+            if self._dead is not None:
+                fut.set_exception(ConnectionLost(str(self._dead)))
+                return fut
+            rid = next(self._ids)
+            self._pending[rid] = (fut, deadline)
+            if deadline is not None and self._watchdog is None:
+                self._watchdog = threading.Thread(
+                    target=self._watch_deadlines, name="rpc-deadlines",
+                    daemon=True)
+                self._watchdog.start()
+        msg = {"id": rid, "method": method, "params": params or {}}
+        if deadline_s is not None:
+            msg["deadline_ms"] = float(deadline_s) * 1e3
+        try:
+            self.conn.send_msg(msg)
+        except (TransportError, OSError) as exc:
+            with self._lock:
+                self._pending.pop(rid, None)
+            fut.set_exception(ConnectionLost(f"send failed: {exc}"))
+        return fut
+
+    def call(self, method: str, params: Optional[dict] = None,
+             deadline_s: Optional[float] = None,
+             timeout: Optional[float] = None):
+        """Blocking call; raises the remote error typed, or
+        ``DeadlineExceeded``/``TimeoutError`` locally."""
+        fut = self.call_async(method, params, deadline_s=deadline_s)
+        if timeout is None and deadline_s is not None:
+            timeout = deadline_s + 1.0          # watchdog fires first
+        return fut.result(timeout)
+
+    # -- reader / watchdog ------------------------------------------------
+
+    def _read_loop(self) -> None:
+        while True:
+            try:
+                msg = self.conn.recv_msg()
+            except TransportError as exc:
+                self._fail_all(ConnectionLost(str(exc)))
+                return
+            except Exception as exc:            # noqa: BLE001
+                self._fail_all(ConnectionLost(f"reader died: {exc}"))
+                return
+            if not isinstance(msg, dict):
+                continue
+            with self._lock:
+                entry = self._pending.pop(msg.get("id"), None)
+            if entry is None:
+                continue                        # late reply after deadline
+            fut, _ = entry
+            if msg.get("ok"):
+                fut.set_result(msg.get("value"))
+            else:
+                fut.set_exception(error_from_wire(msg.get("error") or {}))
+
+    def _watch_deadlines(self) -> None:
+        while True:
+            time.sleep(0.02)
+            now = time.monotonic()
+            expired = []
+            with self._lock:
+                if self._dead is not None and not self._pending:
+                    return
+                for rid, (fut, deadline) in list(self._pending.items()):
+                    if deadline is not None and now >= deadline:
+                        expired.append((rid, fut))
+                for rid, _ in expired:
+                    self._pending.pop(rid, None)
+            for _, fut in expired:
+                fut.set_exception(DeadlineExceeded(
+                    "no response before the request deadline"))
+
+    def _fail_all(self, exc: BaseException) -> None:
+        with self._lock:
+            self._dead = exc
+            pending, self._pending = self._pending, {}
+        for fut, _ in pending.values():
+            fut.set_exception(exc)
+
+    # -- lifecycle --------------------------------------------------------
+
+    @property
+    def alive(self) -> bool:
+        with self._lock:
+            return self._dead is None
+
+    def close(self) -> None:
+        self.conn.close()
+        self._fail_all(ConnectionLost("client closed"))
+
+
+# ---------------------------------------------------------------------------
+# RPC server
+# ---------------------------------------------------------------------------
+
+class RpcServer:
+    """Threaded RPC server: one accept loop, one thread per connection.
+
+    ``handlers`` maps method name -> ``fn(params, ctx)`` where ``ctx``
+    has ``deadline`` (absolute ``time.monotonic`` or None, derived from
+    the request's remaining-budget ``deadline_ms`` — clock-skew free)
+    and ``peer``.  A handler may return:
+
+    * a plain value -> replied immediately;
+    * an object with ``add_done_callback``/``result`` (``RpcFuture``,
+      ``SimFuture``) -> the reply is written when it fulfills, freeing
+      the connection thread to read the next request — concurrent
+      submits on one connection stay concurrent server-side.
+
+    Handler exceptions become typed error replies.  A framing error
+    closes only the offending connection; the server never wedges.
+    """
+
+    def __init__(self, handlers: dict, host: str = "127.0.0.1",
+                 port: int = 0, codec: Optional[str] = None):
+        self.handlers = dict(handlers)
+        self._host, self._port = host, port
+        self._codec = codec
+        self._sock: Optional[socket.socket] = None
+        self._thread: Optional[threading.Thread] = None
+        self._conns: list = []
+        self._lock = threading.Lock()
+        self._stopping = False
+
+    @property
+    def addr(self) -> tuple:
+        if self._sock is None:
+            raise RuntimeError("server not started")
+        return self._sock.getsockname()[:2]
+
+    def start(self) -> "RpcServer":
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        sock.bind((self._host, self._port))
+        sock.listen(64)
+        self._sock = sock
+        self._thread = threading.Thread(target=self._accept_loop,
+                                        name="rpc-accept", daemon=True)
+        self._thread.start()
+        return self
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                sock, peer = self._sock.accept()
+            except OSError:
+                return                  # listener closed: stop()
+            conn = Connection(sock, codec=self._codec)
+            with self._lock:
+                if self._stopping:
+                    conn.close()
+                    return
+                self._conns.append(conn)
+            threading.Thread(target=self._serve_conn, args=(conn, peer),
+                             name="rpc-conn", daemon=True).start()
+
+    def _serve_conn(self, conn: Connection, peer) -> None:
+        try:
+            while True:
+                try:
+                    msg = conn.recv_msg()
+                except (TransportError, OSError):
+                    return              # this connection only
+                if not isinstance(msg, dict) or "method" not in msg:
+                    continue
+                self._handle(conn, msg, peer)
+        finally:
+            conn.close()
+            with self._lock:
+                if conn in self._conns:
+                    self._conns.remove(conn)
+
+    def _handle(self, conn: Connection, msg: dict, peer) -> None:
+        rid = msg.get("id")
+        deadline_ms = msg.get("deadline_ms")
+        ctx = {"deadline": (time.monotonic() + deadline_ms / 1e3
+                            if deadline_ms is not None else None),
+               "peer": peer}
+        handler = self.handlers.get(msg["method"])
+        if handler is None:
+            self._reply_error(conn, rid,
+                              KeyError(f"unknown method {msg['method']!r}"))
+            return
+        try:
+            out = handler(msg.get("params") or {}, ctx)
+        except BaseException as exc:    # noqa: BLE001
+            self._reply_error(conn, rid, exc)
+            return
+        if hasattr(out, "add_done_callback") and hasattr(out, "result"):
+            def reply(done, _conn=conn, _rid=rid):
+                try:
+                    self._reply_value(_conn, _rid, done.result(timeout=0))
+                except BaseException as exc:        # noqa: BLE001
+                    self._reply_error(_conn, _rid, exc)
+            out.add_done_callback(reply)
+        else:
+            self._reply_value(conn, rid, out)
+
+    def _reply_value(self, conn: Connection, rid, value) -> None:
+        try:
+            conn.send_msg({"id": rid, "ok": True, "value": value})
+        except (TransportError, OSError):
+            pass                        # peer gone; nothing to tell it
+
+    def _reply_error(self, conn: Connection, rid,
+                     exc: BaseException) -> None:
+        try:
+            conn.send_msg({"id": rid, "ok": False,
+                           "error": error_to_wire(exc)})
+        except (TransportError, OSError):
+            pass
+
+    def stop(self) -> None:
+        with self._lock:
+            self._stopping = True
+            conns = list(self._conns)
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+        for conn in conns:
+            conn.close()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def __enter__(self) -> "RpcServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

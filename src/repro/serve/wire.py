@@ -1,0 +1,110 @@
+"""Domain payload marshalling for the remote serving tier.
+
+``repro.serve.transport`` moves JSON-ish trees; this module maps the
+serving domain objects onto them: ``SimConfig`` (an all-scalar
+dataclass — ``dataclasses.asdict`` round-trips it exactly),
+``SimRequest`` submit specs, and ``SimResult`` including its
+``RegretTracker`` internals.  Arrays cross as raw bytes + dtype + shape
+(see ``transport._to_wire``), so a decoded ``SimResult`` is bit-equal
+to the one the worker computed — the property the remote determinism
+rows in docs/determinism.md pin.
+
+Imports of ``repro.federated`` happen lazily inside the ``from_wire``
+helpers: encoding a request never needs jax, so client and daemon
+processes stay accelerator-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+__all__ = ["config_to_wire", "config_from_wire", "result_to_wire",
+           "result_from_wire", "spec_to_wire"]
+
+
+def config_to_wire(cfg) -> Optional[dict]:
+    """``SimConfig | None`` -> plain scalar dict (or None)."""
+    if cfg is None:
+        return None
+    return dataclasses.asdict(cfg)
+
+
+def config_from_wire(d: Optional[dict]):
+    if d is None:
+        return None
+    from repro.federated import SimConfig
+    return SimConfig(**d)
+
+
+def spec_to_wire(algo: str, seed: int, *, T: int, budget=None,
+                 stream: str = "default", cfg=None, exact: bool = False,
+                 scenario=None, priority: int = 0) -> dict:
+    """A ``submit`` keyword set -> wire params.
+
+    Remote submits carry scenarios **by registered name** — schedule
+    closures don't serialize, and names resolve against the worker's
+    registry exactly like a local ``SimServer.submit`` would.  Passing a
+    ``Scenario`` object raises here, synchronously, on the client.
+    """
+    if scenario is not None and not isinstance(scenario, str):
+        raise TypeError(
+            "remote submits take scenarios by registered name (str); got "
+            f"{type(scenario)!r} — register it server-side and pass the "
+            "name")
+    return {"algo": algo, "seed": int(seed), "T": int(T),
+            "budget": None if budget is None else float(budget),
+            "stream": stream, "cfg": config_to_wire(cfg),
+            "exact": bool(exact), "scenario": scenario,
+            "priority": int(priority)}
+
+
+def result_to_wire(res) -> dict:
+    """``SimResult`` -> wire tree, regret internals included."""
+    tr = res.regret
+    return {
+        "mse_curve": np.asarray(res.mse_curve),
+        "budget_violations": int(res.budget_violations),
+        "violation_frac": float(res.violation_frac),
+        "sel_sizes": np.asarray(res.sel_sizes),
+        "dom_sizes": np.asarray(res.dom_sizes),
+        "round_costs": np.asarray(res.round_costs),
+        "sel_masks": (None if res.sel_masks is None
+                      else np.asarray(res.sel_masks)),
+        "name": res.name,
+        "regret": {
+            "K": int(tr.K),
+            "n": int(tr._n),
+            "ens_cum": np.asarray(tr._ens_cum[:tr._n]),
+            "best_cum": np.asarray(tr._best_cum[:tr._n]),
+            "models": np.asarray(tr._models),
+        },
+    }
+
+
+def result_from_wire(d: dict):
+    """Wire tree -> ``SimResult`` whose trajectory arrays (and regret
+    curve) are bit-equal to the encoder's."""
+    from repro.core.regret import RegretTracker
+    from repro.federated.simulation import SimResult
+    r = d["regret"]
+    n = int(r["n"])
+    tr = RegretTracker(int(r["K"]), capacity=max(n, 1))
+    tr._n = n
+    tr._ens_cum[:n] = np.asarray(r["ens_cum"])
+    tr._best_cum[:n] = np.asarray(r["best_cum"])
+    tr._models = np.asarray(r["models"])
+    return SimResult(
+        mse_curve=np.asarray(d["mse_curve"]),
+        budget_violations=int(d["budget_violations"]),
+        violation_frac=float(d["violation_frac"]),
+        regret=tr,
+        sel_sizes=np.asarray(d["sel_sizes"]),
+        dom_sizes=np.asarray(d["dom_sizes"]),
+        round_costs=np.asarray(d["round_costs"]),
+        name=str(d.get("name", "")),
+        sel_masks=(None if d.get("sel_masks") is None
+                   else np.asarray(d["sel_masks"])),
+    )

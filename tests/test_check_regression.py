@@ -59,13 +59,21 @@ def _sharded_cell(rel=0.8, vmap=0.5):
     }
 
 
+def _sustained_cell(rel=2.0, p50=0.3):
+    return {
+        "p50_s": p50, "p99_s": rel * p50, "rel": rel,
+        "all_completed": True, "errors": 0,
+    }
+
+
 def _record():
     """A healthy fresh/baseline record: every gate passes vs itself."""
     return {
         "eflfg": _algo_cell(), "fedboost": _algo_cell(0.5),
         "serve": {"eflfg": _serve_cell(0.80),     # speedup 1.25 > 1.1
                   "fedboost": _serve_cell(0.40),   # speedup 2.5  > 2.0
-                  "mixed_scenario": _mixed_cell(0.50)},  # 2.0 > 1.05
+                  "mixed_scenario": _mixed_cell(0.50),   # 2.0 > 1.05
+                  "sustained": _sustained_cell()},
         "sharded_sweep": {"eflfg": _sharded_cell(),
                           "fedboost": _sharded_cell(),
                           "mesh2d": _sharded_cell()},
@@ -165,6 +173,49 @@ def test_mixed_scenario_absolute_floor():
     failures, _ = check_serve(base, fresh, THRESHOLD)
     assert any(kind == "hard" and "missing from baseline" in msg
                for kind, msg in failures)
+
+
+def test_sustained_cell_missing_fails_hard():
+    """The sustained-load cell is hard-gated: a fresh run without it, or
+    a stale baseline whose serve section predates it, must FAIL (never a
+    warning a stale baseline could ride through CI)."""
+    fresh = _record()
+    del fresh["serve"]["sustained"]
+    failures, _ = check_serve(_record(), fresh, THRESHOLD)
+    assert any(kind == "hard" and "sustained" in msg
+               and "missing from fresh" in msg for kind, msg in failures)
+    assert not retryable(failures)
+    base = _record()
+    del base["serve"]["sustained"]               # stale baseline
+    failures, _ = check_serve(base, _record(), THRESHOLD)
+    assert any(kind == "hard" and "sustained" in msg
+               and "missing from baseline" in msg
+               for kind, msg in failures)
+
+
+def test_sustained_errors_fail_hard():
+    fresh = _record()
+    fresh["serve"]["sustained"]["all_completed"] = False
+    fresh["serve"]["sustained"]["errors"] = 3
+    failures, _ = check_serve(_record(), fresh, THRESHOLD)
+    assert any(kind == "hard" and "all_completed" in msg
+               for kind, msg in failures)
+    assert not retryable(failures)
+
+
+def test_sustained_tail_amplification_gated():
+    """p99/p50 drifting past the threshold vs the baseline is a timing
+    failure (retryable: a loaded runner fattens the tail)."""
+    base, fresh = _record(), _record()
+    fresh["serve"]["sustained"] = _sustained_cell(
+        rel=2.0 * (1.0 + THRESHOLD + 0.1))
+    failures, _ = check_serve(base, fresh, THRESHOLD)
+    assert _kinds(failures) == ["timing"]
+    assert retryable(failures)
+    # sub-floor p50 (dispatch noise) is reported, not gated
+    fresh["serve"]["sustained"] = _sustained_cell(rel=5.0, p50=0.01)
+    failures, _ = check_serve(base, fresh, THRESHOLD)
+    assert failures == []
 
 
 def test_serve_floor_not_gated_below_noise_floor():

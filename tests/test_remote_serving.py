@@ -1,0 +1,151 @@
+"""Remote-vs-local determinism: the serving contract across the wire.
+
+The equivalence map rows pinned here (docs/determinism.md):
+
+* a **batched** wave submitted through ``SimClient.connect`` (daemon ->
+  worker subprocess -> ``run_batch``) is bit-equal, lane for lane, to
+  the same wave through an in-process ``SimServer`` AND to a direct
+  ``run_batch`` call — the remote hop adds serialization, never ulps;
+* **exact**-mode remote submits are bit-equal to direct
+  ``run_simulation_scan`` runs — the reproducibility mode survives the
+  process boundary.
+
+The wave is the paper configuration (K=22 experts, n_stream=6000,
+T=2000) with mixed seeds, budgets and scenarios — 8 requests, enough
+for a scheduled and a stationary bucket of width >= 2 each.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.federated import (SimConfig, run_batch, run_simulation_scan)
+from repro.serve import SimClient
+from repro.serve.daemon import ServeDaemon
+from repro.serve.server import SimServer
+
+K, N_STREAM, T = 22, 6000, 2000
+
+# 8 mixed-seed/budget/scenario paper-config requests: 4 stationary
+# lanes + 4 scheduled lanes (two distinct schedules), mixed budgets
+# with None = config default
+WAVE = [
+    dict(algo="eflfg", seed=0, T=T, budget=None, scenario=None),
+    dict(algo="eflfg", seed=1, T=T, budget=2.0, scenario=None),
+    dict(algo="eflfg", seed=2, T=T, budget=4.0, scenario=None),
+    dict(algo="eflfg", seed=3, T=T, budget=3.0, scenario=None),
+    dict(algo="eflfg", seed=4, T=T, budget=None,
+         scenario="concept_drift"),
+    dict(algo="eflfg", seed=5, T=T, budget=2.0,
+         scenario="concept_drift"),
+    dict(algo="eflfg", seed=6, T=T, budget=4.0,
+         scenario="degraded_uplink"),
+    dict(algo="eflfg", seed=7, T=T, budget=3.0,
+         scenario="degraded_uplink"),
+]
+
+
+@pytest.fixture(scope="module")
+def stream_arrays():
+    rng = np.random.default_rng(0)
+    preds = rng.normal(0.0, 1.0, (K, N_STREAM)).astype(np.float32)
+    y = rng.normal(0.0, 1.0, N_STREAM).astype(np.float32)
+    costs = rng.uniform(0.5, 2.0, K).astype(np.float32)
+    return preds, y, costs
+
+
+@pytest.fixture(scope="module")
+def remote(stream_arrays):
+    daemon = ServeDaemon(max_pending=64, retry_limit=1,
+                         worker_args={"max_batch": 16,
+                                      "max_wait_ms": 2.0})
+    daemon.start()
+    client = SimClient.connect(daemon.addr)
+    client.server.register_stream("default", *stream_arrays)
+    yield client
+    client.close()
+    daemon.drain_and_stop()
+
+
+@pytest.fixture(scope="module")
+def remote_batched(remote):
+    futs = [remote.submit(**spec) for spec in WAVE]
+    return [f.result(timeout=600.0) for f in futs], futs
+
+
+def test_remote_wave_is_batched_family(remote_batched):
+    results, futs = remote_batched
+    assert len(results) == len(WAVE)
+    for fut in futs:
+        assert fut.execution["mode"] == "batched"
+        assert fut.execution["bucket"] >= 2    # width never 1: family rule
+
+
+def test_remote_batched_bit_equal_to_run_batch(remote_batched,
+                                               stream_arrays):
+    """Each remote lane vs a direct ``run_batch`` of its schedule-class
+    group — the grouping the batcher itself dispatches (stationary
+    lanes must ride the scenario-free program, never a neutral-fed
+    scheduled one: docs/determinism.md rows 14-16)."""
+    preds, y, costs = stream_arrays
+    results, _ = remote_batched
+    cfg = SimConfig()
+    for group in (range(0, 4), range(4, 8)):        # stationary, scheduled
+        specs = [WAVE[i] for i in group]
+        seeds = [s["seed"] for s in specs]
+        budgets = [s["budget"] if s["budget"] is not None else cfg.budget
+                   for s in specs]
+        scenarios = [s["scenario"] for s in specs]
+        scenario = (None if all(sc is None for sc in scenarios)
+                    else scenarios)
+        local = run_batch("eflfg", preds, y, costs, T, cfg, seeds,
+                          budgets, scenario=scenario)
+        for i, local_res in zip(group, local):
+            assert results[i].identical_to(local_res), \
+                (i, results[i].identical_fields(local_res))
+
+
+def test_remote_batched_bit_equal_to_inprocess_simserver(remote_batched,
+                                                         stream_arrays):
+    results, _ = remote_batched
+    with SimServer(max_batch=16, max_wait_ms=2.0) as server:
+        server.register_stream("default", *stream_arrays)
+        local_futs = [server.submit(**spec) for spec in WAVE]
+        local = [f.result(timeout=600.0) for f in local_futs]
+    for i, (remote_res, local_res) in enumerate(zip(results, local)):
+        assert remote_res.identical_to(local_res), \
+            (i, remote_res.identical_fields(local_res))
+
+
+def test_remote_exact_bit_equal_to_direct_scans(remote, stream_arrays):
+    preds, y, costs = stream_arrays
+    futs = [remote.submit(**spec, exact=True) for spec in WAVE]
+    results = [f.result(timeout=600.0) for f in futs]
+    for fut in futs:
+        assert fut.execution["mode"] == "exact"
+    cfg = SimConfig()
+    for spec, remote_res in zip(WAVE, results):
+        budget = (spec["budget"] if spec["budget"] is not None
+                  else cfg.budget)
+        direct = run_simulation_scan(
+            spec["algo"], preds, y, costs, T,
+            replace(cfg, seed=spec["seed"], budget=budget),
+            scenario=spec["scenario"])
+        assert remote_res.identical_to(direct), \
+            (spec, remote_res.identical_fields(direct))
+
+
+def test_remote_result_surface_is_complete(remote_batched):
+    """The wire carries the full SimResult surface: curves, selection
+    masks, violation counts and a regret tracker whose curve is usable
+    post-hoc."""
+    results, _ = remote_batched
+    res = results[0]
+    assert res.mse_curve.shape == (T,)
+    assert res.sel_masks is not None and res.sel_masks.shape == (T, K)
+    assert res.regret.regret_curve().shape == (T,)
+    assert 0.0 <= res.violation_frac <= 1.0
+    assert res.final_mse == float(res.mse_curve[-1])

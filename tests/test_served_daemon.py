@@ -1,0 +1,452 @@
+"""Daemon lifecycle, soak, and the requeue-or-fail shutdown contract.
+
+Three layers, cheapest first:
+
+* **white-box ``RequestQueue.restore``** — the latent shutdown race:
+  a drainer that claimed a batch and then lost its worker must be able
+  to put the claim back even after ``close()`` (``put`` raises
+  ``QueueClosed`` there), and restored items whose future already
+  settled are dropped so every future settles exactly once.
+* **hung-peer stub daemon** — ``ServeDaemon`` with an injected
+  ``worker_factory`` standing up scripted in-process RPC peers (no
+  jax): a worker that accepts a submit and never replies is declared
+  dead by the heartbeat, the claim is requeued exactly once onto the
+  replacement, and with retries exhausted the client gets a typed
+  ``WorkerDied`` — never a hang.
+* **CLI soak** — the full ``repro.launch.served`` lifecycle: start ->
+  register-stream (.npz) -> sustained submits from two client
+  *processes* -> re-register (version bump must propagate to the
+  worker's process-local cache) -> graceful stop (drains in-flight,
+  rejects new, removes the pidfile, leaves no orphaned processes or
+  listening sockets).  These tests share one daemon and run in file
+  order.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+from pathlib import Path
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.serve import transport as tp
+from repro.serve.daemon import ServeDaemon, WorkerHandle
+from repro.serve.queue import (QueueClosed, RequestQueue, SimFuture,
+                               SimRequest)
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = str(REPO / "src")
+
+
+def _req(seed: int = 0) -> SimRequest:
+    return SimRequest(algo="eflfg", seed=seed, T=8)
+
+
+# ---------------------------------------------------------------------------
+# white-box: RequestQueue.restore (the shutdown-race fix)
+# ---------------------------------------------------------------------------
+
+def test_queue_restore_works_on_closed_queue():
+    """The race: pump claims a batch, daemon starts draining (queue
+    closed), worker dies.  ``put`` has nowhere to go -- ``restore``
+    must still hand the claim back to the drainer."""
+    q = RequestQueue()
+    pairs = [(r := _req(i), SimFuture(r)) for i in range(3)]
+    for r, f in pairs:
+        q.put(r, f)
+    claimed = q.drain(max_n=8, wait_s=0.0)
+    assert len(claimed) == 3 and len(q) == 0
+    q.close()
+    with pytest.raises(QueueClosed):
+        q.put(*pairs[0])
+    q.restore(claimed)
+    again = q.drain(max_n=8, wait_s=0.0)
+    assert [r.seed for r, _ in again] == [0, 1, 2]
+
+
+def test_queue_restore_goes_to_the_front():
+    q = RequestQueue()
+    first = (_req(0), SimFuture(_req(0)))
+    q.put(*first)
+    claimed = q.drain(max_n=1, wait_s=0.0)
+    later = (_req(9), SimFuture(_req(9)))
+    q.put(*later)
+    q.restore(claimed)
+    drained = q.drain(max_n=8, wait_s=0.0)
+    assert [r.seed for r, _ in drained] == [0, 9]   # restored claim first
+
+
+def test_queue_restore_drops_settled_futures_exactly_once():
+    """A future failed while in flight (deadline sweep, drain timeout)
+    must not come back for a second settle: restore filters done
+    futures, so requeue-or-fail settles each future exactly once."""
+    q = RequestQueue()
+    pairs = [(r := _req(i), SimFuture(r)) for i in range(3)]
+    for r, f in pairs:
+        q.put(r, f)
+    claimed = q.drain(max_n=8, wait_s=0.0)
+    claimed[1][1].set_exception(tp.DeadlineExceeded("swept"))
+    q.restore(claimed)
+    survivors = q.drain(max_n=8, wait_s=0.0)
+    assert [r.seed for r, _ in survivors] == [0, 2]
+    with pytest.raises(RuntimeError):               # write-once held
+        claimed[1][1].set_result("late")
+
+
+def test_queue_restore_of_all_done_items_is_a_noop():
+    q = RequestQueue()
+    r = _req(0)
+    f = SimFuture(r)
+    f.set_result("done")
+    q.restore([(r, f)])
+    assert len(q) == 0
+
+
+# ---------------------------------------------------------------------------
+# hung-peer stub daemon (no jax: scripted in-process workers)
+# ---------------------------------------------------------------------------
+
+class _NeverDone:
+    """Deferred reply that never fulfills: the hung peer."""
+
+    def add_done_callback(self, fn):
+        pass
+
+    def result(self, timeout=None):     # pragma: no cover - never called
+        raise RuntimeError("never done")
+
+
+class StubWorker:
+    """Scripted stand-in for ``repro.serve.worker``: a bare RpcServer
+    speaking the worker protocol.  ``mode='hung'`` accepts a submit,
+    never replies, and wedges its pings afterwards (so the daemon's
+    heartbeat, not test plumbing, declares it dead)."""
+
+    def __init__(self, mode: str):
+        self.mode = mode
+        self.submits: list = []
+        self.streams: dict = {}
+        self._wedged = threading.Event()
+        self.rpc = tp.RpcServer({
+            "ping": self._ping,
+            "register_stream": self._register,
+            "list_streams": lambda p, c: {
+                n: {"version": v} for n, v in self.streams.items()},
+            "submit": self._submit,
+            "shutdown": lambda p, c: {"stopping": True},
+        }).start()
+
+    def _ping(self, params, ctx):
+        if self._wedged.is_set():
+            raise tp.WorkerDied("stub is wedged")
+        return {"pong": True}
+
+    def _register(self, params, ctx):
+        version = self.streams.get(params["name"], 0) + 1
+        self.streams[params["name"]] = version
+        return {"name": params["name"], "version": version,
+                "K": len(params["costs"]), "n_stream": len(params["y"])}
+
+    def _submit(self, params, ctx):
+        self.submits.append(params)
+        if self.mode == "hung":
+            self._wedged.set()
+            return _NeverDone()
+        return {"result": {"stub": True, "seed": params["seed"]},
+                "execution": {"mode": "stub", "bucket": 1}}
+
+    def stop(self):
+        self.rpc.stop()
+
+
+def _stub_factory(modes: list, spawned: list):
+    """Factory yielding StubWorkers per spawn epoch (last mode sticks)."""
+
+    def factory(worker_args, epoch):
+        mode = modes[min(epoch, len(modes)) - 1]
+        stub = StubWorker(mode)
+        spawned.append(stub)
+        client = tp.RpcClient(stub.rpc.addr, connect_timeout=5.0)
+        return WorkerHandle(None, client, epoch)
+
+    return factory
+
+
+def _tiny_stream():
+    return {"name": "default",
+            "preds": np.zeros((2, 16), np.float32),
+            "y": np.zeros(16, np.float32),
+            "costs": np.ones(2, np.float32)}
+
+
+_SPEC = {"algo": "eflfg", "seed": 3, "T": 8, "budget": None,
+         "stream": "default"}
+
+
+def test_hung_peer_requeues_exactly_once_onto_replacement():
+    spawned: list = []
+    daemon = ServeDaemon(max_pending=8, retry_limit=1, heartbeat_s=0.05,
+                         heartbeat_misses=2,
+                         worker_factory=_stub_factory(["hung", "good"],
+                                                      spawned))
+    daemon.start()
+    front = tp.RpcClient(daemon.addr, connect_timeout=5.0)
+    try:
+        front.call("register_stream", _tiny_stream(), deadline_s=10.0)
+        reply = front.call("submit", _SPEC, deadline_s=30.0)
+        # served by the replacement after the hung peer was declared dead
+        assert reply["result"] == {"stub": True, "seed": 3}
+        # exactly once per peer: one claim went to each, never two
+        assert len(spawned) == 2
+        assert len(spawned[0].submits) == 1
+        assert len(spawned[1].submits) == 1
+        status = daemon.status()
+        assert status["worker"]["epoch"] == 2
+        assert status["worker"]["restarts"] == 1
+        assert status["counters"]["retried"] == 1
+        assert status["counters"]["completed"] == 1
+        assert status["counters"]["worker_failed"] == 0
+        assert status["queued"] == 0 and status["inflight"] == 0
+        # the replacement saw the replayed stream registry
+        assert spawned[1].streams == {"default": 1}
+    finally:
+        front.close()
+        daemon.drain_and_stop(timeout=10.0)
+        for stub in spawned:
+            stub.stop()
+
+
+def test_hung_peer_fails_typed_when_retries_exhausted():
+    spawned: list = []
+    daemon = ServeDaemon(max_pending=8, retry_limit=0, heartbeat_s=0.05,
+                         heartbeat_misses=2,
+                         worker_factory=_stub_factory(["hung"], spawned))
+    daemon.start()
+    front = tp.RpcClient(daemon.addr, connect_timeout=5.0)
+    try:
+        front.call("register_stream", _tiny_stream(), deadline_s=10.0)
+        with pytest.raises(tp.WorkerDied):
+            front.call("submit", _SPEC, deadline_s=30.0)
+        status = daemon.status()
+        assert status["counters"]["worker_failed"] == 1
+        assert status["counters"]["retried"] == 0
+        assert status["queued"] == 0 and status["inflight"] == 0
+        assert len(spawned[0].submits) == 1     # the claim went out once
+    finally:
+        front.close()
+        daemon.drain_and_stop(timeout=10.0)
+        for stub in spawned:
+            stub.stop()
+
+
+# ---------------------------------------------------------------------------
+# CLI soak: start -> register -> sustained 2-process load -> re-register
+# -> graceful stop.  Shares one daemon; runs in file order.
+# ---------------------------------------------------------------------------
+
+K, N_STREAM, T = 6, 400, 40
+
+_CLIENT_SCRIPT = textwrap.dedent("""\
+    import sys
+    from repro.serve import SimClient
+
+    host, port, base_seed = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+    client = SimClient.connect((host, port))
+    futs = [client.submit(algo="eflfg", seed=base_seed + i, T={T})
+            for i in range(4)]
+    results = [f.result(timeout=300.0) for f in futs]
+    assert all(r.mse_curve.shape == ({T},) for r in results)
+    client.close()
+    print("CLIENT-OK", len(results))
+""").format(T=T)
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _cli(*args, timeout=240.0):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.served", *args],
+        capture_output=True, text=True, timeout=timeout, env=_env(),
+        cwd=str(REPO))
+    assert proc.returncode == 0, (args, proc.stdout, proc.stderr)
+    return proc.stdout.strip()
+
+
+def _alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+        return True
+    except (ProcessLookupError, PermissionError):
+        return False
+
+
+def _arrays(data_seed: int):
+    rng = np.random.default_rng(data_seed)
+    return {"preds": rng.normal(0, 1, (K, N_STREAM)).astype(np.float32),
+            "y": rng.normal(0, 1, N_STREAM).astype(np.float32),
+            "costs": rng.uniform(0.5, 2.0, K).astype(np.float32)}
+
+
+@pytest.fixture(scope="module")
+def cli(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("served")
+    pidfile = tmp / "served.json"
+    out = _cli("start", "--pidfile", str(pidfile),
+               "--log", str(tmp / "served.log"),
+               "--max-pending", "64", "--spawn-timeout", "300",
+               timeout=330.0)
+    info = json.loads(out)
+    ns = SimpleNamespace(pidfile=pidfile, tmp=tmp, host=info["host"],
+                         port=info["port"], pid=info["pid"],
+                         worker_pid=None, stopped=False)
+    yield ns
+    if not ns.stopped and pidfile.exists():     # a test failed mid-flow
+        try:
+            _cli("stop", "--pidfile", str(pidfile), timeout=120.0)
+        except Exception:                       # noqa: BLE001
+            if _alive(ns.pid):
+                os.kill(ns.pid, 9)
+
+
+def _status(cli):
+    return json.loads(_cli("status", "--pidfile", str(cli.pidfile),
+                           timeout=60.0))
+
+
+def test_cli_start_pidfile_and_worker(cli):
+    info = json.loads(cli.pidfile.read_text())
+    assert info["pid"] == cli.pid and _alive(cli.pid)
+    status = _status(cli)
+    assert status["worker"]["alive"]
+    cli.worker_pid = status["worker"]["pid"]
+    assert cli.worker_pid is not None and _alive(cli.worker_pid)
+    assert status["draining"] is False
+
+
+def test_cli_register_stream_from_npz(cli):
+    npz = cli.tmp / "stream_v1.npz"
+    np.savez(npz, **_arrays(0))
+    out = json.loads(_cli("register-stream", "--pidfile", str(cli.pidfile),
+                          "--name", "default", "--npz", str(npz)))
+    assert out["daemon_version"] == 1 and out["worker_version"] == 1
+    assert out["K"] == K and out["n_stream"] == N_STREAM
+    listed = json.loads(_cli("list-streams", "--pidfile",
+                             str(cli.pidfile), timeout=60.0))
+    assert listed["default"]["version"] == 1
+
+
+def test_sustained_load_from_two_client_processes(cli):
+    env = _env()
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _CLIENT_SCRIPT, cli.host, str(cli.port),
+         str(100 * (i + 1))],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env=env, cwd=str(REPO)) for i in range(2)]
+    for proc in procs:
+        out, err = proc.communicate(timeout=420.0)
+        assert proc.returncode == 0, (out, err)
+        assert "CLIENT-OK 4" in out
+    status = _status(cli)
+    assert status["counters"]["admitted"] >= 8
+    assert status["counters"]["completed"] >= 8
+    assert status["queued"] == 0 and status["inflight"] == 0
+    assert status["worker"]["alive"]
+
+
+def test_reregister_version_bump_propagates_to_worker(cli):
+    from dataclasses import replace
+
+    from repro.federated import SimConfig, run_simulation_scan
+    from repro.serve import SimClient
+
+    spec = dict(algo="eflfg", seed=5, T=T, exact=True)
+    client = SimClient.connect((cli.host, cli.port))
+    try:
+        before = client.submit(**spec).result(timeout=300.0)
+        new = _arrays(7)                        # same shapes, new data
+        npz = cli.tmp / "stream_v2.npz"
+        np.savez(npz, **new)
+        out = json.loads(_cli("register-stream", "--pidfile",
+                              str(cli.pidfile), "--name", "default",
+                              "--npz", str(npz)))
+        assert out["daemon_version"] == 2 and out["worker_version"] == 2
+        after = client.submit(**spec).result(timeout=300.0)
+    finally:
+        client.close()
+    # new data actually reached the worker's process-local cache ...
+    assert not np.array_equal(before.mse_curve, after.mse_curve)
+    # ... and the served result is still bit-equal to a direct scan
+    direct = run_simulation_scan(
+        "eflfg", new["preds"], new["y"], new["costs"], T,
+        replace(SimConfig(), seed=5))
+    assert after.identical_to(direct), after.identical_fields(direct)
+
+
+def test_graceful_stop_drains_inflight_and_rejects_new(cli):
+    from repro.serve import Overloaded, SimClient
+    from repro.serve.transport import ConnectionLost
+
+    t_fresh = 397                               # new shape: forces a compile
+    client = SimClient.connect((cli.host, cli.port))
+    futs = [client.submit(algo="eflfg", seed=s, T=t_fresh)
+            for s in range(6)]
+
+    stopper = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.served", "stop",
+         "--pidfile", str(cli.pidfile), "--timeout", "180"],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env=_env(), cwd=str(REPO))
+
+    # once draining, new submits are rejected typed (Overloaded), or the
+    # endpoint is already gone (ConnectionLost) if the drain won the race
+    rejected = False
+    late = SimClient.connect((cli.host, cli.port), retries=0)
+    deadline = time.monotonic() + 120.0
+    try:
+        while time.monotonic() < deadline and not rejected:
+            try:
+                if _status(cli).get("draining"):
+                    with pytest.raises((Overloaded, ConnectionLost)):
+                        late.submit(algo="eflfg", seed=99,
+                                    T=t_fresh).result(timeout=30.0)
+                    rejected = True
+            except Exception:                   # noqa: BLE001 - gone
+                break
+            time.sleep(0.05)
+    finally:
+        late.close()
+
+    # every in-flight request admitted before the stop still completes
+    results = [f.result(timeout=300.0) for f in futs]
+    assert all(r.mse_curve.shape == (t_fresh,) for r in results)
+    client.close()
+
+    out, err = stopper.communicate(timeout=300.0)
+    assert stopper.returncode == 0, (out, err)
+    cli.stopped = True
+
+    # no orphans, no leaked endpoints: pidfile gone, both processes
+    # dead, the port no longer accepts connections
+    assert not cli.pidfile.exists()
+    deadline = time.monotonic() + 30.0
+    while time.monotonic() < deadline and (_alive(cli.pid) or (
+            cli.worker_pid and _alive(cli.worker_pid))):
+        time.sleep(0.1)
+    assert not _alive(cli.pid)
+    if cli.worker_pid is not None:
+        assert not _alive(cli.worker_pid)
+    with pytest.raises(OSError):
+        socket.create_connection((cli.host, cli.port), timeout=2.0).close()

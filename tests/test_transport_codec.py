@@ -1,0 +1,213 @@
+"""Wire-codec and framing tests for ``repro.serve.transport``.
+
+Deterministic tests cover the framing state machine (magic, codec tag,
+length bound, the truncation-vs-clean-close distinction) and the tagged
+ndarray round trip the remote determinism contract rests on.  The
+Hypothesis twin — arbitrary request/response trees, truncation at every
+drawn cut point — lives in ``tests/test_transport_codec_props.py``
+(importorskip-guarded, like the repo's other property suites); this
+file must run on minimal installs.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import socket
+import struct
+
+import numpy as np
+import pytest
+
+from repro.serve import transport as tp
+
+
+def _codecs():
+    out = ["json"]
+    if tp.default_codec() == "msgpack":
+        out.append("msgpack")
+    return out
+
+
+def _eq(a, b) -> bool:
+    """Round-trip equality: arrays bit-for-bit, NaN == NaN, tuples
+    normalize to lists."""
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        return (isinstance(a, np.ndarray) and isinstance(b, np.ndarray)
+                and a.dtype == b.dtype and a.shape == b.shape
+                and a.tobytes() == b.tobytes())
+    if isinstance(a, dict):
+        return (isinstance(b, dict) and a.keys() == b.keys()
+                and all(_eq(v, b[k]) for k, v in a.items()))
+    if isinstance(a, (list, tuple)):
+        return (isinstance(b, (list, tuple)) and len(a) == len(b)
+                and all(_eq(x, y) for x, y in zip(a, b)))
+    if isinstance(a, float) and isinstance(b, float):
+        return (math.isnan(a) and math.isnan(b)) or a == b
+    return type(a) is type(b) and a == b
+
+
+def _roundtrip(tree, codec):
+    c, payload = tp.encode(tree, codec)
+    assert c == codec
+    return tp.decode(c, payload)
+
+
+def _feed(data: bytes) -> socket.socket:
+    """A socket whose read side sees exactly ``data`` then EOF."""
+    a, b = socket.socketpair()
+    a.sendall(data)
+    a.close()
+    return b
+
+
+# ---------------------------------------------------------------------------
+# deterministic codec round trips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", _codecs())
+def test_roundtrip_request_shaped_tree(codec):
+    tree = {"id": 17, "method": "submit",
+            "params": {"algo": "eflfg", "seed": 3, "T": 2000,
+                       "budget": None, "exact": False,
+                       "cfg": {"eta": 0.125, "xi": None},
+                       "scenario": "concept_drift"},
+            "deadline_ms": 1500.0}
+    assert _eq(_roundtrip(tree, codec), tree)
+
+
+@pytest.mark.parametrize("codec", _codecs())
+@pytest.mark.parametrize("dtype", ["float32", "float64", "int32", "bool"])
+def test_roundtrip_arrays_bit_exact(codec, dtype):
+    rng = np.random.default_rng(0)
+    arr = rng.normal(0, 1, (3, 5)).astype(dtype)
+    out = _roundtrip({"arr": arr}, codec)["arr"]
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    assert out.tobytes() == arr.tobytes()
+
+
+@pytest.mark.parametrize("codec", _codecs())
+def test_roundtrip_nan_inf_and_signalling_bits(codec):
+    # distinct NaN payload bits must survive: the arrays ride as raw
+    # bytes, so even non-default NaNs are preserved exactly
+    raw = np.array([0x7fc00001, 0x7f800000, 0xff800000, 0x80000000],
+                   dtype=np.uint32)
+    arr = raw.view(np.float32)
+    out = _roundtrip({"x": arr, "scalars": [float("nan"), float("inf"),
+                                            -float("inf"), -0.0]}, codec)
+    assert out["x"].tobytes() == arr.tobytes()
+    s = out["scalars"]
+    assert math.isnan(s[0]) and s[1] == math.inf and s[2] == -math.inf
+    assert math.copysign(1.0, s[3]) == -1.0
+
+
+@pytest.mark.parametrize("codec", _codecs())
+def test_roundtrip_zero_length_stream_and_bytes(codec):
+    tree = {"empty": np.zeros((0,), np.float32),
+            "empty2d": np.zeros((4, 0), np.float64),
+            "blob": b"\x00\xff\xa5", "nothing": b"", "text": ""}
+    out = _roundtrip(tree, codec)
+    assert out["empty"].shape == (0,) and out["empty"].dtype == np.float32
+    assert out["empty2d"].shape == (4, 0)
+    assert out["blob"] == b"\x00\xff\xa5" and out["nothing"] == b""
+
+
+def test_tuples_normalize_to_lists():
+    out = _roundtrip({"t": (1, 2, (3, 4))}, "json")
+    assert out["t"] == [1, 2, [3, 4]]
+
+
+def test_unencodable_object_raises_typerror():
+    with pytest.raises(TypeError):
+        tp.encode({"x": object()}, "json")
+    with pytest.raises(TypeError):
+        tp.encode({1: "non-string key"}, "json")
+
+
+def test_error_wire_roundtrip_typed():
+    for exc_type in (tp.Overloaded, tp.DeadlineExceeded, tp.WorkerDied,
+                     tp.ConnectionLost, tp.FrameError, ValueError):
+        back = tp.error_from_wire(tp.error_to_wire(exc_type("boom")))
+        assert type(back) is exc_type and "boom" in str(back)
+    # unknown remote types arrive as RemoteError with the name attached
+    back = tp.error_from_wire({"type": "SomethingExotic", "message": "m"})
+    assert isinstance(back, tp.RemoteError) and back.rtype == "SomethingExotic"
+    # QueueClosed maps to the retryable admission rejection
+    class QueueClosed(RuntimeError):
+        pass
+    back = tp.error_from_wire(tp.error_to_wire(QueueClosed("shut")))
+    assert isinstance(back, tp.Overloaded)
+
+
+# ---------------------------------------------------------------------------
+# framing state machine
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip_over_socket():
+    msgs = [{"id": i, "ok": True, "value": [i, "x" * i]} for i in range(5)]
+    sock = _feed(b"".join(tp.pack_frame(m) for m in msgs))
+    got = [tp.read_frame(sock) for _ in msgs]
+    assert all(_eq(a, b) for a, b in zip(got, msgs))
+    with pytest.raises(tp.ConnectionLost):
+        tp.read_frame(sock)
+    sock.close()
+
+
+def test_bad_magic_is_frame_error():
+    sock = _feed(b"XX" + tp.pack_frame({"x": 1})[2:])
+    with pytest.raises(tp.FrameError, match="magic"):
+        tp.read_frame(sock)
+    sock.close()
+
+
+def test_bad_codec_byte_is_frame_error():
+    frame = bytearray(tp.pack_frame({"x": 1}))
+    frame[2:3] = b"Z"
+    sock = _feed(bytes(frame))
+    with pytest.raises(tp.FrameError, match="codec"):
+        tp.read_frame(sock)
+    sock.close()
+
+
+def test_oversized_length_is_frame_error():
+    header = tp.MAGIC + b"J" + struct.pack(">I", tp.MAX_FRAME + 1)
+    sock = _feed(header)
+    with pytest.raises(tp.FrameError, match="exceeds"):
+        tp.read_frame(sock)
+    sock.close()
+
+
+def test_pack_frame_enforces_max_size(monkeypatch):
+    monkeypatch.setattr(tp, "MAX_FRAME", 64)
+    with pytest.raises(tp.FrameError, match="too large"):
+        tp.pack_frame({"blob": b"\x00" * 256})
+
+
+def test_max_size_frame_roundtrips(monkeypatch):
+    # a payload landing exactly on the cap is legal on both ends
+    monkeypatch.setattr(tp, "MAX_FRAME", 4096)
+    blob = b"\xa5" * 4000
+    _, payload = tp.encode({"b": blob}, "msgpack"
+                           if "msgpack" in _codecs() else "json")
+    assert len(payload) <= 4096
+    sock = _feed(tp.pack_frame({"b": blob}))
+    assert tp.read_frame(sock)["b"] == blob
+    sock.close()
+
+
+def test_every_cut_inside_a_frame_is_frame_error():
+    frame = tp.pack_frame({"id": 1, "value": list(range(20))})
+    for cut in range(1, len(frame)):
+        sock = _feed(frame[:cut])
+        with pytest.raises(tp.FrameError):
+            tp.read_frame(sock)
+        sock.close()
+
+
+def test_cut_at_frame_boundary_is_clean_close():
+    frame = tp.pack_frame({"id": 1})
+    sock = _feed(frame)
+    tp.read_frame(sock)
+    with pytest.raises(tp.ConnectionLost):
+        tp.read_frame(sock)
+    sock.close()

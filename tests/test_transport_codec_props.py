@@ -1,0 +1,118 @@
+"""Hypothesis property tests for the serving wire codec.
+
+The deterministic twin is ``tests/test_transport_codec.py`` (runs on
+minimal installs); this module round-trips *arbitrary*
+request/response trees — NaN/inf scalars, zero-length streams, every
+array dtype the serving tier ships — and proves that a byte stream
+truncated at ANY drawn cut point raises a typed framing error
+(``FrameError`` inside a frame, ``ConnectionLost`` at a boundary)
+rather than desyncing the connection.
+"""
+
+from __future__ import annotations
+
+import math
+import socket
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serve import transport as tp
+
+
+def _codecs():
+    out = ["json"]
+    if tp.default_codec() == "msgpack":
+        out.append("msgpack")
+    return out
+
+
+def _eq(a, b) -> bool:
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        return (isinstance(a, np.ndarray) and isinstance(b, np.ndarray)
+                and a.dtype == b.dtype and a.shape == b.shape
+                and a.tobytes() == b.tobytes())
+    if isinstance(a, dict):
+        return (isinstance(b, dict) and a.keys() == b.keys()
+                and all(_eq(v, b[k]) for k, v in a.items()))
+    if isinstance(a, (list, tuple)):
+        return (isinstance(b, (list, tuple)) and len(a) == len(b)
+                and all(_eq(x, y) for x, y in zip(a, b)))
+    if isinstance(a, float) and isinstance(b, float):
+        return (math.isnan(a) and math.isnan(b)) or a == b
+    return type(a) is type(b) and a == b
+
+
+def _feed(data: bytes) -> socket.socket:
+    a, b = socket.socketpair()
+    a.sendall(data)
+    a.close()
+    return b
+
+
+_DTYPES = ("float32", "float64", "int32", "int64", "uint8", "bool")
+
+
+@st.composite
+def _arrays(draw):
+    dtype = np.dtype(draw(st.sampled_from(_DTYPES)))
+    n = draw(st.integers(0, 16))
+    raw = draw(st.binary(min_size=n * dtype.itemsize,
+                         max_size=n * dtype.itemsize))
+    arr = np.frombuffer(raw, dtype=dtype)
+    if n and n % 2 == 0 and draw(st.booleans()):
+        arr = arr.reshape(2, n // 2)
+    return arr.copy()
+
+
+def _trees():
+    leaves = st.one_of(
+        st.none(), st.booleans(),
+        st.integers(min_value=-2**63, max_value=2**64 - 1),
+        st.floats(allow_nan=True, allow_infinity=True),
+        st.text(max_size=20), st.binary(max_size=40), _arrays())
+    return st.recursive(
+        leaves,
+        lambda kids: st.one_of(
+            st.lists(kids, max_size=4),
+            st.dictionaries(st.text(max_size=8), kids, max_size=4)),
+        max_leaves=12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(tree=_trees(), codec=st.sampled_from(_codecs()))
+def test_property_roundtrip(tree, codec):
+    c, payload = tp.encode(tree, codec)
+    assert _eq(tp.decode(c, payload), tree)
+
+
+@settings(max_examples=60, deadline=None)
+@given(trees=st.lists(_trees(), min_size=1, max_size=3),
+       codec=st.sampled_from(_codecs()),
+       cut_frac=st.floats(min_value=0.0, max_value=1.0,
+                          exclude_max=True))
+def test_property_prefix_truncation_never_desyncs(trees, codec, cut_frac):
+    frames = [tp.pack_frame(t, codec) for t in trees]
+    stream = b"".join(frames)
+    cut = int(cut_frac * len(stream))
+    # how many frames fit entirely under the cut, and is it a boundary?
+    whole, offset = 0, 0
+    for f in frames:
+        if offset + len(f) <= cut:
+            whole += 1
+            offset += len(f)
+        else:
+            break
+    sock = _feed(stream[:cut])
+    for i in range(whole):
+        assert _eq(tp.read_frame(sock), trees[i])
+    if cut == offset:                   # truncated at a frame boundary
+        with pytest.raises(tp.ConnectionLost):
+            tp.read_frame(sock)
+    else:                               # truncated inside a frame
+        with pytest.raises(tp.FrameError):
+            tp.read_frame(sock)
+    sock.close()

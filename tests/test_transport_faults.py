@@ -1,0 +1,385 @@
+"""Fault injection for the remote serving tier.
+
+Every failure mode the wire introduces is injected deterministically
+here and must resolve ONLY the affected futures with a *typed* error —
+co-tenants complete (or are cleanly retried), the daemon never wedges,
+and nothing hangs past its deadline.  This mirrors the in-process
+poison-request discipline of ``tests/test_serve.py``: one tenant's
+misfortune is never a co-tenant's problem.
+
+Faults covered: connection drop mid-request (client-daemon proxy cut),
+truncated frames in both directions, worker SIGKILL mid-dispatch (with
+requeue-or-fail retry through the respawned worker), deadline expiry,
+and admission-control overload.
+
+The daemon fixture is module-scoped (a worker spawn pays the jax
+import); fault tests that mutate it (the SIGKILL test) self-heal
+through the daemon's supervision before the next test runs.
+"""
+
+from __future__ import annotations
+
+import os
+import signal
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve import SimClient
+from repro.serve import transport as tp
+from repro.serve.daemon import ServeDaemon
+
+pytestmark = pytest.mark.filterwarnings("ignore::ResourceWarning")
+
+
+# ---------------------------------------------------------------------------
+# transport-level faults: proxy shim, no jax anywhere
+# ---------------------------------------------------------------------------
+
+class FaultyProxy:
+    """A TCP shim between a client and an RPC server that can cut the
+    link mid-request or truncate a frame in flight."""
+
+    def __init__(self, upstream):
+        self.upstream = tp.parse_addr(upstream)
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind(("127.0.0.1", 0))
+        self._listener.listen(8)
+        self.addr = self._listener.getsockname()[:2]
+        self._pairs: list = []
+        self._lock = threading.Lock()
+        # None = forward freely; an int = forward that many more
+        # upstream->client bytes, then cut both sides
+        self._budget = None
+        threading.Thread(target=self._accept, daemon=True).start()
+
+    def _accept(self):
+        while True:
+            try:
+                client, _ = self._listener.accept()
+            except OSError:
+                return
+            up = socket.create_connection(self.upstream, timeout=5.0)
+            with self._lock:
+                self._pairs.append((client, up))
+            threading.Thread(target=self._pump, args=(client, up, False),
+                             daemon=True).start()
+            threading.Thread(target=self._pump, args=(up, client, True),
+                             daemon=True).start()
+
+    def _pump(self, src, dst, downstream):
+        while True:
+            try:
+                data = src.recv(65536)
+            except OSError:
+                return
+            if not data:
+                for s in (src, dst):
+                    try:
+                        s.shutdown(socket.SHUT_RDWR)
+                    except OSError:
+                        pass
+                    try:
+                        s.close()
+                    except OSError:
+                        pass
+                return
+            if downstream:
+                with self._lock:
+                    if self._budget is not None:
+                        data = data[:self._budget]
+                        self._budget -= len(data)
+                        cut = self._budget <= 0
+                    else:
+                        cut = False
+                if data:
+                    try:
+                        dst.sendall(data)
+                    except OSError:
+                        return
+                if cut:
+                    self.drop()
+                    return
+            else:
+                try:
+                    dst.sendall(data)
+                except OSError:
+                    return
+
+    def truncate_downstream_after(self, nbytes: int) -> None:
+        with self._lock:
+            self._budget = nbytes
+
+    def drop(self) -> None:
+        with self._lock:
+            pairs, self._pairs = self._pairs, []
+        for a, b in pairs:
+            for s in (a, b):
+                try:
+                    s.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                                 struct.pack("ii", 1, 0))
+                except OSError:
+                    pass
+                try:
+                    # shutdown wakes any thread blocked in recv; close
+                    # alone would leave it parked on the dead fd
+                    s.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+                try:
+                    s.close()
+                except OSError:
+                    pass
+
+    def close(self) -> None:
+        self.drop()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+
+
+def _slow_server():
+    """An RpcServer whose 'slow' method defers its reply ~0.4s."""
+    def slow(params, ctx):
+        out = tp.RpcFuture()
+        t = threading.Timer(0.4, out.set_result, args=({"ok": 1},))
+        t.daemon = True
+        t.start()
+        return out
+    return tp.RpcServer({"echo": lambda p, c: p, "slow": slow}).start()
+
+
+def test_connection_drop_mid_request_fails_only_that_client():
+    srv = _slow_server()
+    proxy = FaultyProxy(srv.addr)
+    victim = tp.RpcClient(proxy.addr)
+    bystander = tp.RpcClient(srv.addr)      # direct, different connection
+    try:
+        pending = victim.call_async("slow", {})
+        busy = bystander.call_async("slow", {})
+        time.sleep(0.05)                    # request is in flight
+        proxy.drop()
+        with pytest.raises(tp.ConnectionLost):
+            pending.result(timeout=5.0)
+        # the co-tenant connection is untouched and completes
+        assert busy.result(timeout=5.0) == {"ok": 1}
+        assert bystander.call("echo", {"x": 2}, deadline_s=5.0)["x"] == 2
+    finally:
+        victim.close()
+        bystander.close()
+        proxy.close()
+        srv.stop()
+
+
+def test_truncated_response_frame_fails_pending_typed():
+    srv = _slow_server()
+    proxy = FaultyProxy(srv.addr)
+    client = tp.RpcClient(proxy.addr)
+    try:
+        # let the handshake-free transport settle one echo first so the
+        # truncation hits the *response* of the slow call
+        assert client.call("echo", {"v": 1}, deadline_s=5.0)["v"] == 1
+        proxy.truncate_downstream_after(5)  # a few header bytes, then cut
+        fut = client.call_async("slow", {})
+        with pytest.raises(tp.ConnectionLost):
+            fut.result(timeout=5.0)
+        assert not client.alive             # poisoned handle, typed dead
+    finally:
+        client.close()
+        proxy.close()
+        srv.stop()
+
+
+def test_truncated_request_frame_closes_only_that_connection():
+    srv = tp.RpcServer({"echo": lambda p, c: p}).start()
+    try:
+        # a raw peer sends half a frame and vanishes
+        raw = socket.create_connection(srv.addr)
+        frame = tp.pack_frame({"id": 1, "method": "echo", "params": {}})
+        raw.sendall(frame[: len(frame) // 2])
+        raw.close()
+        # the server shed that connection; fresh clients are unaffected
+        client = tp.RpcClient(srv.addr)
+        assert client.call("echo", {"x": 3}, deadline_s=5.0)["x"] == 3
+        client.close()
+    finally:
+        srv.stop()
+
+
+def test_garbage_bytes_do_not_wedge_server():
+    srv = tp.RpcServer({"echo": lambda p, c: p}).start()
+    try:
+        raw = socket.create_connection(srv.addr)
+        raw.sendall(b"GET / HTTP/1.1\r\n\r\n" * 10)
+        raw.close()
+        client = tp.RpcClient(srv.addr)
+        assert client.call("echo", {"x": 4}, deadline_s=5.0)["x"] == 4
+        client.close()
+    finally:
+        srv.stop()
+
+
+def test_deadline_on_silent_peer_is_typed_and_on_time():
+    srv = tp.RpcServer({"never": lambda p, c: tp.RpcFuture()}).start()
+    client = tp.RpcClient(srv.addr)
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(tp.DeadlineExceeded):
+            client.call("never", {}, deadline_s=0.3)
+        assert time.monotonic() - t0 < 2.0
+    finally:
+        client.close()
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# full-stack faults: daemon + real worker subprocess
+# ---------------------------------------------------------------------------
+
+K, N_STREAM, T = 8, 400, 40
+
+
+@pytest.fixture(scope="module")
+def stream_arrays():
+    rng = np.random.default_rng(7)
+    return (rng.normal(0, 1, (K, N_STREAM)).astype(np.float32),
+            rng.normal(0, 1, N_STREAM).astype(np.float32),
+            rng.uniform(0.5, 2.0, K).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def daemon(stream_arrays):
+    d = ServeDaemon(max_pending=32, retry_limit=2, heartbeat_s=0.3,
+                    heartbeat_misses=2,
+                    worker_args={"max_batch": 8, "max_wait_ms": 1.0})
+    d.start()
+    client = SimClient.connect(d.addr, retries=0)
+    client.server.register_stream("default", *stream_arrays)
+    # warm the worker's executable cache so fault tests measure fault
+    # handling, not compile time
+    client.map([dict(algo="eflfg", seed=s, T=T) for s in range(2)],
+               timeout=180.0)
+    client.close()
+    yield d
+    d.drain_and_stop()
+
+
+def test_worker_sigkill_mid_dispatch_retries_or_fails_typed(daemon):
+    client = SimClient.connect(daemon.addr, retries=0)
+    try:
+        # a fresh T forces a compile on the worker: requests stay
+        # in-flight long enough to be killed mid-dispatch
+        futs = [client.submit("eflfg", s, T=T + 7) for s in range(6)]
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            st = daemon.status()
+            if st["inflight"] > 0 and st["worker"]["pid"]:
+                break
+            time.sleep(0.01)
+        pid = daemon.status()["worker"]["pid"]
+        assert pid, "no worker to kill"
+        os.kill(pid, signal.SIGKILL)
+        # every future settles: retried onto the respawned worker (the
+        # requeue-or-fail path) or failed typed — never hung
+        outcomes = []
+        for f in futs:
+            try:
+                outcomes.append(f.result(timeout=240.0))
+            except tp.WorkerDied as exc:
+                outcomes.append(exc)
+        assert all(o is not None for o in outcomes)
+        completed = [o for o in outcomes if not isinstance(o, Exception)]
+        # the retry budget (2) covers one kill: everything completes
+        assert len(completed) == len(futs), \
+            [type(o).__name__ for o in outcomes]
+        st = daemon.status()
+        assert st["worker"]["restarts"] >= 1
+        assert st["counters"]["retried"] >= 1
+        # and the respawned worker serves new traffic
+        res = client.run("fedboost", 11, T=T, timeout=240.0)
+        assert res.mse_curve.shape == (T,)
+    finally:
+        client.close()
+
+
+def test_deadline_expiry_drops_before_dispatch_typed(daemon):
+    client = SimClient.connect(daemon.addr, retries=0)
+    try:
+        t0 = time.monotonic()
+        fut = client.submit("eflfg", 123, T=T, deadline_s=0.001)
+        with pytest.raises(tp.DeadlineExceeded):
+            fut.result(timeout=10.0)
+        # "within the deadline" means promptly after it, not eventually
+        assert time.monotonic() - t0 < 5.0
+        assert daemon.status()["counters"]["expired"] >= 0
+    finally:
+        client.close()
+
+
+def test_overload_rejects_typed_and_co_tenants_complete(daemon):
+    tight = ServeDaemon(max_pending=3, retry_limit=1, heartbeat_s=0.5,
+                        worker_args={"max_batch": 4, "max_wait_ms": 1.0})
+    tight.start()
+    client = SimClient.connect(tight.addr, retries=0)
+    try:
+        client.server.register_stream(
+            "default",
+            *[np.asarray(a) for a in (np.random.default_rng(1).normal(
+                0, 1, (K, N_STREAM)).astype(np.float32),
+                np.zeros(N_STREAM, np.float32),
+                np.ones(K, np.float32))])
+        futs = [client.submit("eflfg", s, T=T + 13) for s in range(12)]
+        rejected, served = 0, 0
+        for f in futs:
+            try:
+                f.result(timeout=240.0)
+                served += 1
+            except tp.Overloaded:
+                rejected += 1
+        assert rejected >= 1, "admission control never engaged"
+        assert served >= 1, "co-tenant admissions must still complete"
+        assert served + rejected == len(futs)
+        assert tight.status()["counters"]["rejected"] >= rejected
+    finally:
+        client.close()
+        tight.drain_and_stop()
+
+
+def test_overloaded_submits_retry_with_backoff_to_completion(daemon):
+    tight = ServeDaemon(max_pending=2, retry_limit=1, heartbeat_s=0.5,
+                        worker_args={"max_batch": 4, "max_wait_ms": 1.0})
+    tight.start()
+    client = SimClient.connect(tight.addr, retries=6, backoff_s=0.2)
+    try:
+        rng = np.random.default_rng(2)
+        client.server.register_stream(
+            "default", rng.normal(0, 1, (K, N_STREAM)).astype(np.float32),
+            np.zeros(N_STREAM, np.float32), np.ones(K, np.float32))
+        futs = [client.submit("fedboost", s, T=T + 21) for s in range(8)]
+        results = [f.result(timeout=300.0) for f in futs]
+        assert all(r.mse_curve.shape == (T + 21,) for r in results)
+        assert tight.status()["counters"]["rejected"] >= 1, \
+            "load never tripped admission control (weak test setup)"
+    finally:
+        client.close()
+        tight.drain_and_stop()
+
+
+def test_daemon_serves_normally_after_all_faults(daemon):
+    client = SimClient.connect(daemon.addr)
+    try:
+        results = client.map(
+            [dict(algo="eflfg", seed=s, T=T) for s in range(4)],
+            timeout=240.0)
+        assert len(results) == 4
+        st = daemon.status()
+        assert st["queued"] == 0 and st["inflight"] == 0
+        assert not st["draining"] and st["worker"]["alive"]
+    finally:
+        client.close()
