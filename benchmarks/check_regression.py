@@ -46,6 +46,11 @@ is the open-loop load generator (``benchmarks.serve_load``): sustained
 traffic at ~70% of measured capacity, gated on the p99/p50
 tail-amplification ratio with a hard ``all_completed`` flag — and,
 like every serve cell, HARD-failed when a stale baseline lacks it.
+The ``pool`` serve cell compares a ``workers=2`` pool daemon against
+``workers=1`` on the same two-tenant burst: its 1.2x absolute floor
+applies only on multi-core hosts (the cell records ``cores``; one core
+cannot physically parallelize two workers) while ``all_completed``
+stays hard everywhere.
 
 The ``scenario`` cells (schedule-threaded vs stationary scan,
 ``repro.scenarios``) are gated on their paired overhead ratio against
@@ -90,13 +95,15 @@ SHARDED_GATE_FLOOR_S = 0.05
 # schedule-class-coalesced bucket spanning three scenario presets vs the
 # scenario-split dispatch of the same requests
 # (docs/serving.md#scenarios).
-SERVE_CELLS = ("eflfg", "fedboost", "mixed_scenario", "sustained")
+SERVE_CELLS = ("eflfg", "fedboost", "mixed_scenario", "sustained", "pool")
 SERVE_FLAGS = {
     "eflfg": ("served_equals_sweep", "exact_equals_direct"),
     "fedboost": ("served_equals_sweep", "exact_equals_direct"),
     "mixed_scenario": ("one_bucket", "lanes_equal_split"),
     # every open-loop request must complete without a typed error
     "sustained": ("all_completed",),
+    # every pool-burst request must complete without a typed error
+    "pool": ("all_completed",),
 }
 # Denominator / numerator timing keys per cell (default: serial/batched).
 # The sustained cell's `rel` is the p99/p50 tail amplification of the
@@ -105,8 +112,19 @@ SERVE_FLAGS = {
 # other serve ratios it is a paired same-run statistic, so it needs no
 # reference-canary normalization — and the cell being missing from a
 # stale baseline is a HARD failure (the PR-7 policy), not a warning.
-SERVE_SERIAL_KEY = {"mixed_scenario": "t_split_s", "sustained": "p50_s"}
-SERVE_BATCHED_KEY = {"mixed_scenario": "t_mixed_s", "sustained": "p99_s"}
+SERVE_SERIAL_KEY = {"mixed_scenario": "t_split_s", "sustained": "p50_s",
+                    "pool": "t_workers1_s"}
+SERVE_BATCHED_KEY = {"mixed_scenario": "t_mixed_s", "sustained": "p99_s",
+                     "pool": "t_workers2_s"}
+# Cells whose timing gates depend on physical parallelism.  The pool
+# cell compares a workers=2 daemon against workers=1: on a 1-core host
+# the two workers timeshare one CPU and no speedup is physically
+# available, so its absolute floor applies only when the fresh run's
+# recorded `cores` >= 2 (report-only below), and its baseline-relative
+# gate is skipped when baseline and fresh disagree on `cores` (the
+# ratio embeds the host's parallelism, so cross-core-count comparisons
+# are meaningless).  all_completed stays hard everywhere.
+SERVE_CORE_GATED = ("pool",)
 # Absolute throughput floors (speedup = 1 / rel), judged on the fresh
 # run alone — no baseline section needed, so a throughput collapse
 # cannot ride a baseline refresh through CI.  The FedBoost cell holds
@@ -117,7 +135,8 @@ SERVE_BATCHED_KEY = {"mixed_scenario": "t_mixed_s", "sustained": "p99_s"}
 # baseline refreshes as runners allow).  The mixed_scenario floor pins
 # the acceptance contract that coalescing beats scenario-split dispatch
 # at all.
-SERVE_MIN_SPEEDUP = {"eflfg": 1.1, "fedboost": 2.0, "mixed_scenario": 1.05}
+SERVE_MIN_SPEEDUP = {"eflfg": 1.1, "fedboost": 2.0, "mixed_scenario": 1.05,
+                     "pool": 1.2}
 # Scenario cells (repro.scenarios schedule-threaded scan vs stationary
 # scan, in-process paired ratios): the constant-scenario bit-equality
 # flag is a hard failure; `rel` is gated against the ABSOLUTE documented
@@ -337,12 +356,22 @@ def check_serve(base: dict, fresh: dict, threshold: float):
             if below_floor:
                 print("  rep  " + sline + "  [below gating floor "
                       f"{SHARDED_GATE_FLOOR_S}s serial — not timing-gated]")
+            elif cell in SERVE_CORE_GATED and f.get("cores", 1) < 2:
+                print("  rep  " + sline + f"  [{f.get('cores', 1)}-core "
+                      "host: no physical parallelism — not timing-gated]")
             elif speedup < min_speedup:
                 failures.append(("timing", sline + "  [under the "
                                  "committed serve throughput floor]"))
             else:
                 print("  ok   " + sline)
         if b is None:
+            continue
+        if (cell in SERVE_CORE_GATED
+                and b.get("cores") != f.get("cores")):
+            warnings.append(
+                f"serve/{cell}: baseline ran on {b.get('cores')} cores, "
+                f"fresh on {f.get('cores')} — relative timing gate "
+                "skipped (the ratio embeds host parallelism)")
             continue
         b_rel = b.get("rel")
         if b_rel is None:

@@ -343,6 +343,14 @@ def _serve_record(fast: bool) -> dict:
     # normalized by construction), plus the hard all_completed flag.
     from benchmarks.serve_load import sustained_record
     rec["sustained"] = sustained_record(preds, y, costs, fast)
+
+    # Worker-pool scaling cell: the same two-tenant closed burst vs a
+    # workers=2 pool daemon and a workers=1 daemon (real subprocess
+    # workers either way) — `rel` is the paired t_pool2/t_pool1 ratio,
+    # floor-gated only on multi-core hosts (the cell records `cores`);
+    # all_completed is hard everywhere (docs/serving.md#worker-pools).
+    from benchmarks.serve_load import pool_scaling_record
+    rec["pool"] = pool_scaling_record(preds, y, costs, fast)
     return rec
 
 
@@ -667,6 +675,13 @@ def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False,
         rows.append(("engine/serve/sustained/throughput_req_s",
                      "-", f"{c['throughput_req_s']:.2f}"))
         rows.append(("engine/serve/sustained/all_completed",
+                     "-", str(c["all_completed"])))
+        c = srv["pool"]
+        rows.append(("engine/serve/pool/pool_speedup",
+                     "-", f"{c['pool_speedup']:.2f}"))
+        rows.append(("engine/serve/pool/cores",
+                     "-", str(c["cores"])))
+        rows.append(("engine/serve/pool/all_completed",
                      "-", str(c["all_completed"])))
 
     if not skip_sharded:

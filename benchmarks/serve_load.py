@@ -9,7 +9,7 @@ each latency is measured from the request's *scheduled* arrival to its
 completion callback — so admission queueing, batching delay and worker
 backlog all land in the tail where they belong.
 
-Two frontends:
+Three frontends:
 
 * ``sustained_record(...)`` — the ``serve.sustained`` cell of
   ``BENCH_engine.json`` (called by ``benchmarks.engine_bench``):
@@ -17,6 +17,11 @@ Two frontends:
   capacity, reporting ``p50_s`` / ``p99_s`` and the gated tail
   amplification ``rel = p99/p50`` (a paired ratio, machine-normalized
   by construction) plus a hard ``all_completed`` flag.
+* ``pool_scaling_record(...)`` — the ``serve.pool`` cell: the same
+  two-tenant closed burst against a ``workers=2`` pool daemon vs a
+  ``workers=1`` daemon; ``pool_speedup = 1/rel`` is floor-gated at
+  1.2x only on multi-core hosts (``cores`` is recorded in the cell),
+  ``all_completed`` is hard everywhere (docs/serving.md#worker-pools).
 * the CLI — the same wave against a live remote daemon:
 
       PYTHONPATH=src python -m benchmarks.serve_load \
@@ -32,11 +37,13 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
 import sys
 import threading
 import time
 
-__all__ = ["run_open_loop", "summarize", "sustained_record", "main"]
+__all__ = ["run_open_loop", "summarize", "sustained_record",
+           "pool_scaling_record", "main"]
 
 
 def _percentile(sorted_vals, q: float) -> float:
@@ -169,6 +176,90 @@ def sustained_record(preds, y, costs, fast: bool,
                 "capacity_req_s": round(cap_hz, 2),
                 "utilization_target": 0.7})
     return rec
+
+
+def pool_scaling_record(preds, y, costs, fast: bool,
+                        algo: str = "fedboost") -> dict:
+    """The ``serve.pool`` BENCH cell: a ``workers=2`` pool daemon vs the
+    ``workers=1`` single-worker daemon on the same two-tenant closed
+    burst.
+
+    The burst alternates between two stream names whose rendezvous
+    homes differ, so with two workers each tenant's bucket runs in its
+    own subprocess while the single worker serves them serially —
+    ``rel = t_workers2 / t_workers1`` is the paired scaling ratio and
+    ``pool_speedup = 1/rel`` the headline.  The cell records
+    ``cores``: on a 1-core host the two workers timeshare one CPU and
+    no speedup is physically available, so the regression gate applies
+    its absolute floor only when ``cores >= 2`` (report-only below).
+    ``all_completed`` is hard everywhere: every request of every burst
+    must resolve without a typed error.
+    """
+    import statistics as stats
+
+    from repro.serve import SimClient
+    from repro.serve import router
+    from repro.serve.daemon import ServeDaemon
+
+    T = 300 if fast else 2000
+    n_req = 16 if fast else 32
+    names = (f"tenant{i}" for i in range(100))
+    name0 = next(n for n in names if router.affine_worker(n, 1, [0, 1]) == 0)
+    name1 = next(n for n in names if router.affine_worker(n, 1, [0, 1]) == 1)
+    specs = [dict(algo=algo, seed=s, T=T,
+                  stream=(name0 if s % 2 == 0 else name1))
+             for s in range(n_req)]
+
+    def burst(client) -> int:
+        futs = [client.submit(**s) for s in specs]
+        errors = 0
+        for f in futs:
+            try:
+                f.result(timeout=3600.0)
+            except Exception:               # noqa: BLE001 - typed tally
+                errors += 1
+        return errors
+
+    daemons, clients, errors = {}, {}, {1: 0, 2: 0}
+    t: dict = {1: [], 2: []}
+    try:
+        for n in (1, 2):
+            d = ServeDaemon(workers=n, max_pending=2 * n_req,
+                            worker_args={"max_batch": n_req // 2,
+                                         "max_wait_ms": 1.0})
+            d.start()
+            c = SimClient.connect(d.addr)
+            c.server.register_stream(name0, preds, y, costs)
+            c.server.register_stream(name1, preds, y, costs)
+            daemons[n], clients[n] = d, c
+            burst(c)                        # warm the bucket executables
+        for _ in range(3):
+            for n in (1, 2):                # interleaved reps
+                t0 = time.monotonic()
+                errors[n] += burst(clients[n])
+                t[n].append(time.monotonic() - t0)
+    finally:
+        for c in clients.values():
+            c.close()
+        for d in daemons.values():
+            d.drain_and_stop()
+    # the gated statistic is the median of PAIRED per-rep ratios; the
+    # reported timing pair comes from the rep closest to that median
+    ratios = [b / a for a, b in zip(t[1], t[2])]
+    rel = stats.median(ratios)
+    i_rep = min(range(len(ratios)), key=lambda i: abs(ratios[i] - rel))
+    return {
+        "algo": algo, "T": T, "n_requests": n_req,
+        "streams": [name0, name1],
+        "cores": os.cpu_count(),
+        "t_workers1_s": round(t[1][i_rep], 4),
+        "t_workers2_s": round(t[2][i_rep], 4),
+        "rel": round(rel, 4),
+        "pool_speedup": round(1.0 / rel, 2) if rel > 0 else None,
+        "req_per_s_workers1": round(n_req / t[1][i_rep], 2),
+        "req_per_s_workers2": round(n_req / t[2][i_rep], 2),
+        "all_completed": errors[1] + errors[2] == 0,
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -37,11 +37,13 @@ _EPILOG = """\
 subcommand details:
 
   start            spawn a detached daemon (pidfile + ready handshake);
-                   prints {"pid", "host", "port"} on success
+                   prints {"pid", "host", "port", "workers"} on success;
+                   --workers N runs a pool with stream-affine routing
   stop             graceful drain via RPC (SIGTERM fallback); waits for
                    the pidfile to disappear
   status           the daemon's status() document: queue depth,
-                   in-flight count, stream versions, worker liveness
+                   in-flight count, stream versions, and a per-worker
+                   liveness/backlog entry for every pool slot
   register-stream  upload a tenant stream from an .npz (preds, y,
                    costs); idempotent per content, version-bumping per
                    call
@@ -83,16 +85,51 @@ def _alive(pid: int) -> bool:
 # subcommands
 # ---------------------------------------------------------------------------
 
+def claim_pidfile(path: str) -> None:
+    """Atomically claim ``path`` for a starting daemon.
+
+    ``O_CREAT | O_EXCL`` makes the claim a single syscall: of two
+    concurrent ``start`` invocations exactly one wins; the loser sees
+    ``FileExistsError`` and exits "already running".  The old
+    check-then-write sequence had a TOCTOU window in which both racers
+    passed the ``exists()`` check and both spawned a daemon.  A pidfile
+    that exists but names a dead pid (hard kill) is unlinked first —
+    the subsequent ``O_EXCL`` create still arbitrates the racers.  The
+    placeholder contents mark the claim; the daemon overwrites them
+    with the real {pid, host, port} once ready.
+    """
+    while True:
+        try:
+            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o644)
+            break
+        except FileExistsError:
+            try:
+                with open(path) as fh:
+                    info = json.load(fh)
+            except FileNotFoundError:
+                continue                # a racer just cleaned it up
+            except json.JSONDecodeError:
+                info = {}               # mid-write claim: treat as taken
+            pid = info.get("pid", -1)
+            if pid == -1 or _alive(pid):
+                where = (f", {info['host']}:{info['port']}"
+                         if "host" in info else " (starting)")
+                raise SystemExit(
+                    f"daemon already running (pid {pid}{where})")
+            try:                        # stale pidfile from a hard kill
+                os.unlink(path)
+            except FileNotFoundError:
+                pass                    # another racer beat us to it
+    with os.fdopen(fd, "w") as fh:
+        json.dump({"pid": -1, "claimed_by": os.getpid()}, fh)
+
+
 def cmd_start(args) -> int:
-    if os.path.exists(args.pidfile):
-        info = _read_pidfile(args.pidfile)
-        if _alive(info.get("pid", -1)):
-            raise SystemExit(f"daemon already running (pid {info['pid']}, "
-                             f"{info['host']}:{info['port']})")
-        os.unlink(args.pidfile)         # stale pidfile from a hard kill
+    claim_pidfile(args.pidfile)
     cmd = [sys.executable, "-m", "repro.serve.daemon",
            "--host", args.host, "--port", str(args.port),
            "--pidfile", args.pidfile,
+           "--workers", str(args.workers),
            "--max-pending", str(args.max_pending),
            "--retry-limit", str(args.retry_limit),
            "--heartbeat-s", str(args.heartbeat_s),
@@ -114,6 +151,10 @@ def cmd_start(args) -> int:
             break
     if info is None:
         proc.kill()
+        try:                            # release the claim for the next try
+            os.unlink(args.pidfile)
+        except FileNotFoundError:
+            pass
         raise SystemExit("daemon failed to become ready "
                          f"(see {args.log or 'its stderr'})")
     proc.stdout.close()                 # detach: the daemon outlives us
@@ -196,6 +237,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--host", default="127.0.0.1")
     p.add_argument("--port", type=int, default=0,
                    help="0 = ephemeral (read the printed address)")
+    p.add_argument("--workers", type=int, default=1,
+                   help="worker subprocesses in the pool; requests route "
+                        "by stream affinity (docs/serving.md#worker-pools)")
     p.add_argument("--max-pending", type=int, default=256,
                    help="admission bound: queued + in-flight requests "
                         "beyond this are rejected Overloaded")

@@ -1,32 +1,49 @@
 """The serving management daemon: the front door of the remote tier.
 
-``ServeDaemon`` owns the client-facing RPC endpoint and supervises one
-``repro.serve.worker`` subprocess (the only process that imports jax —
-the daemon itself is stdlib + numpy, so its control loops never stall
-behind a compile).  Responsibilities, each pinned by
-``tests/test_transport_faults.py`` / ``tests/test_served_daemon.py``:
+``ServeDaemon`` owns the client-facing RPC endpoint and supervises a
+**pool** of ``repro.serve.worker`` subprocesses (the only processes that
+import jax — the daemon itself is stdlib + numpy, so its control loops
+never stall behind a compile).  Responsibilities, each pinned by
+``tests/test_transport_faults.py`` / ``tests/test_served_daemon.py`` /
+``tests/test_router_props.py``:
 
 * **admission control** — a bounded ``RequestQueue``; when
-  ``queued + in-flight`` reaches ``max_pending`` (or the daemon is
-  draining), submits are rejected with a typed ``Overloaded`` the
-  client can retry after backoff.
+  ``queued + backlogged + in-flight`` reaches ``max_pending`` (or the
+  daemon is draining), submits are rejected with a typed ``Overloaded``
+  the client can retry after backoff.
 * **deadline-aware drop** — each admitted request carries an absolute
   deadline (from the request's remaining-budget ``deadline_ms``); the
   pump fails expired requests with ``DeadlineExceeded`` *before*
   forwarding, so a backed-up queue sheds load instead of computing
   results nobody is waiting for.
-* **worker liveness** — a heartbeat thread pings the worker; on misses
-  (or connection loss) the worker is declared dead, killed, and
-  respawned, and every cached stream is re-registered (the worker's
-  process-local executable cache starts cold, versions bumped).
+* **stream-affinity routing** — the pump assigns each request to the
+  rendezvous-hash winner for its ``(stream, version)``
+  (``repro.serve.router``), so one worker's process-local executable
+  cache serves all of a stream's traffic; when the affine worker's
+  depth reaches ``spill_depth`` the request **spills** to the
+  least-loaded alive worker instead, which learns the stream lazily.
+  Routing never changes bits: any worker's result is bit-equal to any
+  other's and to in-process serving (docs/determinism.md row 21).
+* **preemption** — priority now acts past the queue: a higher-priority
+  arrival routed to a worker whose dispatch window is full may bump the
+  lowest-priority request still *backlogged* on that worker back into
+  the main queue (``RequestQueue.restore`` — never burning an attempt,
+  and never touching a request already dispatched, which preserves
+  exactly-once settlement).
+* **per-worker liveness** — a heartbeat thread pings every worker; on
+  misses (or connection loss) that worker is declared dead, killed, and
+  respawned with its *affine slice* of the stream registry replayed
+  (the fresh process-local cache starts cold, versions bumped); the
+  rest of the pool keeps serving untouched.
 * **requeue-or-fail, exactly once** — in-flight requests whose worker
   died are ``RequestQueue.restore``d for one more attempt (idempotent
   submits: re-running a simulation is bit-identical), then failed with
   ``WorkerDied``.  A future settles exactly once: ``restore`` drops
   already-settled futures, and settling is first-wins.
 * **graceful drain** — ``drain_and_stop`` rejects new submits, serves
-  everything admitted, shuts the worker down, and only then stops the
-  front endpoint; ``repro.launch.served`` wires this to SIGTERM.
+  everything admitted (surviving workers absorb a dead co-worker's
+  backlog), shuts every worker down, and only then stops the front
+  endpoint; ``repro.launch.served`` wires this to SIGTERM.
 
 Run it in the foreground with ``python -m repro.serve.daemon``;
 ``repro.launch.served start`` is the detached launcher (pidfile,
@@ -44,6 +61,7 @@ import threading
 import time
 from typing import Optional
 
+from . import router
 from .queue import RequestQueue, SimFuture, SimRequest
 from .transport import (ConnectionLost, DeadlineExceeded, Overloaded,
                         RpcClient, RpcServer, TransportError, WorkerDied)
@@ -54,13 +72,20 @@ READY_PREFIX = "DAEMON-READY "
 
 
 class WorkerHandle:
-    """One spawned worker: subprocess + RPC client + spawn epoch."""
+    """One spawned worker: subprocess + RPC client + spawn epoch.
+
+    ``worker_id`` is the stable pool slot (assigned by the daemon, not
+    the factory) and ``streams`` maps stream name -> the daemon version
+    last pushed to THIS worker — the pump's lazy-registration check.
+    """
 
     def __init__(self, proc: Optional[subprocess.Popen], client: RpcClient,
                  epoch: int):
         self.proc = proc
         self.client = client
         self.epoch = epoch
+        self.worker_id = 0
+        self.streams: dict = {}
 
     @property
     def pid(self) -> Optional[int]:
@@ -91,7 +116,8 @@ def _spawn_worker_subprocess(worker_args: dict, epoch: int) -> WorkerHandle:
     purpose — the worker imports jax)."""
     cmd = [sys.executable, "-m", "repro.serve.worker", "--port", "0",
            "--max-batch", str(worker_args.get("max_batch", 16)),
-           "--max-wait-ms", str(worker_args.get("max_wait_ms", 2.0))]
+           "--max-wait-ms", str(worker_args.get("max_wait_ms", 2.0)),
+           "--worker-id", str(worker_args.get("worker_id", 0))]
     proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, stderr=None,
                             env=dict(os.environ), text=True)
     from .worker import READY_PREFIX as WORKER_READY
@@ -114,12 +140,16 @@ def _spawn_worker_subprocess(worker_args: dict, epoch: int) -> WorkerHandle:
 
 class ServeDaemon:
     """See module docstring.  ``worker_factory(worker_args, epoch)`` is
-    injectable so the fault tests can stand up stub peers."""
+    injectable so the fault tests can stand up stub peers; the daemon
+    passes ``worker_args["worker_id"]`` and epochs count per pool slot
+    (first spawn of every slot is epoch 1)."""
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
                  max_pending: int = 256, retry_limit: int = 1,
                  heartbeat_s: float = 1.0, heartbeat_misses: int = 3,
                  poll_s: float = 0.02, linger_s: float = 0.002,
+                 workers: int = 1, worker_window: int = 32,
+                 spill_depth: int = 32,
                  worker_factory=None, worker_args: Optional[dict] = None):
         self._host, self._port = host, port
         self.max_pending = int(max_pending)
@@ -127,22 +157,29 @@ class ServeDaemon:
         self.heartbeat_s = float(heartbeat_s)
         self.heartbeat_misses = int(heartbeat_misses)
         self._poll_s, self._linger_s = float(poll_s), float(linger_s)
+        self.workers = max(1, int(workers))
+        self.worker_window = max(1, int(worker_window))
+        self.spill_depth = max(1, int(spill_depth))
         self._worker_factory = worker_factory or _spawn_worker_subprocess
         self._worker_args = dict(worker_args or {})
         self._queue = RequestQueue()
         self._lock = threading.Lock()
         self._streams: dict = {}        # name -> {preds,y,costs,version}
-        self._worker: Optional[WorkerHandle] = None
-        self._epoch = 0
-        self._misses = 0
+        ids = range(self.workers)
+        self._pool: dict = {wid: None for wid in ids}   # wid -> handle|None
+        self._epochs = {wid: 0 for wid in ids}
+        self._wmisses = {wid: 0 for wid in ids}
+        self._wrestarts = {wid: 0 for wid in ids}
+        self._backlog: dict = {wid: [] for wid in ids}  # routed, undispatched
+        self._winflight: dict = {wid: {} for wid in ids}  # id(fut)->(req,fut)
         self._restarts = 0
-        self._inflight: dict = {}       # id(fut) -> (req, fut)
         self._draining = False
         self._stopped = threading.Event()
         self._rpc: Optional[RpcServer] = None
         self._threads: list = []
         self.counters = {"admitted": 0, "rejected": 0, "expired": 0,
-                         "retried": 0, "worker_failed": 0, "completed": 0}
+                         "retried": 0, "worker_failed": 0, "completed": 0,
+                         "spilled": 0, "preempted": 0}
 
     # -- lifecycle --------------------------------------------------------
 
@@ -151,7 +188,8 @@ class ServeDaemon:
         return self._rpc.addr
 
     def start(self) -> "ServeDaemon":
-        self._spawn_worker()
+        for wid in range(self.workers):
+            self._spawn_worker(wid)
         self._rpc = RpcServer({
             "ping": lambda p, c: {"pong": True},
             "submit": self._h_submit,
@@ -177,8 +215,9 @@ class ServeDaemon:
 
     def _pending_count(self) -> int:
         with self._lock:
-            inflight = len(self._inflight)
-        return len(self._queue) + inflight
+            pending = (sum(len(m) for m in self._winflight.values())
+                       + sum(len(b) for b in self._backlog.values()))
+        return len(self._queue) + pending
 
     def _reject(self, why: str):
         with self._lock:
@@ -228,27 +267,39 @@ class ServeDaemon:
                                    "y": params["y"],
                                    "costs": params["costs"],
                                    "version": version}
-            worker = self._worker
-        if worker is None:
+            alive = [wid for wid, h in self._pool.items()
+                     if h is not None and h.alive]
+            handle = (self._pool[router.affine_worker(name, version, alive)]
+                      if alive else None)
+        if handle is None:
             raise WorkerDied("no live worker to register the stream with")
-        reply = worker.client.call("register_stream", params,
+        # eager push to the (new version's) affine worker; everyone else
+        # learns the stream lazily when traffic spills onto them
+        reply = handle.client.call("register_stream", params,
                                    deadline_s=60.0)
+        with self._lock:
+            handle.streams[name] = version
         return {"name": name, "daemon_version": version,
                 "worker_version": reply["version"], "K": reply["K"],
-                "n_stream": reply["n_stream"]}
+                "n_stream": reply["n_stream"],
+                "worker": handle.worker_id}
 
     def _h_list_streams(self, params, ctx):
         with self._lock:
-            worker = self._worker
+            handles = [h for _, h in sorted(self._pool.items())
+                       if h is not None and h.alive]
             cached = {n: {"version": s["version"]}
                       for n, s in sorted(self._streams.items())}
-        if worker is not None and worker.alive:
+        merged: dict = {}
+        for handle in handles:
             try:
-                return worker.client.call("list_streams", {},
-                                          deadline_s=10.0)
+                reply = handle.client.call("list_streams", {},
+                                           deadline_s=10.0)
             except TransportError:
-                pass
-        return cached
+                continue
+            for sname, meta in reply.items():
+                merged.setdefault(sname, meta)
+        return merged if merged else cached
 
     def _h_stop(self, params, ctx):
         threading.Thread(target=self.drain_and_stop,
@@ -257,37 +308,53 @@ class ServeDaemon:
 
     # -- worker supervision -----------------------------------------------
 
-    def _spawn_worker(self) -> None:
+    def _spawn_worker(self, wid: int) -> None:
         with self._lock:
-            self._epoch += 1
-            epoch = self._epoch
-        handle = self._worker_factory(self._worker_args, epoch)
-        # replay the stream registry: the fresh worker's process-local
-        # cache starts cold and must see current data (version bump)
+            self._epochs[wid] += 1
+            epoch = self._epochs[wid]
+        handle = self._worker_factory(
+            dict(self._worker_args, worker_id=wid), epoch)
+        handle.worker_id = wid
+        # replay THIS worker's affine slice of the stream registry (over
+        # the full configured pool, so the scope is stable no matter who
+        # else is momentarily down): the fresh worker's process-local
+        # cache starts cold and must see current data (version bump).
+        # Streams it only ever sees as a spill target arrive lazily.
         with self._lock:
             streams = dict(self._streams)
-        for name, s in streams.items():
+        all_ids = range(self.workers)
+        for name, s in sorted(streams.items()):
+            if router.affine_worker(name, s["version"], all_ids) != wid:
+                continue
             handle.client.call("register_stream",
                                {"name": name, "preds": s["preds"],
                                 "y": s["y"], "costs": s["costs"]},
                                deadline_s=60.0)
+            handle.streams[name] = s["version"]
         with self._lock:
-            self._worker = handle
-            self._misses = 0
+            self._pool[wid] = handle
+            self._wmisses[wid] = 0
 
-    def _declare_worker_dead(self, worker: WorkerHandle, why: str) -> None:
+    def _declare_worker_dead(self, wid: int, handle: WorkerHandle,
+                             why: str) -> None:
         with self._lock:
-            if self._worker is not worker:
+            if self._pool.get(wid) is not handle:
                 return                  # already superseded
-            self._worker = None
+            self._pool[wid] = None
             self._restarts += 1
+            self._wrestarts[wid] += 1
+            backlog, self._backlog[wid] = self._backlog[wid], []
         # closing the client fails its pending RPCs with ConnectionLost,
-        # which runs every in-flight request's requeue-or-fail callback
-        worker.kill()
+        # which runs every in-flight request's requeue-or-fail callback;
+        # backlogged (never-dispatched) requests go straight back to the
+        # main queue without burning an attempt
+        handle.kill()
+        if backlog:
+            self._queue.restore(backlog)
         if self._draining or self._stopped.is_set():
             return
         try:
-            self._spawn_worker()
+            self._spawn_worker(wid)
         except Exception:               # noqa: BLE001
             pass                        # heartbeat loop keeps retrying
 
@@ -295,65 +362,140 @@ class ServeDaemon:
         while not self._stopped.wait(self.heartbeat_s):
             if self._draining:
                 return
-            with self._lock:
-                worker = self._worker
-            if worker is None:
+            for wid in range(self.workers):
+                with self._lock:
+                    handle = self._pool.get(wid)
+                if handle is None:
+                    try:
+                        self._spawn_worker(wid)
+                    except Exception:   # noqa: BLE001
+                        pass
+                    continue
                 try:
-                    self._spawn_worker()
-                except Exception:       # noqa: BLE001
-                    pass
-                continue
-            try:
-                worker.client.call("ping", {},
-                                   deadline_s=max(self.heartbeat_s, 0.2))
-                with self._lock:
-                    self._misses = 0
-            except (TransportError, TimeoutError):
-                with self._lock:
-                    self._misses += 1
-                    misses = self._misses
-                if misses >= self.heartbeat_misses or not worker.alive:
-                    self._declare_worker_dead(
-                        worker, f"{misses} missed heartbeats")
+                    handle.client.call("ping", {},
+                                       deadline_s=max(self.heartbeat_s, 0.2))
+                    with self._lock:
+                        self._wmisses[wid] = 0
+                except (TransportError, TimeoutError):
+                    with self._lock:
+                        self._wmisses[wid] += 1
+                        misses = self._wmisses[wid]
+                    if misses >= self.heartbeat_misses or not handle.alive:
+                        self._declare_worker_dead(
+                            wid, handle, f"{misses} missed heartbeats")
 
-    # -- the pump: queue -> worker ----------------------------------------
+    # -- the pump: queue -> router -> worker backlogs ----------------------
 
     def _pump_loop(self) -> None:
         while True:
             batch = self._queue.drain(max_n=64, wait_s=self._poll_s,
                                       linger_s=self._linger_s)
-            if not batch:
-                if self._stopped.is_set() or (self._queue.closed
-                                              and not len(self._queue)):
-                    if self._draining:
-                        return
+            if batch:
+                self._route_batch(batch)
+            self._flush_backlogs()
+            if batch:
                 continue
-            now = time.monotonic()
+            if self._stopped.is_set():
+                return
+            if (self._draining and self._queue.closed
+                    and not self._pending_count()):
+                # in-flight work counts: a worker dying mid-drain restores
+                # its claims to the (closed) queue, and this loop must
+                # still be here to re-route them to a survivor
+                return
+
+    def _route_batch(self, batch: list) -> None:
+        now = time.monotonic()
+        for i, (req, fut) in enumerate(batch):
+            if fut.done():
+                continue
+            if req.deadline is not None and now >= req.deadline:
+                with self._lock:
+                    self.counters["expired"] += 1
+                self._settle_exc(fut, DeadlineExceeded(
+                    "expired in the admission queue"))
+                continue
+            if not self._assign(req, fut):
+                # no live worker at all: put the whole remaining claim
+                # back and let the heartbeat loop respawn — restore works
+                # even on a closed (draining) queue
+                self._queue.restore(batch[i:])
+                time.sleep(self._poll_s)
+                return
+
+    def _assign(self, req: SimRequest, fut: SimFuture) -> bool:
+        """Route one admitted request onto a worker backlog; returns
+        False when no worker is alive (caller restores the claim)."""
+        victim = None
+        with self._lock:
+            alive = [wid for wid, h in self._pool.items()
+                     if h is not None and h.alive]
+            if not alive:
+                return False
+            version = self._streams.get(req.stream, {}).get("version", 0)
+            depths = {wid: len(self._winflight[wid]) + len(self._backlog[wid])
+                      for wid in alive}
+            wid = router.route(req.stream, version, alive, depths,
+                               self.spill_depth)
+            if wid != router.affine_worker(req.stream, version, alive):
+                self.counters["spilled"] += 1
+            bl = self._backlog[wid]
+            # priority insertion: higher class first, FIFO within a class
+            idx = len(bl)
+            while idx > 0 and bl[idx - 1][0].priority < req.priority:
+                idx -= 1
+            bl.insert(idx, (req, fut))
+            # preemption: the window is full AND something strictly less
+            # urgent is still waiting behind it — bump the tail back to
+            # the main queue (it was never dispatched: no attempt burned,
+            # and on re-route the saturated depth makes it spill)
+            if (len(self._winflight[wid]) >= self.worker_window
+                    and bl[-1][0].priority < req.priority):
+                victim = bl.pop()
+                self.counters["preempted"] += 1
+        if victim is not None:
+            self._queue.restore([victim])
+        return True
+
+    def _backlog_depth(self) -> int:
+        with self._lock:
+            return sum(len(b) for b in self._backlog.values())
+
+    def _flush_backlogs(self) -> None:
+        for wid in range(self.workers):
+            self._flush_worker(wid)
+
+    def _flush_worker(self, wid: int) -> None:
+        while True:
             with self._lock:
-                worker = self._worker
-            for i, (req, fut) in enumerate(batch):
-                if fut.done():
-                    continue
-                if req.deadline is not None and now >= req.deadline:
-                    with self._lock:
-                        self.counters["expired"] += 1
-                    self._settle_exc(fut, DeadlineExceeded(
-                        "expired in the admission queue"))
-                    continue
-                if worker is None or not worker.alive:
-                    # no peer: put the whole remaining claim back and let
-                    # the heartbeat loop respawn — restore works even on
-                    # a closed (draining) queue
-                    self._queue.restore(batch[i:])
-                    time.sleep(self._poll_s)
-                    break
-                self._forward(req, fut, worker)
+                if not self._backlog[wid]:
+                    return
+                handle = self._pool.get(wid)
+                if handle is None or not handle.alive:
+                    orphaned, self._backlog[wid] = self._backlog[wid], []
+                elif len(self._winflight[wid]) >= self.worker_window:
+                    return
+                else:
+                    orphaned = None
+                    req, fut = self._backlog[wid].pop(0)
+            if orphaned is not None:
+                # target died after routing but before dispatch: back to
+                # the main queue without burning an attempt
+                self._queue.restore(orphaned)
+                return
+            self._forward(req, fut, handle, wid)
 
     def _forward(self, req: SimRequest, fut: SimFuture,
-                 worker: WorkerHandle) -> None:
-        if not worker.client.alive:
-            # the worker died between the batch's liveness check and this
-            # forward: put the request back without burning an attempt
+                 handle: WorkerHandle, wid: int) -> None:
+        if not handle.client.alive:
+            # the worker died between the backlog's liveness check and
+            # this forward: put the request back without burning an
+            # attempt
+            self._queue.restore([(req, fut)])
+            return
+        try:
+            self._ensure_stream(handle, req.stream)
+        except (TransportError, TimeoutError):
             self._queue.restore([(req, fut)])
             return
         spec = {"algo": req.algo, "seed": req.seed, "T": req.T,
@@ -363,23 +505,43 @@ class ServeDaemon:
         remaining = (None if req.deadline is None
                      else max(req.deadline - time.monotonic(), 1e-3))
         with self._lock:
-            self._inflight[id(fut)] = (req, fut)
-        rfut = worker.client.call_async("submit", spec,
+            self._winflight[wid][id(fut)] = (req, fut)
+        rfut = handle.client.call_async("submit", spec,
                                         deadline_s=remaining)
         rfut.add_done_callback(
-            lambda done: self._on_worker_reply(req, fut, done))
+            lambda done: self._on_worker_reply(req, fut, done, wid))
+
+    def _ensure_stream(self, handle: WorkerHandle, name: str) -> None:
+        """Lazy registration: a spill target (or a worker that respawned
+        while a stream re-homed) only learns a stream when traffic for
+        it actually lands there."""
+        with self._lock:
+            s = self._streams.get(name)
+            version = s["version"] if s else None
+            known = handle.streams.get(name)
+        if s is None or known == version:
+            return
+        handle.client.call("register_stream",
+                           {"name": name, "preds": s["preds"],
+                            "y": s["y"], "costs": s["costs"]},
+                           deadline_s=60.0)
+        with self._lock:
+            handle.streams[name] = version
 
     def _on_worker_reply(self, req: SimRequest, fut: SimFuture,
-                         rfut) -> None:
+                         rfut, wid: int) -> None:
         with self._lock:
-            self._inflight.pop(id(fut), None)
+            self._winflight[wid].pop(id(fut), None)
         exc = rfut.exception(timeout=0)
         if exc is None:
             value = rfut.result(timeout=0)
             with self._lock:
                 self.counters["completed"] += 1
             # pass-through: the worker's wire tree goes back out to the
-            # client verbatim (bit-exact both hops)
+            # client verbatim (bit-exact both hops); only the execution
+            # METADATA is annotated with who served it
+            if isinstance(value, dict):
+                value.setdefault("execution", {})["worker"] = wid
             self._settle_result(fut, value)
             return
         if isinstance(exc, (ConnectionLost, WorkerDied, TimeoutError)):
@@ -417,18 +579,33 @@ class ServeDaemon:
 
     def status(self) -> dict:
         with self._lock:
-            worker = self._worker
-            inflight = len(self._inflight)
+            workers = []
+            for wid in range(self.workers):
+                h = self._pool.get(wid)
+                workers.append({
+                    "id": wid,
+                    "alive": h is not None and h.alive,
+                    "pid": h.pid if h else None,
+                    "epoch": h.epoch if h else None,
+                    "restarts": self._wrestarts[wid],
+                    "inflight": len(self._winflight[wid]),
+                    "backlog": len(self._backlog[wid]),
+                    "streams": sorted(h.streams) if h else [],
+                })
+            inflight = sum(len(m) for m in self._winflight.values())
+            backlog = sum(len(b) for b in self._backlog.values())
             streams = {n: s["version"] for n, s in self._streams.items()}
             counters = dict(self.counters)
             restarts = self._restarts
+        # "worker" stays the single-worker view (slot 0 + pool-wide
+        # restarts) so pre-pool tooling and tests keep reading it
+        w0 = workers[0]
         out = {"pid": os.getpid(), "draining": self._draining,
                "queued": len(self._queue), "inflight": inflight,
-               "streams": streams, "counters": counters,
-               "worker": {"alive": worker is not None and worker.alive,
-                          "pid": worker.pid if worker else None,
-                          "epoch": worker.epoch if worker else None,
-                          "restarts": restarts}}
+               "backlog": backlog, "streams": streams,
+               "counters": counters, "workers": workers,
+               "worker": {"alive": w0["alive"], "pid": w0["pid"],
+                          "epoch": w0["epoch"], "restarts": restarts}}
         if self._rpc is not None:
             host, port = self._rpc.addr
             out["addr"] = f"{host}:{port}"
@@ -439,8 +616,8 @@ class ServeDaemon:
             return self.counters["rejected"]
 
     def drain_and_stop(self, timeout: float = 60.0) -> None:
-        """Graceful shutdown: reject new, serve admitted, stop worker,
-        close the front endpoint."""
+        """Graceful shutdown: reject new, serve admitted, stop every
+        worker, close the front endpoint."""
         if self._draining:
             self._stopped.wait(timeout)
             return
@@ -448,23 +625,34 @@ class ServeDaemon:
         self._queue.close()
         deadline = time.monotonic() + timeout
         while time.monotonic() < deadline:
-            if not len(self._queue) and not self._pending_count():
+            if not self._pending_count():
                 break
             time.sleep(self._poll_s)
         with self._lock:
-            worker, self._worker = self._worker, None
-            inflight = list(self._inflight.values())
-            self._inflight.clear()
-        for req, fut in inflight:       # drain timed out: fail typed
+            pool = {wid: h for wid, h in self._pool.items()
+                    if h is not None}
+            for wid in self._pool:
+                self._pool[wid] = None
+            leftovers = []
+            for m in self._winflight.values():
+                leftovers.extend(m.values())
+                m.clear()
+            for b in self._backlog.values():
+                leftovers.extend(b)
+                b[:] = []
+        # drain timed out: nothing may hang — fail the stragglers typed,
+        # including anything still sitting in the (closed) front queue
+        leftovers.extend(self._queue.drain(max_n=1 << 30, wait_s=0.0))
+        for req, fut in leftovers:
             self._settle_exc(fut, WorkerDied("daemon stopped mid-flight"))
-        if worker is not None:
+        for wid, handle in sorted(pool.items()):
             try:
-                worker.client.call("shutdown", {}, deadline_s=5.0)
-                if worker.proc is not None:
-                    worker.proc.wait(timeout=15.0)
+                handle.client.call("shutdown", {}, deadline_s=5.0)
+                if handle.proc is not None:
+                    handle.proc.wait(timeout=15.0)
             except Exception:           # noqa: BLE001
                 pass
-            worker.kill()
+            handle.kill()
         self._stopped.set()
         if self._rpc is not None:
             self._rpc.stop()
@@ -477,9 +665,17 @@ def main(argv=None) -> int:
                     "'python -m repro.launch.served start' to detach)")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="worker subprocesses in the pool (stream-affine "
+                         "routing across them)")
     ap.add_argument("--max-pending", type=int, default=256)
     ap.add_argument("--retry-limit", type=int, default=1)
     ap.add_argument("--heartbeat-s", type=float, default=1.0)
+    ap.add_argument("--worker-window", type=int, default=32,
+                    help="max dispatched-but-unreplied requests per worker")
+    ap.add_argument("--spill-depth", type=int, default=32,
+                    help="affine-worker depth at which requests spill to "
+                         "the least-loaded worker")
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--pidfile", default=None,
@@ -490,11 +686,14 @@ def main(argv=None) -> int:
     daemon = ServeDaemon(
         host=args.host, port=args.port, max_pending=args.max_pending,
         retry_limit=args.retry_limit, heartbeat_s=args.heartbeat_s,
+        workers=args.workers, worker_window=args.worker_window,
+        spill_depth=args.spill_depth,
         worker_args={"max_batch": args.max_batch,
                      "max_wait_ms": args.max_wait_ms})
     daemon.start()
     host, port = daemon.addr
-    info = {"pid": os.getpid(), "host": host, "port": port}
+    info = {"pid": os.getpid(), "host": host, "port": port,
+            "workers": daemon.workers}
     if args.pidfile:
         with open(args.pidfile, "w") as fh:
             json.dump(info, fh)

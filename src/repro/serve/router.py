@@ -1,0 +1,74 @@
+"""Stream-affinity routing for the daemon's worker pool.
+
+Pure stdlib, pure functions — the daemon calls these under its own lock
+and the property tests (``tests/test_router_props.py``) exercise them
+directly, with no pool or sockets in sight.
+
+The routing discipline is rendezvous hashing (highest-random-weight):
+every ``(stream, version, worker_id)`` triple gets a stable 64-bit
+weight from blake2b, and a stream's **affine worker** is the alive
+worker with the highest weight.  HRW gives exactly the properties the
+pool needs:
+
+* **determinism across processes** — the weight is a digest of the key
+  bytes, never Python's seeded ``hash()``, so the daemon, a respawned
+  daemon, and a test all agree on the placement.
+* **cache warmth** — all requests for one ``(stream, version)`` land on
+  ONE worker, so that worker's process-local executable cache compiles
+  each program once for the whole pool.
+* **minimal disruption** — removing a worker only remaps the streams
+  that were affine to IT (each surviving stream keeps its argmax);
+  adding it back restores the original placement.  Re-registering a
+  stream bumps ``version``, which reshuffles that stream's weights —
+  deliberate rebalancing on data change.
+
+``spill_worker`` is the overload escape hatch: when the affine worker is
+saturated the daemon routes to the least-loaded alive worker instead
+(lowest depth, ties to the lowest id).  Spill trades cache warmth for
+latency under load; it never selects a dead worker because callers pass
+only alive ids.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, Sequence
+
+__all__ = ["hrw_weight", "affine_worker", "spill_worker", "route"]
+
+
+def hrw_weight(stream: str, version: int, worker_id: int) -> int:
+    """Stable 64-bit rendezvous weight for one (stream, version, worker)."""
+    key = f"{stream}\x00{int(version)}\x00{int(worker_id)}".encode()
+    return int.from_bytes(hashlib.blake2b(key, digest_size=8).digest(), "big")
+
+
+def affine_worker(stream: str, version: int,
+                  worker_ids: Sequence[int]) -> int:
+    """The highest-weight worker for ``(stream, version)`` among
+    ``worker_ids`` — a pure function of its arguments (ties, which need
+    a blake2b collision, break to the lowest id)."""
+    if not worker_ids:
+        raise ValueError("affine_worker needs at least one worker id")
+    return max(sorted(worker_ids),
+               key=lambda wid: (hrw_weight(stream, version, wid), -wid))
+
+
+def spill_worker(worker_ids: Sequence[int],
+                 depths: Dict[int, int]) -> int:
+    """Least-loaded worker (missing depth counts as 0); ties break to the
+    lowest id so the choice is deterministic."""
+    if not worker_ids:
+        raise ValueError("spill_worker needs at least one worker id")
+    return min(sorted(worker_ids), key=lambda wid: (depths.get(wid, 0), wid))
+
+
+def route(stream: str, version: int, worker_ids: Sequence[int],
+          depths: Dict[int, int], spill_depth: int) -> int:
+    """Routing decision for one request: the affine worker, unless its
+    depth (in-flight + backlogged) has reached ``spill_depth`` — then the
+    least-loaded alive worker.  ``worker_ids`` must be the ALIVE set."""
+    wid = affine_worker(stream, version, worker_ids)
+    if depths.get(wid, 0) >= max(int(spill_depth), 1):
+        return spill_worker(worker_ids, depths)
+    return wid

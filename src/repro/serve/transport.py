@@ -702,6 +702,13 @@ class RpcServer:
             conns = list(self._conns)
         if self._sock is not None:
             try:
+                # close() alone does not wake a thread parked in
+                # accept(); shutdown() does, so stop() returns in
+                # milliseconds instead of eating the join timeout
+                self._sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
                 self._sock.close()
             except OSError:
                 pass

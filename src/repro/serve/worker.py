@@ -37,10 +37,13 @@ READY_PREFIX = "WORKER-READY "
 
 
 class WorkerHandlers:
-    """RPC method table over one ``SimServer``."""
+    """RPC method table over one ``SimServer``.  ``worker_id`` is the
+    daemon's pool slot (0 for a standalone worker) — echoed in ``ping``
+    and ``stats`` so fleet tooling can tell the processes apart."""
 
-    def __init__(self, server):
+    def __init__(self, server, worker_id: int = 0):
         self.server = server
+        self.worker_id = int(worker_id)
         self.started_at = time.monotonic()
 
     def table(self) -> dict:
@@ -51,7 +54,8 @@ class WorkerHandlers:
     # -- methods ----------------------------------------------------------
 
     def ping(self, params, ctx):
-        return {"pong": True, "uptime_s": time.monotonic() - self.started_at}
+        return {"pong": True, "worker_id": self.worker_id,
+                "uptime_s": time.monotonic() - self.started_at}
 
     def register_stream(self, params, ctx):
         stream = self.server.register_stream(
@@ -93,7 +97,11 @@ class WorkerHandlers:
                 for name, s in sorted(streams.items())}
 
     def stats(self, params, ctx):
-        return self.server.stats()
+        s = self.server.stats()
+        s["worker_id"] = self.worker_id
+        # accepted but not yet settled — the pool router's load signal
+        s["depth"] = s["submitted"] - s["served"] - s["failed"]
+        return s
 
 
 def main(argv=None) -> int:
@@ -108,6 +116,8 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--poll-s", type=float, default=0.02)
+    ap.add_argument("--worker-id", type=int, default=0,
+                    help="pool slot assigned by the spawning daemon")
     args = ap.parse_args(argv)
 
     from .server import SimServer
@@ -115,7 +125,7 @@ def main(argv=None) -> int:
                        max_wait_ms=args.max_wait_ms, poll_s=args.poll_s)
     server.start()
 
-    handlers = WorkerHandlers(server)
+    handlers = WorkerHandlers(server, worker_id=args.worker_id)
     stop = threading.Event()
 
     def shutdown(params, ctx):
@@ -133,7 +143,8 @@ def main(argv=None) -> int:
 
     host, port = rpc.addr
     print(READY_PREFIX + json.dumps({"host": host, "port": port,
-                                     "pid": __import__("os").getpid()}),
+                                     "pid": __import__("os").getpid(),
+                                     "worker_id": args.worker_id}),
           flush=True)
     stop.wait()
     # graceful drain: no new requests (listener down), everything already

@@ -11,6 +11,14 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "ordered_soak: ordered lifecycle tests sharing one daemon via a "
+        "module fixture; must run in file order (CI's randomized "
+        "serve-stress step deselects them with -m 'not ordered_soak')")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -66,6 +66,13 @@ def _sustained_cell(rel=2.0, p50=0.3):
     }
 
 
+def _pool_cell(rel=0.6, t1=0.8, cores=2):
+    return {
+        "t_workers1_s": t1, "t_workers2_s": rel * t1, "rel": rel,
+        "cores": cores, "all_completed": True,
+    }
+
+
 def _record():
     """A healthy fresh/baseline record: every gate passes vs itself."""
     return {
@@ -73,7 +80,8 @@ def _record():
         "serve": {"eflfg": _serve_cell(0.80),     # speedup 1.25 > 1.1
                   "fedboost": _serve_cell(0.40),   # speedup 2.5  > 2.0
                   "mixed_scenario": _mixed_cell(0.50),   # 2.0 > 1.05
-                  "sustained": _sustained_cell()},
+                  "sustained": _sustained_cell(),
+                  "pool": _pool_cell(0.60)},       # speedup 1.67 > 1.2
         "sharded_sweep": {"eflfg": _sharded_cell(),
                           "fedboost": _sharded_cell(),
                           "mesh2d": _sharded_cell()},
@@ -216,6 +224,63 @@ def test_sustained_tail_amplification_gated():
     fresh["serve"]["sustained"] = _sustained_cell(rel=5.0, p50=0.01)
     failures, _ = check_serve(base, fresh, THRESHOLD)
     assert failures == []
+
+
+def test_pool_cell_missing_fails_hard():
+    """The worker-pool cell follows the same stale-baseline policy as
+    sustained: missing from the fresh run or from the baseline's serve
+    section is a hard failure, never a rideable warning."""
+    fresh = _record()
+    del fresh["serve"]["pool"]
+    failures, _ = check_serve(_record(), fresh, THRESHOLD)
+    assert any(kind == "hard" and "pool" in msg
+               and "missing from fresh" in msg for kind, msg in failures)
+    base = _record()
+    del base["serve"]["pool"]                    # stale baseline
+    failures, _ = check_serve(base, _record(), THRESHOLD)
+    assert any(kind == "hard" and "pool" in msg
+               and "missing from baseline" in msg
+               for kind, msg in failures)
+
+
+def test_pool_all_completed_is_hard_on_any_host():
+    fresh = _record()
+    fresh["serve"]["pool"] = _pool_cell(cores=1)  # even single-core
+    fresh["serve"]["pool"]["all_completed"] = False
+    failures, _ = check_serve(_record(), fresh, THRESHOLD)
+    assert any(kind == "hard" and "pool" in msg and "all_completed" in msg
+               for kind, msg in failures)
+    assert not retryable(failures)
+
+
+def test_pool_floor_gated_only_on_multicore():
+    """speedup < 1.2x is a timing failure on a >= 2-core host, but only
+    reported on one core — two workers timesharing a single CPU cannot
+    physically beat one worker."""
+    base, fresh = _record(), _record()
+    fresh["serve"]["pool"] = _pool_cell(rel=0.95, cores=2)  # 1.05 < 1.2
+    base["serve"]["pool"] = _pool_cell(rel=0.95, cores=2)   # same ratio
+    failures, _ = check_serve(base, fresh, THRESHOLD)
+    assert _kinds(failures) == ["timing"]
+    assert "pool" in failures[0][1] and retryable(failures)
+    # the identical measurement on a 1-core host is report-only
+    fresh["serve"]["pool"] = _pool_cell(rel=0.95, cores=1)
+    base["serve"]["pool"] = _pool_cell(rel=0.95, cores=1)
+    failures, _ = check_serve(base, fresh, THRESHOLD)
+    assert failures == []
+
+
+def test_pool_relative_gate_skipped_across_core_counts():
+    """A baseline measured on a different core count embeds different
+    physical parallelism: the relative drift gate must skip loudly, not
+    compare apples to oranges (the absolute floor still applies to the
+    fresh host's own cores)."""
+    base, fresh = _record(), _record()
+    base["serve"]["pool"] = _pool_cell(rel=0.50, cores=2)
+    fresh["serve"]["pool"] = _pool_cell(rel=0.99, cores=1)  # huge "drift"
+    failures, warnings = check_serve(base, fresh, THRESHOLD)
+    assert failures == []
+    assert any("pool" in w and "cores" in w for w in warnings)
 
 
 def test_serve_floor_not_gated_below_noise_floor():

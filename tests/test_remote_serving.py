@@ -138,6 +138,47 @@ def test_remote_exact_bit_equal_to_direct_scans(remote, stream_arrays):
             (spec, remote_res.identical_fields(direct))
 
 
+def test_pool_any_worker_bit_equal_to_single_worker(remote_batched,
+                                                    stream_arrays):
+    """The SAME wave through a ``--workers 2`` pool daemon, once per
+    pool slot: two stream names with different rendezvous homes carry
+    identical arrays, so each worker subprocess serves the full wave —
+    and every lane is bit-equal to the single-worker daemon's (which
+    rows 19-20 already pin to the in-process server and direct
+    ``run_batch``).  Routing NEVER changes bits: any worker ==
+    single worker == in-process (docs/determinism.md row 21)."""
+    from repro.serve import router
+
+    reference, _ = remote_batched
+    names = (f"mirror{i}" for i in range(100))
+    name0 = next(n for n in names if router.affine_worker(n, 1, [0, 1]) == 0)
+    name1 = next(n for n in names if router.affine_worker(n, 1, [0, 1]) == 1)
+    pool = ServeDaemon(workers=2, max_pending=64, retry_limit=1,
+                       worker_args={"max_batch": 16, "max_wait_ms": 2.0})
+    pool.start()
+    client = SimClient.connect(pool.addr)
+    try:
+        client.server.register_stream(name0, *stream_arrays)
+        client.server.register_stream(name1, *stream_arrays)
+        served_by = {}
+        for name in (name0, name1):
+            futs = [client.submit(**spec, stream=name) for spec in WAVE]
+            results = [f.result(timeout=600.0) for f in futs]
+            workers = {f.execution["worker"] for f in futs}
+            assert len(workers) == 1        # affinity kept the wave home
+            served_by[name] = workers.pop()
+            for i, (got, want) in enumerate(zip(results, reference)):
+                assert got.identical_to(want), \
+                    (name, i, got.identical_fields(want))
+        # the two waves really ran on two distinct worker subprocesses
+        assert served_by[name0] != served_by[name1]
+        st = pool.status()
+        assert st["counters"]["spilled"] == 0
+    finally:
+        client.close()
+        pool.drain_and_stop()
+
+
 def test_remote_result_surface_is_complete(remote_batched):
     """The wire carries the full SimResult surface: curves, selection
     masks, violation counts and a regret tracker whose curve is usable

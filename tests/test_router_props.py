@@ -1,0 +1,114 @@
+"""Property tests for the pool router (``repro.serve.router``).
+
+The routing contract the daemon builds on, stated as properties over
+arbitrary streams/versions/pools rather than hand-picked cases:
+
+* affinity is a **pure function** of ``(stream, version, pool)`` —
+  order- and call-independent, always a pool member;
+* HRW **minimal disruption** — removing one worker only remaps the
+  streams that were affine to IT; every other stream keeps its worker
+  (and adding the worker back restores the original placement);
+* **spill never selects a dead worker** — ``route`` only ever returns
+  a member of the alive set it was given, saturated or not, and below
+  the spill threshold it IS the affine worker.
+
+Hypothesis is a CI dependency (requirements-dev.txt), not a runtime
+one, so the whole module skips where it is absent; the deterministic
+router unit tests in ``tests/test_served_daemon.py`` keep baseline
+coverage everywhere.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.serve.router import (affine_worker, hrw_weight, route,  # noqa: E402
+                                spill_worker)
+
+streams = st.text(max_size=24)
+versions = st.integers(min_value=0, max_value=1000)
+pools = st.lists(st.integers(min_value=0, max_value=255),
+                 min_size=1, max_size=12, unique=True)
+
+
+@given(streams, versions, pools)
+@settings(max_examples=200)
+def test_affinity_is_a_pure_function_of_stream_version_pool(s, v, pool):
+    wid = affine_worker(s, v, pool)
+    assert wid in pool
+    # call- and order-independent: same inputs, same placement
+    assert affine_worker(s, v, pool) == wid
+    assert affine_worker(s, v, list(reversed(pool))) == wid
+    assert affine_worker(s, v, sorted(pool)) == wid
+
+
+@given(streams, versions, pools)
+@settings(max_examples=200)
+def test_affinity_is_the_hrw_argmax(s, v, pool):
+    wid = affine_worker(s, v, pool)
+    best = max(hrw_weight(s, v, w) for w in pool)
+    assert hrw_weight(s, v, wid) == best
+
+
+@given(st.lists(streams, min_size=1, max_size=8, unique=True),
+       versions, st.lists(st.integers(0, 255), min_size=2, max_size=12,
+                          unique=True))
+@settings(max_examples=150)
+def test_removing_one_worker_only_remaps_its_own_streams(names, v, pool):
+    placed = {s: affine_worker(s, v, pool) for s in names}
+    for removed in pool:
+        rest = [w for w in pool if w != removed]
+        for s, wid in placed.items():
+            moved = affine_worker(s, v, rest)
+            if wid != removed:
+                # minimal disruption: survivors keep their streams
+                assert moved == wid
+            else:
+                assert moved in rest
+    # and re-adding the worker restores the original placement exactly
+    for s, wid in placed.items():
+        assert affine_worker(s, v, pool) == wid
+
+
+@given(streams, versions, versions)
+@settings(max_examples=100)
+def test_version_bump_is_the_only_single_stream_reshuffle_knob(s, v1, v2):
+    pool = list(range(4))
+    a1, a2 = affine_worker(s, v1, pool), affine_worker(s, v2, pool)
+    if v1 == v2:
+        assert a1 == a2
+    else:
+        assert a2 in pool               # may move — that is the point
+
+
+@given(pools,
+       st.dictionaries(st.integers(0, 255), st.integers(0, 100),
+                       max_size=12))
+@settings(max_examples=200)
+def test_spill_picks_least_loaded_alive_never_dead(alive, depths):
+    wid = spill_worker(alive, depths)
+    assert wid in alive                 # dead workers are simply absent
+    floor = min(depths.get(w, 0) for w in alive)
+    assert depths.get(wid, 0) == floor
+    # deterministic tie-break: lowest id among the least loaded
+    assert wid == min(w for w in alive if depths.get(w, 0) == floor)
+
+
+@given(streams, versions, pools,
+       st.dictionaries(st.integers(0, 255), st.integers(0, 100),
+                       max_size=12),
+       st.integers(min_value=1, max_value=64))
+@settings(max_examples=200)
+def test_route_stays_inside_the_alive_set(s, v, alive, depths, spill_depth):
+    wid = route(s, v, alive, depths, spill_depth)
+    assert wid in alive
+    affine = affine_worker(s, v, alive)
+    if depths.get(affine, 0) < spill_depth:
+        assert wid == affine            # below threshold: warmth wins
+    else:
+        assert wid == spill_worker(alive, depths)

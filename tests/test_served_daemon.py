@@ -1,31 +1,46 @@
 """Daemon lifecycle, soak, and the requeue-or-fail shutdown contract.
 
-Three layers, cheapest first:
+Five layers, cheapest first:
 
 * **white-box ``RequestQueue.restore``** — the latent shutdown race:
   a drainer that claimed a batch and then lost its worker must be able
   to put the claim back even after ``close()`` (``put`` raises
   ``QueueClosed`` there), and restored items whose future already
-  settled are dropped so every future settles exactly once.
+  settled are dropped so every future settles exactly once — plus a
+  threaded, seeded stress loop that pins that contract under real
+  interleavings, not just scripted sequencing.
+* **router units** — deterministic ``repro.serve.router`` cases (the
+  property sweep lives in ``tests/test_router_props.py``) and
+  white-box ``ServeDaemon._assign`` routing: affinity placement, spill
+  on a saturated worker, and priority preemption of backlogged (never
+  dispatched) requests.
 * **hung-peer stub daemon** — ``ServeDaemon`` with an injected
   ``worker_factory`` standing up scripted in-process RPC peers (no
   jax): a worker that accepts a submit and never replies is declared
   dead by the heartbeat, the claim is requeued exactly once onto the
   replacement, and with retries exhausted the client gets a typed
-  ``WorkerDied`` — never a hang.
+  ``WorkerDied`` — never a hang.  The pool variants route by stream
+  affinity across two stubs and re-prove the respawn replay is scoped
+  to the dead worker's affine streams.
+* **pidfile claim** — ``repro.launch.served.claim_pidfile`` under a
+  thread barrier: of N racing starts exactly one wins (O_CREAT|O_EXCL
+  closed the old check-then-write TOCTOU window), stale pidfiles are
+  reclaimed, live ones refused.
 * **CLI soak** — the full ``repro.launch.served`` lifecycle: start ->
   register-stream (.npz) -> sustained submits from two client
   *processes* -> re-register (version bump must propagate to the
   worker's process-local cache) -> graceful stop (drains in-flight,
   rejects new, removes the pidfile, leaves no orphaned processes or
   listening sockets).  These tests share one daemon and run in file
-  order.
+  order (marked ``ordered_soak``; CI's randomized serve-stress step
+  deselects them).
 """
 
 from __future__ import annotations
 
 import json
 import os
+import random
 import socket
 import subprocess
 import sys
@@ -38,6 +53,8 @@ from types import SimpleNamespace
 import numpy as np
 import pytest
 
+from repro.launch.served import claim_pidfile
+from repro.serve import router
 from repro.serve import transport as tp
 from repro.serve.daemon import ServeDaemon, WorkerHandle
 from repro.serve.queue import (QueueClosed, RequestQueue, SimFuture,
@@ -111,6 +128,174 @@ def test_queue_restore_of_all_done_items_is_a_noop():
     assert len(q) == 0
 
 
+@pytest.mark.parametrize("stress_seed", [1234, 77])
+def test_queue_restore_concurrent_stress(stress_seed):
+    """The restore contract under REAL interleavings: seeded drainer
+    threads randomly serve their claims, or settle part of a claim and
+    restore the rest — racing a producer, each other, and ``close()``.
+    Invariants: a drained item is never already settled (restore dropped
+    it first), every future settles exactly once (write-once would raise
+    on a double settle), and nothing is lost or left hanging."""
+    n = 300
+    q = RequestQueue()
+    pairs = [(r := _req(i), SimFuture(r)) for i in range(n)]
+    errors: list = []
+
+    def producer():
+        prng = random.Random(stress_seed)
+        try:
+            for r, f in pairs:
+                q.put(r, f)
+                if prng.random() < 0.05:
+                    time.sleep(0.0005)
+        except Exception as exc:        # noqa: BLE001
+            errors.append(exc)
+
+    def drainer(seed):
+        prng = random.Random(seed)
+        try:
+            while not all(f.done() for _, f in pairs):
+                batch = q.drain(max_n=prng.randint(1, 7), wait_s=0.005)
+                for _, f in batch:
+                    if f.done():        # restore must have dropped these
+                        raise AssertionError(
+                            "drained a future that was already settled")
+                if not batch:
+                    continue
+                if prng.random() < 0.4:
+                    # settle a random subset in place, restore the whole
+                    # claim: the settled part must evaporate
+                    for _, f in batch:
+                        if prng.random() < 0.5:
+                            f.set_exception(tp.DeadlineExceeded("swept"))
+                    q.restore(batch)
+                else:
+                    for _, f in batch:
+                        f.set_result("served")
+        except Exception as exc:        # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=producer)]
+    threads += [threading.Thread(target=drainer, args=(stress_seed + i,))
+                for i in range(4)]
+    for t in threads:
+        t.start()
+    threads[0].join(timeout=60.0)
+    q.close()                           # drainers keep working the tail
+    for t in threads:
+        t.join(timeout=60.0)
+    assert not any(t.is_alive() for t in threads), "stress wedged"
+    assert not errors, errors
+    assert all(f.done() for _, f in pairs)
+    assert len(q) == 0
+    served = sum(1 for _, f in pairs if f._exception is None)
+    swept = sum(1 for _, f in pairs if f._exception is not None)
+    assert served + swept == n
+
+
+# ---------------------------------------------------------------------------
+# router units + white-box pool routing (_assign): affinity, spill,
+# preemption.  The hypothesis sweep is tests/test_router_props.py.
+# ---------------------------------------------------------------------------
+
+def test_router_affinity_is_deterministic_and_stable():
+    pool = [0, 1, 2, 3]
+    placed = {s: router.affine_worker(s, 1, pool)
+              for s in ("alpha", "beta", "gamma", "delta", "epsilon")}
+    assert all(w in pool for w in placed.values())
+    # pure function: same answer on every call and any pool ordering
+    for s, w in placed.items():
+        assert router.affine_worker(s, 1, list(reversed(pool))) == w
+    # removing a worker only remaps ITS streams
+    for removed in pool:
+        rest = [w for w in pool if w != removed]
+        for s, w in placed.items():
+            if w != removed:
+                assert router.affine_worker(s, 1, rest) == w
+
+
+def test_router_version_bump_can_rehome_and_spill_is_least_loaded():
+    pool = [0, 1, 2]
+    # version is part of the key: re-registration may deliberately move
+    # a stream (some version must map differently than version 1)
+    homes = {v: router.affine_worker("default", v, pool)
+             for v in range(1, 12)}
+    assert len(set(homes.values())) > 1
+    assert router.spill_worker(pool, {0: 5, 1: 2, 2: 2}) == 1  # tie -> low id
+    assert router.route("s", 1, pool, {w: 0 for w in pool}, 4) == \
+        router.affine_worker("s", 1, pool)
+
+
+class _FakeHandle:
+    """Alive-looking pool entry for white-box _assign tests."""
+    alive = True
+
+    def __init__(self, wid):
+        self.worker_id = wid
+        self.streams: dict = {}
+
+
+def _pool_daemon(window=4, spill=4):
+    d = ServeDaemon(workers=2, worker_window=window, spill_depth=spill,
+                    worker_factory=lambda *a: None)  # never started
+    d._pool = {0: _FakeHandle(0), 1: _FakeHandle(1)}
+    d._streams["default"] = {"version": 1}
+    affine = router.affine_worker("default", 1, [0, 1])
+    return d, affine, 1 - affine
+
+
+def test_assign_places_on_affine_worker_backlog():
+    d, affine, other = _pool_daemon()
+    req = _req(0)
+    assert d._assign(req, SimFuture(req))
+    assert len(d._backlog[affine]) == 1 and not d._backlog[other]
+    assert d.counters["spilled"] == 0
+
+
+def test_assign_spills_to_least_loaded_when_affine_saturated():
+    d, affine, other = _pool_daemon(spill=4)
+    for i in range(4):                  # saturate the affine worker
+        d._winflight[affine][i] = ("inflight", None)
+    req = _req(1)
+    assert d._assign(req, SimFuture(req))
+    assert len(d._backlog[other]) == 1 and not d._backlog[affine]
+    assert d.counters["spilled"] == 1
+
+
+def test_assign_preempts_lower_priority_backlog_back_to_queue():
+    d, affine, other = _pool_daemon(window=2, spill=100)
+    for i in range(2):                  # dispatch window full
+        d._winflight[affine][i] = ("inflight", None)
+    low = SimRequest(algo="eflfg", seed=0, T=8, priority=0)
+    low_fut = SimFuture(low)
+    assert d._assign(low, low_fut)
+    assert [r.priority for r, _ in d._backlog[affine]] == [0]
+    high = SimRequest(algo="eflfg", seed=1, T=8, priority=5)
+    assert d._assign(high, SimFuture(high))
+    # the backlogged (never dispatched) low-priority request was bumped
+    # back to the FRONT of the main queue, unsettled, attempts untouched
+    assert [r.priority for r, _ in d._backlog[affine]] == [5]
+    assert d.counters["preempted"] == 1
+    restored = d._queue.drain(max_n=4, wait_s=0.0)
+    assert [(r.seed, r.priority) for r, _ in restored] == [(0, 0)]
+    assert not low_fut.done()
+    # equal priority never preempts (FIFO within a class): re-adding the
+    # low request only gets bumped again by a strictly higher arrival
+    assert d._assign(low, SimFuture(low))
+    assert [r.priority for r, _ in d._backlog[affine]] == [5, 0]
+    another_high = SimRequest(algo="eflfg", seed=2, T=8, priority=5)
+    assert d._assign(another_high, SimFuture(another_high))
+    assert [r.priority for r, _ in d._backlog[affine]] == [5, 5]
+    assert d.counters["preempted"] == 2  # seed=2 bumped the fresh low
+
+
+def test_assign_returns_false_with_no_alive_workers():
+    d, _, _ = _pool_daemon()
+    d._pool = {0: None, 1: None}
+    req = _req(0)
+    assert not d._assign(req, SimFuture(req))
+
+
 # ---------------------------------------------------------------------------
 # hung-peer stub daemon (no jax: scripted in-process workers)
 # ---------------------------------------------------------------------------
@@ -174,6 +359,7 @@ def _stub_factory(modes: list, spawned: list):
     def factory(worker_args, epoch):
         mode = modes[min(epoch, len(modes)) - 1]
         stub = StubWorker(mode)
+        stub.worker_id = worker_args.get("worker_id", 0)
         spawned.append(stub)
         client = tp.RpcClient(stub.rpc.addr, connect_timeout=5.0)
         return WorkerHandle(None, client, epoch)
@@ -246,6 +432,153 @@ def test_hung_peer_fails_typed_when_retries_exhausted():
         daemon.drain_and_stop(timeout=10.0)
         for stub in spawned:
             stub.stop()
+
+
+def _affine_split(n_names: int = 16):
+    """Stream names split by their pool-of-2 affinity; both slots get
+    at least one (deterministic: blake2b placement)."""
+    by_wid = {0: [], 1: []}
+    for i in range(n_names):
+        name = f"s{i}"
+        by_wid[router.affine_worker(name, 1, [0, 1])].append(name)
+        if by_wid[0] and by_wid[1] and i >= 5:
+            break
+    assert by_wid[0] and by_wid[1]
+    return by_wid
+
+
+def test_pool_routes_by_stream_affinity_end_to_end():
+    spawned: list = []
+    daemon = ServeDaemon(workers=2, max_pending=16, retry_limit=1,
+                         heartbeat_s=0.1, heartbeat_misses=3,
+                         worker_factory=_stub_factory(["good"], spawned))
+    daemon.start()
+    front = tp.RpcClient(daemon.addr, connect_timeout=5.0)
+    by_wid = _affine_split()
+    try:
+        for names in by_wid.values():
+            for name in names:
+                front.call("register_stream",
+                           dict(_tiny_stream(), name=name),
+                           deadline_s=10.0)
+        stubs = {s.worker_id: s for s in spawned}
+        # eager registration already went to each stream's affine worker
+        for wid, names in by_wid.items():
+            assert set(stubs[wid].streams) == set(names)
+        # traffic for every stream lands on ITS worker, nobody else's
+        for wid, names in by_wid.items():
+            for name in names:
+                reply = front.call("submit", dict(_SPEC, stream=name),
+                                   deadline_s=30.0)
+                assert reply["result"]["stub"] is True
+                assert reply["execution"]["worker"] == wid
+        for wid, names in by_wid.items():
+            assert {p["stream"] for p in stubs[wid].submits} == set(names)
+        status = daemon.status()
+        assert [w["id"] for w in status["workers"]] == [0, 1]
+        assert all(w["alive"] and w["epoch"] == 1 and w["restarts"] == 0
+                   for w in status["workers"])
+        assert status["counters"]["spilled"] == 0
+        assert status["counters"]["preempted"] == 0
+    finally:
+        front.close()
+        daemon.drain_and_stop(timeout=10.0)
+        for stub in spawned:
+            stub.stop()
+
+
+def test_pool_respawn_replays_only_affine_streams():
+    spawned: list = []
+    daemon = ServeDaemon(workers=2, max_pending=16, retry_limit=1,
+                         heartbeat_s=0.05, heartbeat_misses=2,
+                         worker_factory=_stub_factory(["good"], spawned))
+    daemon.start()
+    front = tp.RpcClient(daemon.addr, connect_timeout=5.0)
+    by_wid = _affine_split()
+    try:
+        for names in by_wid.values():
+            for name in names:
+                front.call("register_stream",
+                           dict(_tiny_stream(), name=name),
+                           deadline_s=10.0)
+        stubs = {s.worker_id: s for s in spawned}
+        survivor_before = dict(stubs[1].streams)
+        stubs[0].stop()                 # hard-kill slot 0's endpoint
+        deadline = time.monotonic() + 20.0
+        while time.monotonic() < deadline:
+            st = daemon.status()
+            if st["workers"][0]["restarts"] >= 1 and st["workers"][0]["alive"]:
+                break
+            time.sleep(0.02)
+        st = daemon.status()
+        assert st["workers"][0]["restarts"] >= 1 and st["workers"][0]["alive"]
+        replacement = spawned[-1]
+        assert replacement.worker_id == 0 and replacement is not stubs[0]
+        # the replay was SCOPED: only slot 0's affine streams came back,
+        # and the survivor was not touched at all
+        assert set(replacement.streams) == set(by_wid[0])
+        assert stubs[1].streams == survivor_before
+        assert st["workers"][1]["restarts"] == 0 and st["workers"][1]["alive"]
+        # and the replacement serves its streams again
+        reply = front.call("submit", dict(_SPEC, stream=by_wid[0][0]),
+                           deadline_s=30.0)
+        assert reply["execution"]["worker"] == 0
+    finally:
+        front.close()
+        daemon.drain_and_stop(timeout=10.0)
+        for stub in spawned:
+            stub.stop()
+
+
+# ---------------------------------------------------------------------------
+# pidfile claim: the start TOCTOU regression (O_CREAT|O_EXCL)
+# ---------------------------------------------------------------------------
+
+def test_pidfile_claim_race_has_exactly_one_winner(tmp_path):
+    path = tmp_path / "served.json"
+    n = 8
+    barrier = threading.Barrier(n)
+    wins, losses, errors = [], [], []
+
+    def racer(i):
+        barrier.wait()                  # maximize overlap in the window
+        try:
+            claim_pidfile(str(path))
+            wins.append(i)
+        except SystemExit:
+            losses.append(i)
+        except Exception as exc:        # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=racer, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    assert not errors, errors
+    assert len(wins) == 1 and len(losses) == n - 1
+    info = json.loads(path.read_text())
+    assert info["pid"] == -1            # the placeholder claim, intact
+
+
+def test_pidfile_claim_reclaims_stale_and_refuses_live(tmp_path):
+    path = tmp_path / "served.json"
+    # a pidfile naming a dead pid (hard-killed daemon) is reclaimed
+    corpse = subprocess.Popen([sys.executable, "-c", "pass"])
+    corpse.wait(timeout=30.0)
+    path.write_text(json.dumps({"pid": corpse.pid, "host": "127.0.0.1",
+                                "port": 1}))
+    claim_pidfile(str(path))
+    assert json.loads(path.read_text())["pid"] == -1
+    # a pidfile naming a LIVE pid refuses the second start
+    path.write_text(json.dumps({"pid": os.getpid(), "host": "127.0.0.1",
+                                "port": 1}))
+    with pytest.raises(SystemExit, match="already running"):
+        claim_pidfile(str(path))
+    # an in-progress claim (placeholder) also refuses
+    path.write_text(json.dumps({"pid": -1, "claimed_by": 1}))
+    with pytest.raises(SystemExit, match="already running"):
+        claim_pidfile(str(path))
 
 
 # ---------------------------------------------------------------------------
@@ -326,6 +659,7 @@ def _status(cli):
                            timeout=60.0))
 
 
+@pytest.mark.ordered_soak
 def test_cli_start_pidfile_and_worker(cli):
     info = json.loads(cli.pidfile.read_text())
     assert info["pid"] == cli.pid and _alive(cli.pid)
@@ -336,6 +670,7 @@ def test_cli_start_pidfile_and_worker(cli):
     assert status["draining"] is False
 
 
+@pytest.mark.ordered_soak
 def test_cli_register_stream_from_npz(cli):
     npz = cli.tmp / "stream_v1.npz"
     np.savez(npz, **_arrays(0))
@@ -348,6 +683,7 @@ def test_cli_register_stream_from_npz(cli):
     assert listed["default"]["version"] == 1
 
 
+@pytest.mark.ordered_soak
 def test_sustained_load_from_two_client_processes(cli):
     env = _env()
     procs = [subprocess.Popen(
@@ -366,6 +702,7 @@ def test_sustained_load_from_two_client_processes(cli):
     assert status["worker"]["alive"]
 
 
+@pytest.mark.ordered_soak
 def test_reregister_version_bump_propagates_to_worker(cli):
     from dataclasses import replace
 
@@ -395,6 +732,7 @@ def test_reregister_version_bump_propagates_to_worker(cli):
     assert after.identical_to(direct), after.identical_fields(direct)
 
 
+@pytest.mark.ordered_soak
 def test_graceful_stop_drains_inflight_and_rejects_new(cli):
     from repro.serve import Overloaded, SimClient
     from repro.serve.transport import ConnectionLost

@@ -25,11 +25,13 @@ import socket
 import struct
 import threading
 import time
+from types import SimpleNamespace
 
 import numpy as np
 import pytest
 
 from repro.serve import SimClient
+from repro.serve import router
 from repro.serve import transport as tp
 from repro.serve.daemon import ServeDaemon
 
@@ -383,3 +385,201 @@ def test_daemon_serves_normally_after_all_faults(daemon):
         assert not st["draining"] and st["worker"]["alive"]
     finally:
         client.close()
+
+
+# ---------------------------------------------------------------------------
+# multi-worker chaos matrix: a 2-worker pool under injected failures.
+# Affected futures resolve typed or with exactly one requeue; the
+# co-worker's traffic is bit-unaffected; the daemon never wedges.
+# ---------------------------------------------------------------------------
+
+def _pick_streams():
+    """Two stream names whose version-1 rendezvous homes differ, so each
+    pool slot carries its own tenant."""
+    names = (f"tenant{i}" for i in range(100))
+    a = next(n for n in names if router.affine_worker(n, 1, [0, 1]) == 0)
+    b = next(n for n in names if router.affine_worker(n, 1, [0, 1]) == 1)
+    return a, b
+
+
+def _mk_arrays(seed):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(0, 1, (K, N_STREAM)).astype(np.float32),
+            rng.normal(0, 1, N_STREAM).astype(np.float32),
+            rng.uniform(0.5, 2.0, K).astype(np.float32))
+
+
+def _wait_pool_alive(d, timeout=60.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if all(w["alive"] for w in d.status()["workers"]):
+            return
+        time.sleep(0.05)
+    raise AssertionError(f"pool did not heal: {d.status()['workers']}")
+
+
+@pytest.fixture(scope="module")
+def pool(stream_arrays):
+    stream_a, stream_b = _pick_streams()
+    d = ServeDaemon(workers=2, max_pending=64, retry_limit=2,
+                    heartbeat_s=0.3, heartbeat_misses=2,
+                    worker_args={"max_batch": 8, "max_wait_ms": 1.0})
+    d.start()
+    client = SimClient.connect(d.addr, retries=0)
+    client.server.register_stream(stream_a, *stream_arrays)
+    client.server.register_stream(stream_b, *_mk_arrays(11))
+    # warm both workers' executable caches through their own streams
+    for s in (stream_a, stream_b):
+        client.map([dict(algo="eflfg", seed=i, T=T, stream=s)
+                    for i in range(2)], timeout=240.0)
+    client.close()
+    yield SimpleNamespace(d=d, a=stream_a, b=stream_b)
+    d.drain_and_stop()
+
+
+@pytest.mark.ordered_soak
+def test_pool_routes_tenants_to_distinct_workers(pool):
+    st = pool.d.status()
+    assert [w["id"] for w in st["workers"]] == [0, 1]
+    assert all(w["alive"] for w in st["workers"])
+    assert pool.a in st["workers"][0]["streams"]
+    assert pool.b in st["workers"][1]["streams"]
+    client = SimClient.connect(pool.d.addr, retries=0)
+    try:
+        fa = client.submit("eflfg", 50, T=T, stream=pool.a)
+        fb = client.submit("eflfg", 50, T=T, stream=pool.b)
+        fa.result(timeout=240.0), fb.result(timeout=240.0)
+    finally:
+        client.close()
+
+
+@pytest.mark.ordered_soak
+def test_pool_sigkill_one_worker_mid_load_spares_the_other(pool):
+    """SIGKILL the worker serving tenant A under two-tenant load: A's
+    futures settle via requeue-or-fail (retry budget covers one kill),
+    B's results are bit-equal to its pre-chaos reference, and only
+    slot 0 restarts."""
+    d = pool.d
+    specs_b = [dict(algo="eflfg", seed=100 + s, T=T, stream=pool.b)
+               for s in range(4)]
+    client = SimClient.connect(d.addr, retries=0)
+    try:
+        reference = client.map(specs_b, timeout=240.0)      # pre-chaos
+        restarts_before = d.status()["workers"][0]["restarts"]
+        # fresh T on tenant A: a compile keeps its requests in flight
+        futs_a = [client.submit("eflfg", s, T=T + 3, stream=pool.a)
+                  for s in range(6)]
+        futs_b = [client.submit(**spec) for spec in specs_b]
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            st = d.status()
+            if st["workers"][0]["inflight"] > 0 and st["workers"][0]["pid"]:
+                break
+            time.sleep(0.01)
+        pid = d.status()["workers"][0]["pid"]
+        assert pid, "no worker 0 to kill"
+        os.kill(pid, signal.SIGKILL)
+        # every tenant-A future settles: retried onto the respawned (or
+        # spilled-to) worker, or failed typed — never hung
+        outcomes_a = []
+        for f in futs_a:
+            try:
+                outcomes_a.append(f.result(timeout=240.0))
+            except tp.WorkerDied as exc:
+                outcomes_a.append(exc)
+        assert len([o for o in outcomes_a
+                    if not isinstance(o, Exception)]) == len(futs_a), \
+            [type(o).__name__ for o in outcomes_a]
+        # the co-worker's tenant is bit-unaffected by the chaos
+        results_b = [f.result(timeout=240.0) for f in futs_b]
+        for got, want in zip(results_b, reference):
+            assert got.identical_to(want), got.identical_fields(want)
+        st = d.status()
+        assert st["workers"][0]["restarts"] > restarts_before
+        assert st["workers"][1]["restarts"] == 0
+        _wait_pool_alive(d)
+    finally:
+        client.close()
+
+
+@pytest.mark.ordered_soak
+def test_pool_kill_affine_worker_of_just_reregistered_stream(pool):
+    """Re-register tenant A (version bump re-homes it), SIGKILL its new
+    affine worker immediately: traffic re-routes to the survivor (which
+    learns the stream lazily) or the respawn — results carry the NEW
+    data, bit-equal to a direct scan."""
+    from dataclasses import replace
+
+    from repro.federated import SimConfig, run_simulation_scan
+
+    d = pool.d
+    preds, y, costs = _mk_arrays(23)
+    client = SimClient.connect(d.addr, retries=0)
+    try:
+        client.server.register_stream(pool.a, preds, y, costs)
+        version = d.status()["streams"][pool.a]
+        home = router.affine_worker(pool.a, version, [0, 1])
+        pid = d.status()["workers"][home]["pid"]
+        assert pid, "no affine worker to kill"
+        os.kill(pid, signal.SIGKILL)
+        fut = client.submit("eflfg", 9, T=T, stream=pool.a, exact=True)
+        res = fut.result(timeout=240.0)
+        direct = run_simulation_scan("eflfg", preds, y, costs, T,
+                                     replace(SimConfig(), seed=9))
+        assert res.identical_to(direct), res.identical_fields(direct)
+        _wait_pool_alive(d)
+    finally:
+        client.close()
+
+
+def test_pool_kill_during_drain_survivor_absorbs_backlog(stream_arrays):
+    """SIGKILL one worker while the daemon is draining: its restored
+    claims re-route to the survivor (draining skips respawn), every
+    admitted future completes or fails typed, and the drain finishes —
+    the daemon never wedges."""
+    stream_a, stream_b = _pick_streams()
+    d = ServeDaemon(workers=2, max_pending=64, retry_limit=2,
+                    heartbeat_s=0.3, heartbeat_misses=2,
+                    worker_args={"max_batch": 8, "max_wait_ms": 1.0})
+    d.start()
+    client = SimClient.connect(d.addr, retries=0)
+    try:
+        client.server.register_stream(stream_a, *stream_arrays)
+        client.server.register_stream(stream_b, *_mk_arrays(31))
+        for s in (stream_a, stream_b):
+            client.map([dict(algo="eflfg", seed=i, T=T, stream=s)
+                        for i in range(2)], timeout=240.0)
+        # fresh T: compiles keep requests in flight through the drain
+        admitted_before = d.status()["counters"]["admitted"]
+        futs = [client.submit("eflfg", s, T=T + 11, stream=st)
+                for s in range(4) for st in (stream_a, stream_b)]
+        deadline = time.monotonic() + 30.0
+        while (time.monotonic() < deadline
+               and d.status()["counters"]["admitted"]
+               < admitted_before + len(futs)):
+            time.sleep(0.005)           # drain only after full admission
+        stopper = threading.Thread(target=d.drain_and_stop,
+                                   kwargs={"timeout": 240.0}, daemon=True)
+        stopper.start()
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline and not d._draining:
+            time.sleep(0.005)
+        pid = d.status()["workers"][0]["pid"]
+        if pid:                         # may already be shut down
+            os.kill(pid, signal.SIGKILL)
+        outcomes = []
+        for f in futs:
+            try:
+                outcomes.append(f.result(timeout=240.0))
+            except (tp.WorkerDied, tp.ConnectionLost) as exc:
+                outcomes.append(exc)
+        assert len(outcomes) == len(futs)       # all settled: no hangs
+        # the survivor absorbed at least tenant B's traffic
+        completed = [o for o in outcomes if not isinstance(o, Exception)]
+        assert completed, [type(o).__name__ for o in outcomes]
+        stopper.join(timeout=300.0)
+        assert not stopper.is_alive(), "drain wedged"
+        assert d._stopped.is_set()
+    finally:
+        client.close()
+        d.drain_and_stop()
