@@ -351,6 +351,14 @@ def _serve_record(fast: bool) -> dict:
     # all_completed is hard everywhere (docs/serving.md#worker-pools).
     from benchmarks.serve_load import pool_scaling_record
     rec["pool"] = pool_scaling_record(preds, y, costs, fast)
+
+    # Observability-overhead cell: interleaved paired closed bursts with
+    # repro.obs tracing disabled vs enabled on one warm SimServer —
+    # `rel = t_enabled/t_disabled` is gated against an *absolute* 1.05
+    # ceiling, and instrumented_bits_equal is a hard flag pinning the
+    # observe-only contract (docs/observability.md#the-contract).
+    from benchmarks.serve_load import obs_overhead_record
+    rec["obs_overhead"] = obs_overhead_record(preds, y, costs, fast)
     return rec
 
 
@@ -683,6 +691,13 @@ def run_engine_bench(fast: bool = False, skip_loop_baseline: bool = False,
                      "-", str(c["cores"])))
         rows.append(("engine/serve/pool/all_completed",
                      "-", str(c["all_completed"])))
+        c = srv["obs_overhead"]
+        rows.append(("engine/serve/obs_overhead/overhead_pct",
+                     "-", f"{c['overhead_pct']:.2f}"))
+        rows.append(("engine/serve/obs_overhead/instrumented_bits_equal",
+                     "-", str(c["instrumented_bits_equal"])))
+        rows.append(("engine/serve/obs_overhead/all_completed",
+                     "-", str(c["all_completed"])))
 
     if not skip_sharded:
         rec["sharded_sweep"] = sharded = _sharded_sweep_record(fast)
@@ -753,7 +768,8 @@ def merge_conservative(recs: list) -> dict:
     for section, cells in (("sharded_sweep", ("eflfg", "fedboost",
                                               "mesh2d")),
                            ("serve", ("eflfg", "fedboost",
-                                      "mixed_scenario", "sustained")),
+                                      "mixed_scenario", "sustained",
+                                      "pool", "obs_overhead")),
                            ("scenario", ("eflfg", "fedboost"))):
         secs = [r[section] for r in recs if section in r]
         if not secs or section not in out:

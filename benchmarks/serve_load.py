@@ -43,7 +43,7 @@ import threading
 import time
 
 __all__ = ["run_open_loop", "summarize", "sustained_record",
-           "pool_scaling_record", "main"]
+           "pool_scaling_record", "obs_overhead_record", "main"]
 
 
 def _percentile(sorted_vals, q: float) -> float:
@@ -259,6 +259,82 @@ def pool_scaling_record(preds, y, costs, fast: bool,
         "req_per_s_workers1": round(n_req / t[1][i_rep], 2),
         "req_per_s_workers2": round(n_req / t[2][i_rep], 2),
         "all_completed": errors[1] + errors[2] == 0,
+    }
+
+
+def obs_overhead_record(preds, y, costs, fast: bool,
+                        algo: str = "fedboost") -> dict:
+    """The ``serve.obs_overhead`` BENCH cell: the telemetry tax.
+
+    Interleaved paired closed bursts against one warm in-process
+    ``SimServer`` — ``repro.obs`` disabled, then enabled, repeated —
+    so drift cancels out of the paired per-rep ratios exactly like the
+    other serve cells.  Two gates (docs/observability.md#the-contract):
+
+    * ``instrumented_bits_equal`` (hard flag): every result of an
+      enabled burst is ``identical_to`` its disabled twin — telemetry
+      is observe-only, instrumentation can never move a bit.
+    * ``rel = t_enabled / t_disabled`` (median of paired ratios) must
+      stay under the *absolute* ceiling 1.05 — tracing, span recording
+      and histogram observes together cost at most 5%.  Absolute, not
+      baseline-relative: the contract is with the user, not with last
+      week's number.
+    """
+    import statistics as stats
+
+    from repro import obs
+    from repro.serve import SimClient, SimServer
+
+    T = 300 if fast else 2000
+    n_req, max_batch = 32, 16
+    reps = 3 if fast else 5
+    specs = [dict(algo=algo, seed=s, T=T) for s in range(n_req)]
+
+    def burst(client):
+        futs = [client.submit(**s) for s in specs]
+        out, errs = [], 0
+        for f in futs:
+            try:
+                out.append(f.result(timeout=3600.0))
+            except Exception:               # noqa: BLE001 - typed tally
+                errs += 1
+        return out, errs
+
+    t: dict = {False: [], True: []}
+    results: dict = {False: None, True: None}
+    errors = 0
+    prev = obs.set_enabled(True)            # restored on the way out
+    try:
+        with SimServer(max_batch=max_batch, max_wait_ms=1.0) as server:
+            server.register_stream("default", preds, y, costs)
+            client = SimClient(server)
+            _, errs = burst(client)         # warm the bucket executables
+            errors += errs
+            for _ in range(reps):
+                for enabled in (False, True):       # interleaved pairs
+                    obs.set_enabled(enabled)
+                    t0 = time.monotonic()
+                    res, errs = burst(client)
+                    t[enabled].append(time.monotonic() - t0)
+                    results[enabled], errors = res, errors + errs
+    finally:
+        obs.set_enabled(prev)
+    bits_equal = (
+        len(results[False]) == len(results[True]) == n_req
+        and all(a.identical_to(b)
+                for a, b in zip(results[False], results[True])))
+    ratios = [b / a for a, b in zip(t[False], t[True])]
+    rel = stats.median(ratios)
+    i_rep = min(range(len(ratios)), key=lambda i: abs(ratios[i] - rel))
+    return {
+        "algo": algo, "T": T, "n_requests": n_req, "reps": reps,
+        "max_batch": max_batch,
+        "t_disabled_s": round(t[False][i_rep], 4),
+        "t_enabled_s": round(t[True][i_rep], 4),
+        "rel": round(rel, 4),
+        "overhead_pct": round((rel - 1.0) * 100.0, 2),
+        "instrumented_bits_equal": bits_equal,
+        "all_completed": errors == 0,
     }
 
 

@@ -48,9 +48,18 @@ subcommand details:
                    costs); idempotent per content, version-bumping per
                    call
   list-streams     registered stream names + versions (worker view)
+  metrics          the fleet-merged repro.obs instrument tree (daemon
+                   counters/gauges/histograms + every live worker's,
+                   merged); --prom renders Prometheus text exposition
+  trace            without an id: recent trace_ids seen by the daemon;
+                   with one: the stitched cross-process span timeline
+                   (client-submitted id from SimFuture execution
+                   metadata); --perfetto PATH writes a
+                   chrome://tracing / Perfetto-loadable JSON dump
 
 docs/serving.md#remote-mode documents addressing, deadlines, failure
-semantics and tuning for the remote tier.
+semantics and tuning for the remote tier; docs/observability.md covers
+the metrics/trace surfaces.
 """
 
 
@@ -216,6 +225,58 @@ def cmd_list_streams(args) -> int:
     return 0
 
 
+def cmd_metrics(args) -> int:
+    info = _read_pidfile(args.pidfile)
+    doc = _rpc(info, "metrics", deadline_s=15.0)
+    if args.prom:
+        from repro.obs import render_prometheus
+        sys.stdout.write(render_prometheus(doc["merged"]))
+    else:
+        print(json.dumps(doc, indent=2, default=str))
+    return 0
+
+
+def _print_timeline(doc: dict) -> None:
+    spans = doc.get("spans", [])
+    if not spans:
+        print(f"trace {doc.get('trace_id')}: no spans "
+              "(evicted from the ring buffers, or never seen?)")
+        return
+    t_base = min(s["t0_wall"] for s in spans)
+    print(f"trace {doc['trace_id']}  ({len(spans)} spans)")
+    for s in spans:
+        off_ms = (s["t0_wall"] - t_base) * 1e3
+        dur = s.get("dur_s") or 0.0
+        attrs = s.get("attrs") or {}
+        extras = " ".join(f"{k}={v}" for k, v in sorted(attrs.items()))
+        print(f"  +{off_ms:9.3f}ms  {dur * 1e3:8.3f}ms  "
+              f"[{s.get('service', '?'):>9s}]  {s['name']}"
+              + (f"  {extras}" if extras else ""))
+
+
+def cmd_trace(args) -> int:
+    info = _read_pidfile(args.pidfile)
+    params = {}
+    if args.trace_id:
+        params["trace_id"] = args.trace_id
+    doc = _rpc(info, "trace", params, deadline_s=15.0)
+    if not args.trace_id:
+        print(json.dumps(doc, indent=2, default=str))
+        return 0
+    if args.perfetto:
+        from repro.obs import to_perfetto
+        with open(args.perfetto, "w") as fh:
+            json.dump(to_perfetto(doc.get("spans", [])), fh)
+        print(json.dumps({"wrote": args.perfetto,
+                          "spans": len(doc.get("spans", []))}))
+        return 0
+    if args.json:
+        print(json.dumps(doc, indent=2, default=str))
+    else:
+        _print_timeline(doc)
+    return 0
+
+
 # ---------------------------------------------------------------------------
 # argument plumbing
 # ---------------------------------------------------------------------------
@@ -276,6 +337,29 @@ def build_parser() -> argparse.ArgumentParser:
     p = sub.add_parser("list-streams", help="registered streams + versions")
     common(p)
     p.set_defaults(fn=cmd_list_streams)
+
+    p = sub.add_parser("metrics",
+                       help="fleet-merged metrics tree (JSON or "
+                            "Prometheus text)")
+    common(p)
+    p.add_argument("--prom", action="store_true",
+                   help="Prometheus text exposition of the merged "
+                        "snapshot instead of the full JSON document")
+    p.set_defaults(fn=cmd_metrics)
+
+    p = sub.add_parser("trace",
+                       help="recent traces, or one stitched "
+                            "cross-process timeline")
+    common(p)
+    p.add_argument("trace_id", nargs="?", default=None,
+                   help="16-hex trace id (omit to list recent traces)")
+    p.add_argument("--perfetto", metavar="PATH", default=None,
+                   help="write a chrome://tracing / Perfetto JSON dump "
+                        "of the trace to PATH")
+    p.add_argument("--json", action="store_true",
+                   help="raw span documents instead of the human "
+                        "timeline")
+    p.set_defaults(fn=cmd_trace)
     return ap
 
 

@@ -1,0 +1,64 @@
+"""The instrument catalogue: one names-and-types table for the fleet.
+
+Every instrument the serve stack registers is declared here, keyed by
+its short (un-prefixed) name with its kind and help string.  The
+daemon and server build their instruments *and* their legacy
+``status()``/``counters`` JSON keys by iterating these tables, so the
+names cannot drift apart again — there is exactly one spelling of
+"admitted".
+
+Full dotted instrument names are ``<prefix>.<short>`` —
+``daemon.admitted``, ``server.batches``, ``daemon.queue.wait_s`` —
+see docs/observability.md for the rendered catalogue.
+"""
+
+from __future__ import annotations
+
+from .metrics import MetricsRegistry
+
+__all__ = ["DAEMON_COUNTERS", "SERVER_COUNTERS", "QUEUE_INSTRUMENTS",
+           "register_counters"]
+
+# ServeDaemon request-lifecycle counters (previously the ad-hoc
+# ``ServeDaemon.counters`` dict).  Order is the legacy JSON key order.
+DAEMON_COUNTERS = {
+    "admitted": "requests accepted past admission control",
+    "rejected": "submits refused with Overloaded (queue full)",
+    "expired": "requests dropped at their deadline before dispatch",
+    "retried": "requests requeued after their worker was lost",
+    "worker_failed": "requests failed WorkerDied with retries exhausted",
+    "completed": "requests completed back to the client",
+    "spilled": "requests routed off their affine worker (overload spill)",
+    "preempted": "backlogged claims yanked back for a higher priority",
+}
+
+# SimServer dispatch counters (previously ``SimServer._stats``).
+SERVER_COUNTERS = {
+    "submitted": "requests accepted by submit()",
+    "served": "request lanes completed",
+    "failed": "request lanes failed",
+    "batches": "buckets dispatched",
+    "batched_lanes": "real (non-padding) lanes in batched buckets",
+    "padded_lanes": "padding lanes traced-and-dropped",
+    "exact_requests": "lanes served on the exact (solo-program) path",
+    "sharded_batches": "buckets dispatched through run_sweep_sharded",
+    "dispatch_seq": "dispatch sequence numbers allocated",
+    "quarantined": "requests failed at plan time (bad group key)",
+}
+
+# RequestQueue instruments, registered per queue under
+# ``<prefix>.queue.depth`` / ``.queue.oldest_age_s`` /
+# ``.queue.wait_s``.
+QUEUE_INSTRUMENTS = {
+    "depth": ("gauge", "requests currently queued"),
+    "oldest_age_s": ("gauge", "age of the oldest queued request"),
+    "wait_s": ("histogram", "queue residency, observed at claim time"),
+}
+
+
+def register_counters(registry: MetricsRegistry, prefix: str,
+                      table: dict) -> dict:
+    """Create (or fetch) one counter per table row; returns
+    ``{short_name: Counter}`` for hot-path access without string
+    formatting per increment."""
+    return {short: registry.counter(f"{prefix}.{short}") for short in table}

@@ -1,0 +1,37 @@
+"""One clock discipline for the whole fleet.
+
+Durations are always differences of ``time.monotonic()`` readings —
+never wall clock, which NTP can step mid-measurement.  But monotonic
+readings are meaningless across processes (each process's zero is
+arbitrary), so for cross-process alignment every process captures ONE
+``(monotonic, wall)`` anchor pair at import and converts outgoing
+timestamps with :func:`to_wall`.  Spans therefore export wall-clock
+seconds that line up across the daemon and its workers to within the
+wall-clock sync of one machine, while every duration stays a pure
+monotonic difference.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+__all__ = ["ANCHOR_MONO", "ANCHOR_WALL", "to_wall", "anchor"]
+
+# The per-process anchor: captured once, as close together as two
+# successive calls allow.  Everything in this process converts through
+# this single pair, so conversions are mutually consistent even if the
+# wall clock steps later.
+ANCHOR_MONO = time.monotonic()
+ANCHOR_WALL = time.time()
+
+
+def to_wall(mono: float) -> float:
+    """Convert a ``time.monotonic()`` reading from THIS process to an
+    (approximate) wall-clock timestamp via the per-process anchor."""
+    return ANCHOR_WALL + (mono - ANCHOR_MONO)
+
+
+def anchor() -> dict:
+    """The process anchor, as carried in trace dumps."""
+    return {"pid": os.getpid(), "mono": ANCHOR_MONO, "wall": ANCHOR_WALL}

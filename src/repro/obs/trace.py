@@ -1,0 +1,195 @@
+"""Span-based request tracing with a bounded ring buffer.
+
+A *trace context* is a tiny JSON-able dict ``{"trace_id", "span_id"}``
+minted once per request (:func:`mint`, at ``SimClient.submit`` or on
+first touch server-side) and carried as an optional field of the RPC
+wire envelope — so one request's timeline (submitted → admitted →
+queued → routed/spilled/preempted → dispatched → batched-with-whom →
+completed) stitches across the client, daemon, and worker processes.
+
+Each process records spans into its own :class:`Tracer` — a
+``collections.deque(maxlen=...)`` ring buffer, so memory is bounded
+and old spans fall off the back.  Spans store monotonic times
+(durations are exact within a process) plus a wall-clock conversion
+through the per-process anchor (``repro.obs.clock``) for cross-process
+alignment, and export to chrome://tracing / Perfetto JSON
+(:func:`to_perfetto`).
+
+Recording is gated on the global switch (``repro.obs.state``): when
+disabled, :func:`mint` returns ``None`` and recorders no-op — the
+hook that makes the bit-equality pin and the overhead bench's
+"uninstrumented" arm honest.
+"""
+
+from __future__ import annotations
+
+import collections
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from . import clock, state
+
+__all__ = ["mint", "child", "Tracer", "TRACER", "set_service",
+           "to_perfetto", "DEFAULT_CAPACITY"]
+
+DEFAULT_CAPACITY = 4096
+
+
+def _hex_id(n_bytes: int) -> str:
+    return os.urandom(n_bytes).hex()
+
+
+def mint(parent: Optional[dict] = None) -> Optional[dict]:
+    """Mint a trace context.  With a ``parent`` context, the trace id
+    is inherited and a fresh span id allocated; otherwise both are new.
+    Returns ``None`` when observability is disabled — callers pass the
+    context along unconditionally and ``None`` flows through as
+    "untraced"."""
+    if not state.enabled():
+        return None
+    if parent and parent.get("trace_id"):
+        return {"trace_id": str(parent["trace_id"]),
+                "span_id": _hex_id(4)}
+    return {"trace_id": _hex_id(8), "span_id": _hex_id(4)}
+
+
+def child(trace: Optional[dict]) -> Optional[dict]:
+    """A child context of ``trace`` (same trace id, new span id)."""
+    if not trace:
+        return None
+    return mint(parent=trace)
+
+
+class Tracer:
+    """Per-process span recorder over a bounded ring buffer."""
+
+    def __init__(self, service: Optional[str] = None,
+                 capacity: int = DEFAULT_CAPACITY):
+        self.service = service or f"pid{os.getpid()}"
+        self._lock = threading.Lock()
+        self._spans: collections.deque = collections.deque(maxlen=capacity)
+
+    # -- recording ---------------------------------------------------
+
+    def record(self, name: str, trace: Optional[dict],
+               t0: Optional[float] = None, t1: Optional[float] = None,
+               attrs: Optional[dict] = None) -> None:
+        """Record one span.  ``trace`` is a context dict (no-op when
+        ``None`` or when observability is disabled).  ``t0``/``t1`` are
+        ``time.monotonic()`` readings from THIS process; both default
+        to now, making the span an instant event.  Retroactive spans
+        (e.g. queue residency, recorded at claim time with the enqueue
+        timestamp as ``t0``) are the intended use of passing ``t0``."""
+        if trace is None or not state.enabled():
+            return
+        now = time.monotonic()
+        m0 = now if t0 is None else t0
+        m1 = now if t1 is None else t1
+        span = {
+            "name": name,
+            "trace_id": trace.get("trace_id"),
+            "span_id": _hex_id(4),
+            "parent_id": trace.get("span_id"),
+            "service": self.service,
+            "pid": os.getpid(),
+            "t0": m0,
+            "t0_wall": clock.to_wall(m0),
+            "dur_s": max(0.0, m1 - m0),
+            "attrs": dict(attrs) if attrs else {},
+        }
+        with self._lock:
+            self._spans.append(span)
+
+    def event(self, name: str, trace: Optional[dict],
+              attrs: Optional[dict] = None) -> None:
+        """An instant (zero-duration) span."""
+        self.record(name, trace, attrs=attrs)
+
+    # -- reading -----------------------------------------------------
+
+    def spans(self, trace_id: Optional[str] = None,
+              limit: Optional[int] = None) -> List[dict]:
+        """Recorded spans, oldest first, optionally filtered to one
+        trace.  Returns copies — safe to mutate/serialize."""
+        with self._lock:
+            out = [dict(s) for s in self._spans
+                   if trace_id is None or s["trace_id"] == trace_id]
+        if limit is not None:
+            out = out[-limit:]
+        return out
+
+    def dump(self, trace_id: Optional[str] = None,
+             limit: Optional[int] = None) -> dict:
+        """Wire-ready dump: the process anchor plus span list.  This is
+        what the worker ``trace`` RPC returns and what the daemon
+        stitches across processes."""
+        return {"service": self.service, "anchor": clock.anchor(),
+                "spans": self.spans(trace_id, limit)}
+
+    def traces(self, limit: int = 50) -> List[dict]:
+        """Most-recent distinct traces (newest first): id, span count,
+        first/last wall time, and the span names seen."""
+        by_id: Dict[str, dict] = {}
+        order: List[str] = []
+        for s in self.spans():
+            tid = s["trace_id"]
+            rec = by_id.get(tid)
+            if rec is None:
+                rec = by_id[tid] = {"trace_id": tid, "n_spans": 0,
+                                    "t0_wall": s["t0_wall"],
+                                    "t1_wall": s["t0_wall"], "names": []}
+                order.append(tid)
+            rec["n_spans"] += 1
+            rec["t0_wall"] = min(rec["t0_wall"], s["t0_wall"])
+            rec["t1_wall"] = max(rec["t1_wall"], s["t0_wall"] + s["dur_s"])
+            if s["name"] not in rec["names"]:
+                rec["names"].append(s["name"])
+        return [by_id[tid] for tid in reversed(order)][:limit]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._spans.clear()
+
+
+# The per-process default tracer.  Components record into this unless
+# handed an explicit Tracer; daemon/worker mains name it via
+# set_service so merged timelines read "daemon" / "worker3".
+TRACER = Tracer()
+
+
+def set_service(name: str) -> None:
+    TRACER.service = str(name)
+
+
+def to_perfetto(spans: List[dict]) -> dict:
+    """Convert span dicts (from any mix of processes) to
+    chrome://tracing "trace event" JSON — load the result in Perfetto
+    or chrome://tracing.  Rows group by (service, trace) so each
+    request reads as one horizontal timeline per process."""
+    events = []
+    pids: Dict[str, int] = {}
+    tids: Dict[str, int] = {}
+    for s in spans:
+        svc = str(s.get("service", s.get("pid", "?")))
+        pid = pids.setdefault(svc, len(pids) + 1)
+        tid = tids.setdefault(str(s.get("trace_id")), len(tids) + 1)
+        args: Dict[str, Any] = {"trace_id": s.get("trace_id"),
+                                "span_id": s.get("span_id")}
+        args.update(s.get("attrs") or {})
+        dur_us = float(s.get("dur_s", 0.0)) * 1e6
+        events.append({
+            "name": s["name"],
+            "cat": svc,
+            "ph": "X",
+            "ts": float(s["t0_wall"]) * 1e6,
+            "dur": max(dur_us, 1.0),        # sub-µs spans stay visible
+            "pid": pid,
+            "tid": tid,
+            "args": args,
+        })
+        pids.setdefault(svc, pid)
+    meta = [{"name": "process_name", "ph": "M", "pid": p,
+             "args": {"name": svc}} for svc, p in pids.items()]
+    return {"traceEvents": meta + events, "displayTimeUnit": "ms"}

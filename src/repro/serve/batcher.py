@@ -177,12 +177,16 @@ class DynamicBatcher:
     """
 
     def __init__(self, queue, max_batch: int = 16,
-                 max_wait_ms: float = 2.0):
+                 max_wait_ms: float = 2.0, registry=None):
         if max_batch < 2:
             raise ValueError(f"max_batch must be >= 2, got {max_batch}")
         self.queue = queue
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
+        # observe-only: counts requests quarantined off a drain (see
+        # next_buckets) — planning itself stays untouched
+        self._quarantined = (None if registry is None
+                             else registry.counter("server.quarantined"))
 
     def next_buckets(self, wait_s: float = 0.1) -> list:
         """Block up to ``wait_s`` for traffic; return planned buckets
@@ -200,6 +204,8 @@ class DynamicBatcher:
             try:
                 group_key(req)
             except Exception as exc:            # noqa: BLE001
+                if self._quarantined is not None:
+                    self._quarantined.inc()
                 fut.set_exception(exc)
                 continue
             good.append((req, fut))

@@ -12,6 +12,8 @@ from __future__ import annotations
 
 from typing import Iterable, Optional, Sequence
 
+from .. import obs
+
 __all__ = ["SimClient"]
 
 
@@ -61,8 +63,16 @@ class SimClient:
         ``deadline_s`` (remote mode only) bounds the whole attempt,
         queue wait and retries included: the future is guaranteed to
         settle — result or typed error — within it.
+
+        When ``repro.obs`` is enabled, the request's trace context is
+        minted *here* — the outermost submission point — so the whole
+        cross-process timeline (client → daemon → worker) shares one
+        ``trace_id``; see docs/observability.md.
         """
         kw = {} if deadline_s is None else {"deadline_s": deadline_s}
+        tctx = obs.mint()
+        if tctx is not None:
+            kw["trace"] = tctx
         return self.server.submit(algo, seed, T=T, budget=budget,
                                   stream=stream, cfg=cfg, exact=exact,
                                   scenario=scenario, priority=priority,

@@ -62,6 +62,7 @@ import time
 from typing import Optional
 
 from . import router
+from .. import obs
 from .queue import RequestQueue, SimFuture, SimRequest
 from .transport import (ConnectionLost, DeadlineExceeded, Overloaded,
                         RpcClient, RpcServer, TransportError, WorkerDied)
@@ -162,7 +163,15 @@ class ServeDaemon:
         self.spill_depth = max(1, int(spill_depth))
         self._worker_factory = worker_factory or _spawn_worker_subprocess
         self._worker_args = dict(worker_args or {})
-        self._queue = RequestQueue()
+        # Lifecycle counters live on the registry (one catalogue row per
+        # name — repro.obs.catalog.DAEMON_COUNTERS); each instrument
+        # self-locks, so increments never race and never need the daemon
+        # lock.  The admission queue registers its own depth/age gauges
+        # and wait histogram on the same registry.
+        self.metrics = obs.MetricsRegistry()
+        self._c = obs.catalog.register_counters(
+            self.metrics, "daemon", obs.catalog.DAEMON_COUNTERS)
+        self._queue = RequestQueue(registry=self.metrics, prefix="daemon")
         self._lock = threading.Lock()
         self._streams: dict = {}        # name -> {preds,y,costs,version}
         ids = range(self.workers)
@@ -177,9 +186,13 @@ class ServeDaemon:
         self._stopped = threading.Event()
         self._rpc: Optional[RpcServer] = None
         self._threads: list = []
-        self.counters = {"admitted": 0, "rejected": 0, "expired": 0,
-                         "retried": 0, "worker_failed": 0, "completed": 0,
-                         "spilled": 0, "preempted": 0}
+
+    @property
+    def counters(self) -> dict:
+        """Legacy flat view of the lifecycle counters (read-only; the
+        live instruments are on ``self.metrics``)."""
+        return {short: self._c[short].value
+                for short in obs.catalog.DAEMON_COUNTERS}
 
     # -- lifecycle --------------------------------------------------------
 
@@ -196,6 +209,8 @@ class ServeDaemon:
             "register_stream": self._h_register_stream,
             "list_streams": self._h_list_streams,
             "status": lambda p, c: self.status(),
+            "metrics": lambda p, c: self.metrics_doc(),
+            "trace": self._h_trace,
             "stop": self._h_stop,
         }, host=self._host, port=self._port).start()
         for name, target in (("daemon-pump", self._pump_loop),
@@ -220,8 +235,7 @@ class ServeDaemon:
         return len(self._queue) + pending
 
     def _reject(self, why: str):
-        with self._lock:
-            self.counters["rejected"] += 1
+        self._c["rejected"].inc()
         raise Overloaded(why)
 
     def _h_submit(self, params, ctx):
@@ -242,21 +256,27 @@ class ServeDaemon:
         # SimRequest validates algo/T synchronously — the submitter gets
         # the ValueError, never a co-tenant.  cfg stays an opaque wire
         # dict here; only the worker materializes a SimConfig.
+        # trace context: inherit the client's from the wire envelope
+        # (same trace_id, fresh span parent) or mint one locally; None
+        # when observability is off — everything downstream no-ops
+        tctx = obs.mint(parent=ctx.get("trace"))
         req = SimRequest(
             algo=params["algo"], seed=int(params["seed"]),
             T=int(params["T"]), budget=params.get("budget"),
             stream=params.get("stream", "default"),
             cfg=params.get("cfg"), exact=bool(params.get("exact", False)),
             scenario=scenario, priority=int(params.get("priority", 0)),
-            deadline=ctx["deadline"])
+            deadline=ctx["deadline"], trace=tctx)
         fut = SimFuture(req)
         fut.attempts = 0
         try:
             self._queue.put(req, fut)
         except Exception as exc:
             self._reject(f"not accepting requests: {exc}")
-        with self._lock:
-            self.counters["admitted"] += 1
+        self._c["admitted"].inc()
+        obs.TRACER.event("daemon.admitted", tctx,
+                         attrs={"algo": req.algo, "seed": req.seed,
+                                "stream": req.stream, "peer": ctx.get("peer")})
         return fut                      # deferred: replied on fulfillment
 
     def _h_register_stream(self, params, ctx):
@@ -410,8 +430,8 @@ class ServeDaemon:
             if fut.done():
                 continue
             if req.deadline is not None and now >= req.deadline:
-                with self._lock:
-                    self.counters["expired"] += 1
+                self._c["expired"].inc()
+                obs.TRACER.event("daemon.expired", req.trace)
                 self._settle_exc(fut, DeadlineExceeded(
                     "expired in the admission queue"))
                 continue
@@ -437,8 +457,7 @@ class ServeDaemon:
                       for wid in alive}
             wid = router.route(req.stream, version, alive, depths,
                                self.spill_depth)
-            if wid != router.affine_worker(req.stream, version, alive):
-                self.counters["spilled"] += 1
+            spilled = wid != router.affine_worker(req.stream, version, alive)
             bl = self._backlog[wid]
             # priority insertion: higher class first, FIFO within a class
             idx = len(bl)
@@ -452,8 +471,16 @@ class ServeDaemon:
             if (len(self._winflight[wid]) >= self.worker_window
                     and bl[-1][0].priority < req.priority):
                 victim = bl.pop()
-                self.counters["preempted"] += 1
+        if spilled:
+            self._c["spilled"].inc()
+        obs.TRACER.event("daemon.routed", req.trace,
+                         attrs={"worker": wid, "spilled": spilled,
+                                "depth": depths[wid]})
         if victim is not None:
+            self._c["preempted"].inc()
+            obs.TRACER.event("daemon.preempted", victim[0].trace,
+                             attrs={"worker": wid, "by_seed": req.seed,
+                                    "by_priority": req.priority})
             self._queue.restore([victim])
         return True
 
@@ -506,8 +533,10 @@ class ServeDaemon:
                      else max(req.deadline - time.monotonic(), 1e-3))
         with self._lock:
             self._winflight[wid][id(fut)] = (req, fut)
+        fut.dispatch_t0 = time.monotonic()   # span anchor, observe-only
         rfut = handle.client.call_async("submit", spec,
-                                        deadline_s=remaining)
+                                        deadline_s=remaining,
+                                        trace=req.trace)
         rfut.add_done_callback(
             lambda done: self._on_worker_reply(req, fut, done, wid))
 
@@ -532,30 +561,46 @@ class ServeDaemon:
                          rfut, wid: int) -> None:
         with self._lock:
             self._winflight[wid].pop(id(fut), None)
+        t0 = getattr(fut, "dispatch_t0", None)
+        attempt = getattr(fut, "attempts", 0)
         exc = rfut.exception(timeout=0)
         if exc is None:
             value = rfut.result(timeout=0)
-            with self._lock:
-                self.counters["completed"] += 1
+            self._c["completed"].inc()
             # pass-through: the worker's wire tree goes back out to the
             # client verbatim (bit-exact both hops); only the execution
             # METADATA is annotated with who served it
             if isinstance(value, dict):
-                value.setdefault("execution", {})["worker"] = wid
+                execution = value.setdefault("execution", {})
+                execution["worker"] = wid
+                if req.trace:
+                    execution["trace_id"] = req.trace.get("trace_id")
+            obs.TRACER.record("daemon.dispatch", req.trace, t0=t0,
+                              attrs={"worker": wid, "attempt": attempt,
+                                     "outcome": "ok"})
+            obs.TRACER.event("daemon.completed", req.trace,
+                             attrs={"worker": wid})
             self._settle_result(fut, value)
             return
+        obs.TRACER.record("daemon.dispatch", req.trace, t0=t0,
+                          attrs={"worker": wid, "attempt": attempt,
+                                 "outcome": type(exc).__name__})
         if isinstance(exc, (ConnectionLost, WorkerDied, TimeoutError)):
             expired = (req.deadline is not None
                        and time.monotonic() >= req.deadline)
-            fut.attempts = getattr(fut, "attempts", 0) + 1
+            fut.attempts = attempt + 1
             if fut.attempts <= self.retry_limit and not expired \
                     and not self._stopped.is_set():
-                with self._lock:
-                    self.counters["retried"] += 1
+                self._c["retried"].inc()
+                obs.TRACER.event("daemon.retried", req.trace,
+                                 attrs={"worker": wid,
+                                        "attempt": fut.attempts})
                 self._queue.restore([(req, fut)])
                 return
-            with self._lock:
-                self.counters["worker_failed"] += 1
+            self._c["worker_failed"].inc()
+            obs.TRACER.event("daemon.failed", req.trace,
+                             attrs={"worker": wid,
+                                    "attempts": fut.attempts})
             self._settle_exc(fut, WorkerDied(
                 f"worker lost after {fut.attempts} attempt(s): {exc}"))
             return
@@ -595,8 +640,8 @@ class ServeDaemon:
             inflight = sum(len(m) for m in self._winflight.values())
             backlog = sum(len(b) for b in self._backlog.values())
             streams = {n: s["version"] for n, s in self._streams.items()}
-            counters = dict(self.counters)
             restarts = self._restarts
+        counters = self.counters        # legacy flat view of the registry
         # "worker" stays the single-worker view (slot 0 + pool-wide
         # restarts) so pre-pool tooling and tests keep reading it
         w0 = workers[0]
@@ -609,11 +654,84 @@ class ServeDaemon:
         if self._rpc is not None:
             host, port = self._rpc.addr
             out["addr"] = f"{host}:{port}"
+        # the full typed metrics tree: daemon instruments merged with
+        # every live worker's snapshot (fetched over the stats RPC)
+        out["metrics"] = self.metrics_doc(per_worker_deadline_s=0.35)
         return out
 
-    def reject_count(self) -> int:
+    def metrics_doc(self, per_worker_deadline_s: float = 2.0) -> dict:
+        """The fleet metrics tree: the daemon's own snapshot, each live
+        worker's snapshot (fetched over the existing ``stats`` RPC, in
+        parallel), and their merge.
+
+        Fault containment: snapshots are fetched fresh from LIVE workers
+        only and never cached, so a SIGKILLed worker simply drops out of
+        the merge (no double-count from a stale snapshot), and a partial
+        or malformed snapshot from a dying peer is validated by the
+        merge and skipped rather than wedging the whole document —
+        ``workers_reporting`` says who answered.
+        """
+        snap = self.metrics.snapshot()
         with self._lock:
-            return self.counters["rejected"]
+            handles = [(wid, h) for wid, h in sorted(self._pool.items())
+                       if h is not None and h.alive]
+            total = self.workers
+        pending = []
+        for wid, handle in handles:
+            try:
+                pending.append((wid, handle.client.call_async(
+                    "stats", {}, deadline_s=per_worker_deadline_s)))
+            except Exception:           # noqa: BLE001 - dead peer: skip
+                continue
+        worker_snaps: dict = {}
+        merged = self.metrics.merge([snap])
+        for wid, rfut in pending:
+            try:
+                reply = rfut.result(timeout=per_worker_deadline_s + 1.0)
+                ws = (reply or {}).get("metrics")
+                if ws:
+                    # merge incrementally: a torn snapshot (or one whose
+                    # histogram bounds conflict with what's already
+                    # merged) raises HERE and is skipped — it must not
+                    # poison the document or wedge the caller
+                    merged = self.metrics.merge([merged, ws])
+                    worker_snaps[wid] = ws
+            except Exception:           # noqa: BLE001 - partial/typed: skip
+                continue
+        return {"daemon": snap,
+                "workers": {str(wid): s for wid, s in worker_snaps.items()},
+                "merged": merged,
+                "workers_reporting": len(worker_snaps),
+                "workers_total": total}
+
+    def _h_trace(self, params, ctx):
+        return self.trace_doc(params.get("trace_id"),
+                              limit=params.get("limit"))
+
+    def trace_doc(self, trace_id: Optional[str] = None,
+                  limit: Optional[int] = None) -> dict:
+        """Without ``trace_id``: the daemon tracer's recent traces.
+        With one: that request's spans stitched across the daemon and
+        every live worker (each worker's ``trace`` RPC returns its ring
+        buffer slice), sorted by anchored wall time."""
+        if trace_id is None:
+            return {"traces": obs.TRACER.traces(limit=int(limit or 50))}
+        spans = obs.TRACER.spans(trace_id)
+        with self._lock:
+            handles = [(wid, h) for wid, h in sorted(self._pool.items())
+                       if h is not None and h.alive]
+        for wid, handle in handles:
+            try:
+                dump = handle.client.call("trace", {"trace_id": trace_id},
+                                          deadline_s=2.0)
+                spans.extend(dump.get("spans", []))
+            except Exception:           # noqa: BLE001 - stub/dead: skip
+                continue
+        spans.sort(key=lambda s: s.get("t0_wall", 0.0))
+        return {"trace_id": trace_id, "spans": spans}
+
+    def reject_count(self) -> int:
+        return self._c["rejected"].value
 
     def drain_and_stop(self, timeout: float = 60.0) -> None:
         """Graceful shutdown: reject new, serve admitted, stop every
@@ -683,6 +801,7 @@ def main(argv=None) -> int:
                          "clean exit")
     args = ap.parse_args(argv)
 
+    obs.set_service("daemon")
     daemon = ServeDaemon(
         host=args.host, port=args.port, max_pending=args.max_pending,
         retry_limit=args.retry_limit, heartbeat_s=args.heartbeat_s,

@@ -15,6 +15,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
+from ..obs import clock as obs_clock, state as obs_state, trace as obs_trace
+
 __all__ = ["ALGOS", "SimRequest", "SimFuture", "RequestQueue",
            "QueueClosed"]
 
@@ -62,7 +64,22 @@ class SimRequest:
     deadline: Optional[float] = None  # absolute time.monotonic() bound; the
                                       # remote daemon drops expired requests
                                       # before dispatch (None = no deadline)
+    trace: Any = None                 # repro.obs trace context dict (or
+                                      # None = untraced); observe-only —
+                                      # never part of the batch group key
+    # Clock discipline (docs/observability.md#clocks): ``submitted_at``
+    # is a ``time.monotonic()`` reading, so queue wait and age are exact
+    # monotonic differences WITHIN this process — it is meaningless in
+    # any other process.  Cross-process consumers use ``submitted_wall``,
+    # the conversion through this process's one wall anchor.
     submitted_at: float = field(default_factory=time.monotonic)
+
+    @property
+    def submitted_wall(self) -> float:
+        """Wall-clock submit time via the per-process anchor
+        (``repro.obs.clock.to_wall``) — safe to compare across
+        processes, unlike ``submitted_at``."""
+        return obs_clock.to_wall(self.submitted_at)
 
     def __post_init__(self):
         if self.algo not in ALGOS:
@@ -189,14 +206,38 @@ class RequestQueue:
     race ``tests/test_served_daemon.py`` pins.
     """
 
-    def __init__(self):
+    def __init__(self, registry=None, prefix: str = "queue"):
+        """``registry`` (a ``repro.obs.MetricsRegistry``) opts the queue
+        into instrumentation under ``<prefix>.queue.depth`` /
+        ``<prefix>.queue.oldest_age_s`` (callback gauges — zero cost
+        per enqueue) and ``<prefix>.queue.wait_s`` (queue residency,
+        observed at claim time — the admission-queue signal pool
+        autoscaling needs).  Traced requests additionally get a
+        retroactive ``<prefix>.queued`` span per claim."""
         self._items: list = []
         self._cv = threading.Condition()
         self._closed = False
+        self._wait_hist = None
+        self._span_name = f"{prefix}.queued"
+        if registry is not None:
+            self._wait_hist = registry.histogram(f"{prefix}.queue.wait_s")
+            registry.gauge(f"{prefix}.queue.depth").set_fn(self.__len__)
+            registry.gauge(f"{prefix}.queue.oldest_age_s").set_fn(
+                self.oldest_age)
 
     def __len__(self) -> int:
         with self._cv:
             return len(self._items)
+
+    def oldest_age(self) -> float:
+        """Seconds the head-of-line request has been queued (0.0 when
+        empty).  A restored (requeued) item keeps its original submit
+        time, so age reflects total time since submission."""
+        with self._cv:
+            if not self._items:
+                return 0.0
+            head = self._items[0][0]
+        return max(0.0, time.monotonic() - head.submitted_at)
 
     @property
     def closed(self) -> bool:
@@ -230,7 +271,18 @@ class RequestQueue:
         with self._cv:
             taken, self._items = (self._items[:max_n],
                                   self._items[max_n:])
-            return taken
+        if taken and self._wait_hist is not None and obs_state.enabled():
+            # claim-time residency; a requeued item is observed once per
+            # claim, each time with its cumulative age since submission
+            now = time.monotonic()
+            for req, _ in taken:
+                self._wait_hist.observe(max(0.0, now - req.submitted_at))
+                if req.trace:
+                    obs_trace.TRACER.record(self._span_name, req.trace,
+                                            t0=req.submitted_at, t1=now,
+                                            attrs={"stream": req.stream,
+                                                   "seed": req.seed})
+        return taken
 
     def restore(self, items: list) -> None:
         """Put claimed ``(request, future)`` pairs back at the front of

@@ -28,6 +28,7 @@ import threading
 import time
 from typing import Optional
 
+from .. import obs
 from .queue import SimFuture, SimRequest
 from .transport import (ConnectionLost, DeadlineExceeded, Overloaded,
                         RpcClient, TransportError)
@@ -91,23 +92,39 @@ class RemoteServer:
                budget: Optional[float] = None, stream: str = "default",
                cfg=None, exact: bool = False, scenario=None,
                priority: int = 0,
-               deadline_s: Optional[float] = None) -> SimFuture:
+               deadline_s: Optional[float] = None,
+               trace: Optional[dict] = None) -> SimFuture:
         """Enqueue one remote request; returns a ``SimFuture`` exactly
         like the local server's.  Client-side mistakes (bad algo/T,
         non-name scenario) raise synchronously; admission rejections and
         transport failures surface typed through the future after the
-        retry budget."""
+        retry budget.
+
+        ``trace`` is an optional ``repro.obs`` context — minted here
+        when absent (and observability is on) and carried on every
+        attempt's RPC envelope, so daemon/worker spans share this
+        request's ``trace_id``."""
         spec = spec_to_wire(algo, seed, T=T, budget=budget, stream=stream,
                             cfg=cfg, exact=exact, scenario=scenario,
                             priority=priority)
+        if trace is None:
+            trace = obs.mint()
         req = SimRequest(algo=algo, seed=int(seed), T=int(T),
                          budget=spec["budget"], stream=stream, cfg=cfg,
                          exact=bool(exact), scenario=scenario,
-                         priority=int(priority))
+                         priority=int(priority), trace=trace)
         fut = SimFuture(req)
+        obs.TRACER.event("client.submitted", trace,
+                         attrs={"algo": req.algo, "seed": req.seed,
+                                "stream": req.stream})
+        if trace is not None:
+            t0 = time.monotonic()
+            fut.add_done_callback(lambda done: obs.TRACER.record(
+                "client.await", trace, t0=t0,
+                attrs={"attempts": getattr(done, "attempts", None)}))
         deadline = (time.monotonic() + deadline_s
                     if deadline_s is not None else None)
-        self._attempt(spec, fut, attempt=0, deadline=deadline)
+        self._attempt(spec, fut, attempt=0, deadline=deadline, trace=trace)
         return fut
 
     def status(self, deadline_s: float = 10.0) -> dict:
@@ -121,7 +138,8 @@ class RemoteServer:
     # -- the retry chain ---------------------------------------------------
 
     def _attempt(self, spec: dict, fut: SimFuture, attempt: int,
-                 deadline: Optional[float]) -> None:
+                 deadline: Optional[float],
+                 trace: Optional[dict] = None) -> None:
         if fut.done():
             return
         remaining = None
@@ -135,13 +153,17 @@ class RemoteServer:
             client = self._client()
         except (TransportError, OSError) as exc:
             self._retry_or_fail(spec, fut, attempt, deadline,
-                                ConnectionLost(f"reconnect failed: {exc}"))
+                                ConnectionLost(f"reconnect failed: {exc}"),
+                                trace=trace)
             return
-        rfut = client.call_async("submit", spec, deadline_s=remaining)
+        rfut = client.call_async("submit", spec, deadline_s=remaining,
+                                 trace=trace)
         rfut.add_done_callback(
-            lambda done: self._on_reply(spec, fut, attempt, deadline, done))
+            lambda done: self._on_reply(spec, fut, attempt, deadline, done,
+                                        trace=trace))
 
-    def _on_reply(self, spec, fut, attempt, deadline, rfut) -> None:
+    def _on_reply(self, spec, fut, attempt, deadline, rfut,
+                  trace=None) -> None:
         exc = rfut.exception(timeout=0)
         if exc is None:
             value = rfut.result(timeout=0)
@@ -157,12 +179,13 @@ class RemoteServer:
                 pass                    # deadline fired while decoding
             return
         if isinstance(exc, (Overloaded, ConnectionLost)):
-            self._retry_or_fail(spec, fut, attempt, deadline, exc)
+            self._retry_or_fail(spec, fut, attempt, deadline, exc,
+                                trace=trace)
             return
         self._settle_exc(fut, exc)      # typed, not retryable
 
     def _retry_or_fail(self, spec, fut, attempt, deadline,
-                       exc: BaseException) -> None:
+                       exc: BaseException, trace=None) -> None:
         if attempt >= self.retries or self._closed:
             self._settle_exc(fut, exc)
             return
@@ -175,10 +198,13 @@ class RemoteServer:
                 self._settle_exc(fut, DeadlineExceeded(
                     f"retry budget cut off by deadline (last: {exc})"))
                 return
+        obs.TRACER.event("client.retried", trace,
+                         attrs={"attempt": attempt + 1,
+                                "cause": type(exc).__name__})
         timer = threading.Timer(
             delay, self._attempt,
             kwargs=dict(spec=spec, fut=fut, attempt=attempt + 1,
-                        deadline=deadline))
+                        deadline=deadline, trace=trace))
         timer.daemon = True
         timer.start()
 

@@ -27,10 +27,13 @@ determinism contract.
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, replace
 from typing import Callable, Optional
 
 import numpy as np
+
+from .. import obs
 
 __all__ = ["SimServer", "ExecutableCache", "Stream"]
 
@@ -137,17 +140,23 @@ class SimServer:
                                  f"{n_data})")
         self.mesh = mesh
         self.cache = ExecutableCache()
-        self._queue = RequestQueue()
+        # Counters live on the registry (one catalogue entry per name —
+        # repro.obs.catalog.SERVER_COUNTERS); each instrument carries
+        # its own lock, so increments are race-free without holding the
+        # server lock.  stats() rebuilds the legacy flat-dict shape
+        # from the same table.
+        self.metrics = obs.MetricsRegistry()
+        self._c = obs.catalog.register_counters(
+            self.metrics, "server", obs.catalog.SERVER_COUNTERS)
+        self._dispatch_hist = self.metrics.histogram("server.dispatch_s")
+        self._queue = RequestQueue(registry=self.metrics, prefix="server")
         self._batcher = DynamicBatcher(self._queue, max_batch=max_batch,
-                                       max_wait_ms=max_wait_ms)
+                                       max_wait_ms=max_wait_ms,
+                                       registry=self.metrics)
         self._poll_s = poll_s
         self._streams: dict = {}
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
-        self._stats = {"submitted": 0, "served": 0, "failed": 0,
-                       "batches": 0, "batched_lanes": 0, "padded_lanes": 0,
-                       "exact_requests": 0, "sharded_batches": 0,
-                       "dispatch_seq": 0}
 
     # -- tenant streams ---------------------------------------------------
 
@@ -183,7 +192,7 @@ class SimServer:
     def submit(self, algo: str, seed: int, *, T: int,
                budget: Optional[float] = None, stream: str = "default",
                cfg=None, exact: bool = False, scenario=None,
-               priority: int = 0):
+               priority: int = 0, trace=None):
         """Enqueue one simulation request; returns its ``SimFuture``.
 
         Thread-safe.  Client-side mistakes (unknown stream/algo/scenario,
@@ -201,6 +210,12 @@ class SimServer:
         program — bit-equal to scenario-free traffic by construction.
         ``priority`` (higher first) orders bucket dispatch — see
         docs/serving.md#priority.
+
+        ``trace`` is an optional ``repro.obs`` trace context (a
+        ``{"trace_id", "span_id"}`` dict): passed by the worker/daemon
+        tier so spans stitch across processes, minted fresh here for
+        direct in-process submitters (a no-op when observability is
+        disabled).  Observe-only — it never affects batching or bits.
         """
         from .queue import SimRequest, SimFuture
         from .batcher import group_key
@@ -213,9 +228,12 @@ class SimServer:
         if scenario is not None:
             from repro.scenarios import resolve
             scenario = resolve(scenario)
+        if trace is None:
+            trace = obs.mint()
         req = SimRequest(algo=algo, seed=int(seed), T=int(T), budget=budget,
                          stream=stream, cfg=cfg, exact=exact,
-                         scenario=scenario, priority=int(priority))
+                         scenario=scenario, priority=int(priority),
+                         trace=trace)
         try:
             group_key(req)          # exercises cfg.static_key/cfg.rates
         except Exception as exc:
@@ -234,8 +252,10 @@ class SimServer:
                 req.scenario = None
         fut = SimFuture(req)
         self._queue.put(req, fut)
-        with self._lock:
-            self._stats["submitted"] += 1
+        self._c["submitted"].inc()
+        obs.TRACER.event("serve.submitted", trace,
+                         attrs={"algo": req.algo, "seed": req.seed,
+                                "stream": req.stream})
         return fut
 
     # -- lifecycle --------------------------------------------------------
@@ -314,9 +334,8 @@ class SimServer:
         from repro.federated import run_simulation_scan, run_batch
         from repro.federated.engine import batch_buckets, batch_dispatch_plan
         from repro.federated.simulation import eval_window
-        with self._lock:
-            seq = self._stats["dispatch_seq"]
-            self._stats["dispatch_seq"] += 1
+        seq = self._c["dispatch_seq"].inc() - 1      # atomic allocation
+        t_dispatch0 = time.monotonic()
         meta = {"mode": "exact" if bucket.exact else "batched",
                 "bucket": bucket.size, "n_requests": bucket.n,
                 "n_padding": bucket.n_padding, "sharded": False,
@@ -376,8 +395,8 @@ class SimServer:
                 results = run(bucket.seeds(), budgets,
                               scens if scheduled else None)[:bucket.n]
         except Exception as exc:                        # noqa: BLE001
-            with self._lock:
-                self._stats["failed"] += bucket.n
+            self._c["failed"].inc(bucket.n)
+            self._trace_dispatch(bucket, meta, t_dispatch0, "error")
             for _, fut in bucket.requests:
                 if not fut.done():
                     fut.set_exception(exc, execution=dict(meta))
@@ -394,25 +413,51 @@ class SimServer:
         if current is None or current.version != stream.version:
             self.cache.evict(lambda k: k[1] == req0.stream
                              and k[2] == stream.version)
-        with self._lock:
-            self._stats["served"] += bucket.n
-            self._stats["batches"] += 1
-            if bucket.exact:
-                self._stats["exact_requests"] += bucket.n
-            else:
-                self._stats["batched_lanes"] += bucket.size
-                self._stats["padded_lanes"] += bucket.n_padding
-                self._stats["sharded_batches"] += int(meta["sharded"])
+        self._c["served"].inc(bucket.n)
+        self._c["batches"].inc()
+        if bucket.exact:
+            self._c["exact_requests"].inc(bucket.n)
+        else:
+            self._c["batched_lanes"].inc(bucket.size)
+            self._c["padded_lanes"].inc(bucket.n_padding)
+            if meta["sharded"]:
+                self._c["sharded_batches"].inc()
+        self._trace_dispatch(bucket, meta, t_dispatch0, "ok")
         for (_, fut), res in zip(bucket.requests, results):
             fut.set_result(res, execution=dict(meta))
+
+    def _trace_dispatch(self, bucket, meta: dict, t0: float,
+                        outcome: str) -> None:
+        """Observe the dispatch duration and, for traced requests, record
+        one ``serve.dispatch`` span each — attrs carry the bucket
+        metadata plus the co-tenant seeds ("batched-with-whom").
+        Observe-only: reads request metadata, never results."""
+        if not obs.enabled():
+            return
+        t1 = time.monotonic()
+        self._dispatch_hist.observe(t1 - t0)
+        traced = [r for r, _ in bucket.requests if r.trace]
+        if not traced:
+            return
+        co_seeds = [r.seed for r, _ in bucket.requests[:32]]
+        attrs = {k: meta[k] for k in ("mode", "bucket", "n_requests",
+                                      "n_padding", "sharded", "seq")}
+        attrs["outcome"] = outcome
+        attrs["co_seeds"] = co_seeds
+        for req in traced:
+            obs.TRACER.record("serve.dispatch", req.trace, t0=t0, t1=t1,
+                              attrs=attrs)
 
     # -- observability ----------------------------------------------------
 
     def stats(self) -> dict:
         """Counters + cache info; ``mean_occupancy`` is real requests per
-        batched lane (1.0 = no padding waste)."""
-        with self._lock:
-            s = dict(self._stats)
+        batched lane (1.0 = no padding waste).  The flat legacy keys are
+        rebuilt from the registry instruments (the catalogue is the one
+        source of names); ``SimServer.metrics.snapshot()`` is the full
+        typed tree."""
+        s = {short: self._c[short].value
+             for short in obs.catalog.SERVER_COUNTERS}
         lanes = s["batched_lanes"]
         s["mean_occupancy"] = ((lanes - s["padded_lanes"]) / lanes
                                if lanes else None)

@@ -58,8 +58,23 @@ __all__ = [
     "encode", "decode", "pack_frame", "read_frame",
     "error_to_wire", "error_from_wire", "parse_addr", "format_addr",
     "Connection", "RpcFuture", "RpcClient", "RpcServer",
-    "MAX_FRAME", "default_codec",
+    "MAX_FRAME", "default_codec", "valid_trace",
 ]
+
+
+def valid_trace(t) -> Optional[dict]:
+    """Sanitize an incoming envelope ``trace`` field: a well-formed
+    trace context (``{"trace_id": str, "span_id": str}``) passes
+    through reduced to exactly those keys; anything else — junk from an
+    untrusted peer, a missing field — becomes ``None`` (untraced).
+    Observe-only data never gets to raise in a handler."""
+    if not isinstance(t, dict):
+        return None
+    tid, sid = t.get("trace_id"), t.get("span_id")
+    if not (isinstance(tid, str) and 0 < len(tid) <= 64
+            and isinstance(sid, str) and 0 < len(sid) <= 64):
+        return None
+    return {"trace_id": tid, "span_id": sid}
 
 
 # ---------------------------------------------------------------------------
@@ -479,7 +494,12 @@ class RpcClient:
     # -- calls ------------------------------------------------------------
 
     def call_async(self, method: str, params: Optional[dict] = None,
-                   deadline_s: Optional[float] = None) -> RpcFuture:
+                   deadline_s: Optional[float] = None,
+                   trace: Optional[dict] = None) -> RpcFuture:
+        """``trace`` is an optional ``repro.obs`` trace context rider:
+        it travels as a top-level envelope field (NOT inside params, so
+        payload codecs and handlers are unaffected) and surfaces
+        server-side as ``ctx["trace"]``."""
         fut = RpcFuture()
         deadline = (time.monotonic() + deadline_s
                     if deadline_s is not None else None)
@@ -497,6 +517,8 @@ class RpcClient:
         msg = {"id": rid, "method": method, "params": params or {}}
         if deadline_s is not None:
             msg["deadline_ms"] = float(deadline_s) * 1e3
+        if trace is not None:
+            msg["trace"] = trace
         try:
             self.conn.send_msg(msg)
         except (TransportError, OSError) as exc:
@@ -507,10 +529,12 @@ class RpcClient:
 
     def call(self, method: str, params: Optional[dict] = None,
              deadline_s: Optional[float] = None,
-             timeout: Optional[float] = None):
+             timeout: Optional[float] = None,
+             trace: Optional[dict] = None):
         """Blocking call; raises the remote error typed, or
         ``DeadlineExceeded``/``TimeoutError`` locally."""
-        fut = self.call_async(method, params, deadline_s=deadline_s)
+        fut = self.call_async(method, params, deadline_s=deadline_s,
+                              trace=trace)
         if timeout is None and deadline_s is not None:
             timeout = deadline_s + 1.0          # watchdog fires first
         return fut.result(timeout)
@@ -661,7 +685,8 @@ class RpcServer:
         deadline_ms = msg.get("deadline_ms")
         ctx = {"deadline": (time.monotonic() + deadline_ms / 1e3
                             if deadline_ms is not None else None),
-               "peer": peer}
+               "peer": peer,
+               "trace": valid_trace(msg.get("trace"))}
         handler = self.handlers.get(msg["method"])
         if handler is None:
             self._reply_error(conn, rid,

@@ -12,6 +12,11 @@ rows in docs/determinism.md pin.
 Imports of ``repro.federated`` happen lazily inside the ``from_wire``
 helpers: encoding a request never needs jax, so client and daemon
 processes stay accelerator-free.
+
+Trace contexts (``repro.obs``) are *envelope* metadata, not payload:
+they ride the RPC envelope's optional ``"trace"`` field (see
+``transport.call_async``), never these domain dicts — ``valid_trace``
+is re-exported here because it defines the wire shape of that field.
 """
 
 from __future__ import annotations
@@ -21,8 +26,10 @@ from typing import Any, Optional
 
 import numpy as np
 
+from .transport import valid_trace
+
 __all__ = ["config_to_wire", "config_from_wire", "result_to_wire",
-           "result_from_wire", "spec_to_wire"]
+           "result_from_wire", "spec_to_wire", "valid_trace"]
 
 
 def config_to_wire(cfg) -> Optional[dict]:

@@ -16,7 +16,7 @@ arrival are refused with ``DeadlineExceeded`` before they can occupy a
 bucket.
 
 RPC methods: ``ping``, ``register_stream``, ``submit``,
-``list_streams``, ``stats``, ``shutdown``.
+``list_streams``, ``stats``, ``trace``, ``shutdown``.
 """
 
 from __future__ import annotations
@@ -28,6 +28,7 @@ import sys
 import threading
 import time
 
+from .. import obs
 from .transport import DeadlineExceeded, RpcFuture, RpcServer
 from .wire import config_from_wire, result_to_wire
 
@@ -49,7 +50,7 @@ class WorkerHandlers:
     def table(self) -> dict:
         return {"ping": self.ping, "register_stream": self.register_stream,
                 "submit": self.submit, "list_streams": self.list_streams,
-                "stats": self.stats}
+                "stats": self.stats, "trace": self.trace}
 
     # -- methods ----------------------------------------------------------
 
@@ -74,7 +75,10 @@ class WorkerHandlers:
             stream=params.get("stream", "default"), cfg=cfg,
             exact=bool(params.get("exact", False)),
             scenario=params.get("scenario"),
-            priority=int(params.get("priority", 0)))
+            priority=int(params.get("priority", 0)),
+            # continue the daemon's trace in this process (same
+            # trace_id, worker-side spans parented on the wire span)
+            trace=obs.mint(parent=ctx.get("trace")))
         out = RpcFuture()
 
         def bridge(done):
@@ -101,7 +105,16 @@ class WorkerHandlers:
         s["worker_id"] = self.worker_id
         # accepted but not yet settled — the pool router's load signal
         s["depth"] = s["submitted"] - s["served"] - s["failed"]
+        # the typed instrument tree rides the same RPC: the daemon's
+        # metrics_doc merges these per-worker snapshots fleet-wide
+        s["metrics"] = self.server.metrics.snapshot()
         return s
+
+    def trace(self, params, ctx):
+        """This worker's span ring buffer (optionally one trace) — the
+        daemon stitches it into cross-process timelines."""
+        return obs.TRACER.dump(params.get("trace_id"),
+                               params.get("limit"))
 
 
 def main(argv=None) -> int:
@@ -120,6 +133,7 @@ def main(argv=None) -> int:
                     help="pool slot assigned by the spawning daemon")
     args = ap.parse_args(argv)
 
+    obs.set_service(f"worker{args.worker_id}")
     from .server import SimServer
     server = SimServer(max_batch=args.max_batch,
                        max_wait_ms=args.max_wait_ms, poll_s=args.poll_s)

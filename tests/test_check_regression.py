@@ -73,6 +73,14 @@ def _pool_cell(rel=0.6, t1=0.8, cores=2):
     }
 
 
+def _obs_cell(rel=1.02, disabled=0.5):
+    return {
+        "t_disabled_s": disabled, "t_enabled_s": rel * disabled,
+        "rel": rel, "instrumented_bits_equal": True,
+        "all_completed": True,
+    }
+
+
 def _record():
     """A healthy fresh/baseline record: every gate passes vs itself."""
     return {
@@ -81,7 +89,8 @@ def _record():
                   "fedboost": _serve_cell(0.40),   # speedup 2.5  > 2.0
                   "mixed_scenario": _mixed_cell(0.50),   # 2.0 > 1.05
                   "sustained": _sustained_cell(),
-                  "pool": _pool_cell(0.60)},       # speedup 1.67 > 1.2
+                  "pool": _pool_cell(0.60),        # speedup 1.67 > 1.2
+                  "obs_overhead": _obs_cell()},    # 1.02 <= 1.05
         "sharded_sweep": {"eflfg": _sharded_cell(),
                           "fedboost": _sharded_cell(),
                           "mesh2d": _sharded_cell()},
@@ -300,6 +309,68 @@ def test_serve_relative_drift_still_gated():
     failures, _ = check_serve(base, fresh, THRESHOLD)
     assert _kinds(failures) == ["timing"] and "+30%" in failures[0][1]
     assert retryable(failures)
+
+
+def test_obs_overhead_bits_equal_is_hard():
+    """The observe-only contract: instrumented results drifting by one
+    bit is a determinism failure no retry may clear."""
+    fresh = _record()
+    fresh["serve"]["obs_overhead"]["instrumented_bits_equal"] = False
+    failures, _ = check_serve(_record(), fresh, THRESHOLD)
+    assert any(kind == "hard" and "instrumented_bits_equal" in msg
+               for kind, msg in failures)
+    assert not retryable(failures)
+
+
+def test_obs_overhead_cell_missing_fails_hard():
+    """Same stale-baseline policy as sustained/pool: the cell missing
+    from the fresh run or the baseline serve section fails HARD."""
+    fresh = _record()
+    del fresh["serve"]["obs_overhead"]
+    failures, _ = check_serve(_record(), fresh, THRESHOLD)
+    assert any(kind == "hard" and "obs_overhead" in msg
+               and "missing from fresh" in msg for kind, msg in failures)
+    base = _record()
+    del base["serve"]["obs_overhead"]            # stale baseline
+    failures, _ = check_serve(base, _record(), THRESHOLD)
+    assert any(kind == "hard" and "obs_overhead" in msg
+               and "missing from baseline" in msg
+               for kind, msg in failures)
+
+
+def test_obs_overhead_absolute_ceiling():
+    """rel above the 1.05 absolute ceiling is a timing failure judged on
+    the fresh run alone — even without a baseline serve section; below
+    the timing floor it is report-only."""
+    from benchmarks.check_regression import SERVE_REL_CEILING
+    assert SERVE_REL_CEILING["obs_overhead"] == pytest.approx(1.05)
+    for with_baseline in (True, False):
+        base = _record()
+        if not with_baseline:
+            del base["serve"]
+        fresh = _record()
+        fresh["serve"]["obs_overhead"] = _obs_cell(rel=1.08)
+        failures, _ = check_serve(base, fresh, THRESHOLD)
+        ceiling_fails = [msg for kind, msg in failures
+                         if kind == "timing" and "ceiling" in msg]
+        assert any("obs_overhead" in msg for msg in ceiling_fails), \
+            with_baseline
+        assert retryable(failures)
+    # sub-floor bursts are dispatch noise: reported, never gated
+    fresh = _record()
+    fresh["serve"]["obs_overhead"] = _obs_cell(rel=1.50, disabled=0.01)
+    failures, _ = check_serve(_record(), fresh, THRESHOLD)
+    assert failures == []
+
+
+def test_obs_overhead_skips_baseline_relative_gate():
+    """The ceiling is an absolute contract: creep under 1.05 must pass
+    even when it would trip a baseline-relative +30% comparison."""
+    base, fresh = _record(), _record()
+    base["serve"]["obs_overhead"] = _obs_cell(rel=0.70)
+    fresh["serve"]["obs_overhead"] = _obs_cell(rel=1.04)   # x1.49 "drift"
+    failures, _ = check_serve(base, fresh, THRESHOLD)
+    assert failures == []
 
 
 def test_retryable_requires_all_timing():

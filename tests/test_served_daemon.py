@@ -53,6 +53,7 @@ from types import SimpleNamespace
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.launch.served import claim_pidfile
 from repro.serve import router
 from repro.serve import transport as tp
@@ -320,6 +321,7 @@ class StubWorker:
         self.mode = mode
         self.submits: list = []
         self.streams: dict = {}
+        self.stats_reply = None       # scripted "stats" reply (None = error)
         self._wedged = threading.Event()
         self.rpc = tp.RpcServer({
             "ping": self._ping,
@@ -327,8 +329,14 @@ class StubWorker:
             "list_streams": lambda p, c: {
                 n: {"version": v} for n, v in self.streams.items()},
             "submit": self._submit,
+            "stats": self._stats,
             "shutdown": lambda p, c: {"stopping": True},
         }).start()
+
+    def _stats(self, params, ctx):
+        if self.stats_reply is None:
+            raise RuntimeError("stub has no stats scripted")
+        return self.stats_reply
 
     def _ping(self, params, ctx):
         if self._wedged.is_set():
@@ -432,6 +440,93 @@ def test_hung_peer_fails_typed_when_retries_exhausted():
         daemon.drain_and_stop(timeout=10.0)
         for stub in spawned:
             stub.stop()
+
+
+def test_metrics_doc_skips_unreporting_and_corrupt_workers():
+    """``metrics_doc`` is wedge-proof: a worker whose stats RPC errors,
+    returns a torn snapshot, or returns histogram bounds conflicting
+    with the daemon's own instruments is skipped from the merge — never
+    an exception, never a double-count; a well-formed snapshot merges
+    in and ``workers_reporting`` says who answered."""
+    spawned: list = []
+    daemon = ServeDaemon(max_pending=8, retry_limit=1, heartbeat_s=0.2,
+                         heartbeat_misses=5,
+                         worker_factory=_stub_factory(["good"], spawned))
+    daemon.start()
+    front = tp.RpcClient(daemon.addr, connect_timeout=5.0)
+    try:
+        front.call("register_stream", _tiny_stream(), deadline_s=10.0)
+        front.call("submit", _SPEC, deadline_s=30.0)
+        stub = spawned[0]
+        # stats RPC raises -> worker skipped, daemon counters intact
+        doc = daemon.metrics_doc(per_worker_deadline_s=2.0)
+        assert doc["workers_total"] == 1
+        assert doc["workers_reporting"] == 0
+        assert doc["merged"]["counters"]["daemon.completed"] == 1
+        # torn snapshot (histogram missing its counts) -> skipped
+        stub.stats_reply = {"metrics": {
+            "counters": {}, "gauges": {},
+            "histograms": {"server.dispatch_s": {"bounds": [1.0]}}}}
+        assert daemon.metrics_doc(2.0)["workers_reporting"] == 0
+        # bounds conflicting with the daemon's own instrument -> the
+        # whole snapshot is skipped, nothing from it leaks into merged
+        stub.stats_reply = {"metrics": {
+            "counters": {"server.submitted": 7}, "gauges": {},
+            "histograms": {"daemon.queue.wait_s": {
+                "bounds": [1.0, 2.0], "counts": [0, 0, 0],
+                "count": 0, "sum": 0.0, "min": None, "max": None}}}}
+        doc = daemon.metrics_doc(per_worker_deadline_s=2.0)
+        assert doc["workers_reporting"] == 0
+        assert "server.submitted" not in doc["merged"]["counters"]
+        # well-formed -> merged, each side counted exactly once
+        stub.stats_reply = {"metrics": {
+            "counters": {"server.submitted": 7}, "gauges": {},
+            "histograms": {}}}
+        doc = daemon.metrics_doc(per_worker_deadline_s=2.0)
+        assert doc["workers_reporting"] == 1
+        assert doc["merged"]["counters"]["server.submitted"] == 7
+        assert doc["merged"]["counters"]["daemon.completed"] == 1
+    finally:
+        front.close()
+        daemon.drain_and_stop(timeout=10.0)
+        for stub in spawned:
+            stub.stop()
+
+
+def test_trace_doc_shows_exactly_one_retry_for_requeued_request():
+    """A request requeued off a hung peer carries its trace through the
+    envelope: the stitched timeline shows exactly one ``daemon.retried``
+    event, and stitching tolerates workers without a ``trace`` RPC."""
+    prev = obs.set_enabled(True)
+    obs.TRACER.clear()
+    spawned: list = []
+    daemon = ServeDaemon(max_pending=8, retry_limit=1, heartbeat_s=0.05,
+                         heartbeat_misses=2,
+                         worker_factory=_stub_factory(["hung", "good"],
+                                                      spawned))
+    daemon.start()
+    front = tp.RpcClient(daemon.addr, connect_timeout=5.0)
+    try:
+        front.call("register_stream", _tiny_stream(), deadline_s=10.0)
+        tctx = obs.mint()
+        reply = front.call("submit", _SPEC, deadline_s=30.0, trace=tctx)
+        assert reply["result"] == {"stub": True, "seed": 3}
+        doc = daemon.trace_doc(tctx["trace_id"])
+        names = [s["name"] for s in doc["spans"]]
+        assert names.count("daemon.retried") == 1
+        assert "daemon.admitted" in names
+        assert "daemon.completed" in names
+        assert names.count("daemon.queued") == 2    # once per claim
+        # wall-anchored sort: the admit event precedes the completion
+        assert names.index("daemon.admitted") < names.index(
+            "daemon.completed")
+    finally:
+        front.close()
+        daemon.drain_and_stop(timeout=10.0)
+        for stub in spawned:
+            stub.stop()
+        obs.set_enabled(prev)
+        obs.TRACER.clear()
 
 
 def _affine_split(n_names: int = 16):

@@ -287,6 +287,11 @@ def test_worker_sigkill_mid_dispatch_retries_or_fails_typed(daemon):
         pid = daemon.status()["worker"]["pid"]
         assert pid, "no worker to kill"
         os.kill(pid, signal.SIGKILL)
+        # the fleet metrics merge must not wedge on the dead worker: the
+        # SIGKILLed peer simply drops out (workers_reporting says so)
+        doc = daemon.metrics_doc(per_worker_deadline_s=1.0)
+        assert doc["workers_total"] == 1
+        assert "daemon.admitted" in doc["merged"]["counters"]
         # every future settles: retried onto the respawned worker (the
         # requeue-or-fail path) or failed typed — never hung
         outcomes = []
@@ -303,6 +308,37 @@ def test_worker_sigkill_mid_dispatch_retries_or_fails_typed(daemon):
         st = daemon.status()
         assert st["worker"]["restarts"] >= 1
         assert st["counters"]["retried"] >= 1
+        # the retried requests' span timelines show EXACTLY one retry
+        # each (one kill, one requeue) and stitch across processes: the
+        # client/daemon spans carry this pid, the respawned worker's
+        # dispatch spans its own
+        from repro import obs
+        retried_traces = []
+        for f in futs:
+            tctx = f.request.trace
+            if tctx is None:
+                continue                 # obs disabled in this env
+            doc = daemon.trace_doc(tctx["trace_id"])
+            retries = [s for s in doc["spans"]
+                       if s["name"] == "daemon.retried"]
+            if retries:
+                retried_traces.append((doc, retries))
+        if obs.enabled():
+            assert retried_traces, "no retried trace recorded"
+            for doc, retries in retried_traces:
+                assert len(retries) == 1, \
+                    [s["name"] for s in doc["spans"]]
+                assert len({s["pid"] for s in doc["spans"]}) >= 2, \
+                    "timeline did not stitch across processes"
+        # the merge recovers cleanly after respawn, no double-count:
+        # merged daemon counters equal the daemon's own section (worker
+        # snapshots never carry daemon.* names), twice in a row
+        for _ in range(2):
+            doc = daemon.metrics_doc(per_worker_deadline_s=5.0)
+            assert doc["merged"]["counters"]["daemon.admitted"] == \
+                doc["daemon"]["counters"]["daemon.admitted"]
+        assert doc["workers_reporting"] == 1
+        assert doc["merged"]["counters"]["server.submitted"] >= 1
         # and the respawned worker serves new traffic
         res = client.run("fedboost", 11, T=T, timeout=240.0)
         assert res.mse_curve.shape == (T,)
